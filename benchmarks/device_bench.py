@@ -1,0 +1,87 @@
+"""Device-pipeline benchmarks: in-graph DBSCAN + kernel micro-benches.
+
+These measure the jitted XLA path on whatever backend is present (CPU
+here, TPU on deployment).  The Pallas kernels run in interpret mode on
+CPU, so their numbers here are correctness-path only -- the TPU roofline
+story lives in EXPERIMENTS.md §Roofline.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.data.seed_spreader import seed_spreader
+from repro.core.device_dbscan import device_dbscan, GritCaps
+from repro.kernels import ops, ref
+
+
+def _timeit(fn, *args, repeat: int = 3):
+    fn(*args)                       # compile
+    best = float("inf")
+    for _ in range(repeat):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(out)
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def bench_device_dbscan(n: int = 2048, d: int = 3) -> List[Dict]:
+    pts = jnp.asarray(seed_spreader(n, d, variant="simden", restarts=6,
+                                    seed=0), jnp.float32)
+    caps = GritCaps(grid_cap=512, frontier_cap=256, k_cap=48, c_cap=1024,
+                    m_cap=1024, pair_cap=4096, grid_block=64,
+                    pair_block=512)
+    f = jax.jit(lambda p: device_dbscan(p, 4000.0, 8, caps))
+    t = _timeit(f, pts)
+    return [dict(bench="device_dbscan", n=n, d=d, seconds=round(t, 4),
+                 us_per_point=round(t / n * 1e6, 2))]
+
+
+def bench_pairwise_kernels(m: int = 512, n: int = 512, d: int = 3
+                           ) -> List[Dict]:
+    rng = np.random.default_rng(0)
+    a = jnp.asarray(rng.normal(size=(m, d)), jnp.float32)
+    b = jnp.asarray(rng.normal(size=(n, d)), jnp.float32)
+    rows = []
+    for name, fn in [
+        ("eps_count_ref", lambda: ref.eps_count(a, b, 1.0)),
+        ("eps_count_kernel", lambda: ops.eps_count(a, b, 1.0)),
+        ("row_min_ref", lambda: ref.row_min(a, b)),
+        ("row_min_kernel", lambda: ops.row_min(a, b)),
+    ]:
+        t = _timeit(jax.jit(fn))
+        rows.append(dict(bench="pairwise_kernel", name=name, m=m, n=n,
+                         d=d, seconds=round(t, 5)))
+    return rows
+
+
+def bench_lm_step(arch: str = "qwen2-1.5b") -> List[Dict]:
+    from repro.configs import get_config
+    from repro.models import init_params, loss_fn
+    from repro.train import (TrainCfg, make_train_step, init_state,
+                             get_optimizer)
+
+    cfg = get_config(arch, smoke=True)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    tcfg = TrainCfg()
+    opt = get_optimizer("adamw")
+    step = jax.jit(make_train_step(cfg, tcfg, opt, lambda s: 1e-3))
+    state = init_state(cfg, tcfg, opt, params)
+    B, S = 4, 64
+    batch = {"tokens": jnp.zeros((B, S + 1), jnp.int32)}
+    state, _ = step(state, batch)          # compile
+    t0 = time.perf_counter()
+    reps = 3
+    for _ in range(reps):
+        state, m = step(state, batch)
+    jax.block_until_ready(m["loss"])
+    dt = (time.perf_counter() - t0) / reps
+    return [dict(bench="lm_smoke_step", arch=arch, batch=B, seq=S,
+                 seconds=round(dt, 4),
+                 tokens_per_s=round(B * S / dt, 1))]

@@ -1,0 +1,151 @@
+"""Paper-experiment analogues (Figs 5-11 + Remark 3), CPU-scaled.
+
+Same experimental grid as the paper (synthetic seed-spreader data,
+simden/varden, d in {2,3,5,7}; runtime vs eps / MinPts / n; grid tree vs
+stencil indexing; FastMerging vs baseline merging), scaled down from the
+paper's 2M-10M points to CPU-friendly sizes.  The *claims* validated are
+scale-free: relative ordering of engines and near-linear growth in n.
+
+Each function returns a list of row dicts; run.py prints them as CSV.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+import numpy as np
+
+from repro.data.seed_spreader import seed_spreader
+from repro.core.dbscan import grit_dbscan
+from repro.core.grids import build_grids
+from repro.core.grid_tree import GridTree, stencil_neighbors
+
+
+def _timed(fn, *args, repeat: int = 1, **kw):
+    best = float("inf")
+    out = None
+    for _ in range(repeat):
+        t0 = time.perf_counter()
+        out = fn(*args, **kw)
+        best = min(best, time.perf_counter() - t0)
+    return best, out
+
+
+# -- Figs 5 & 8: runtime vs eps ---------------------------------------------
+
+def fig_runtime_vs_eps(n: int = 8000, dims=(2, 3, 5, 7),
+                       eps_grid=(2000.0, 3000.0, 4000.0, 5000.0),
+                       variant: str = "varden", min_pts: int = 10
+                       ) -> List[Dict]:
+    rows = []
+    for d in dims:
+        pts = seed_spreader(n, d, variant=variant, restarts=8, seed=d)
+        for eps in eps_grid:
+            for engine, kw in [
+                ("grit", dict(variant="grit", merge_engine="fast")),
+                ("grit-ldf", dict(variant="ldf", merge_engine="fast")),
+                ("stencil", dict(variant="grit", neighbor_engine="stencil",
+                                 merge_engine="fast")),
+                ("center-merge", dict(variant="grit", merge_engine="center")),
+            ]:
+                t, r = _timed(grit_dbscan, pts, eps, min_pts, **kw)
+                rows.append(dict(
+                    bench="fig5_runtime_vs_eps", d=d, variant=variant,
+                    eps=eps, engine=engine, seconds=round(t, 4),
+                    clusters=r.stats["num_clusters"],
+                    merge_checks=r.stats.get("merge_checks", 0),
+                    dist_evals=r.stats.get("merge_dist_evals", 0)))
+    return rows
+
+
+# -- Figs 6 & 9: runtime vs MinPts -------------------------------------------
+
+def fig_runtime_vs_minpts(n: int = 8000, d: int = 3,
+                          minpts_grid=(10, 25, 50, 100),
+                          eps: float = 3500.0) -> List[Dict]:
+    pts = seed_spreader(n, d, variant="varden", restarts=8, seed=42)
+    rows = []
+    for mp in minpts_grid:
+        for engine, kw in [
+            ("grit", dict(variant="grit")),
+            ("grit-ldf", dict(variant="ldf")),
+            ("stencil", dict(variant="grit", neighbor_engine="stencil")),
+        ]:
+            t, r = _timed(grit_dbscan, pts, eps, mp, **kw)
+            rows.append(dict(bench="fig6_runtime_vs_minpts", d=d,
+                             min_pts=mp, engine=engine,
+                             seconds=round(t, 4),
+                             clusters=r.stats["num_clusters"]))
+    return rows
+
+
+# -- Figs 7 & 10: scalability with n -----------------------------------------
+
+def fig_runtime_vs_n(d: int = 3, n_grid=(2000, 4000, 8000, 16000),
+                     eps: float = 3500.0, min_pts: int = 10) -> List[Dict]:
+    rows = []
+    for n in n_grid:
+        pts = seed_spreader(n, d, variant="simden", restarts=8, seed=7)
+        for engine, kw in [
+            ("grit", dict(variant="grit")),
+            ("grit-ldf", dict(variant="ldf")),
+            ("center-merge", dict(variant="grit", merge_engine="center")),
+        ]:
+            t, r = _timed(grit_dbscan, pts, eps, min_pts, **kw)
+            rows.append(dict(bench="fig7_runtime_vs_n", d=d, n=n,
+                             engine=engine, seconds=round(t, 4),
+                             sec_per_kpoint=round(t / (n / 1000), 5)))
+    return rows
+
+
+# -- Fig 11: grid tree vs stencil neighbor queries ----------------------------
+
+def fig_grid_tree_vs_stencil(n: int = 20000, dims=(2, 3, 5, 7),
+                             eps_grid=(1500.0, 3000.0, 6000.0)) -> List[Dict]:
+    rows = []
+    for d in dims:
+        pts = seed_spreader(n, d, variant="varden", restarts=10, seed=d + 1)
+        for eps in eps_grid:
+            gi = build_grids(pts, eps)
+            t_build, tree = _timed(GridTree.build, gi.ids)
+            t_tree, _ = _timed(tree.query, gi.ids, include_self=False)
+            t_sten, _ = _timed(stencil_neighbors, gi.ids, gi.ids,
+                               include_self=False)
+            rows.append(dict(bench="fig11_tree_vs_stencil", d=d, eps=eps,
+                             num_grids=gi.num_grids,
+                             tree_build_s=round(t_build, 4),
+                             tree_query_s=round(t_tree, 4),
+                             stencil_query_s=round(t_sten, 4),
+                             speedup=round(t_sten / max(t_tree, 1e-9), 2)))
+    return rows
+
+
+# -- Remark 3: kappa stays tiny ----------------------------------------------
+
+def bench_kappa(n: int = 8000, dims=(2, 3, 5, 7)) -> List[Dict]:
+    rows = []
+    for d in dims:
+        pts = seed_spreader(n, d, variant="varden", restarts=8, seed=d + 9)
+        r = grit_dbscan(pts, 3500.0, 10)
+        rows.append(dict(bench="kappa", d=d,
+                         kappa_max=r.stats.get("merge_max_iters", 0),
+                         merge_calls=r.stats.get("merge_calls", 0),
+                         mean_iters=round(
+                             r.stats.get("merge_iters", 0)
+                             / max(r.stats.get("merge_calls", 1), 1), 3)))
+    return rows
+
+
+# -- merging engines: distance-eval pruning (paper §4.3 story) ----------------
+
+def bench_merge_pruning(n: int = 8000, d: int = 3) -> List[Dict]:
+    pts = seed_spreader(n, d, variant="varden", restarts=8, seed=3)
+    rows = []
+    for engine in ("fast", "center", "brute"):
+        t, r = _timed(grit_dbscan, pts, 3500.0, 10, merge_engine=engine)
+        rows.append(dict(bench="merge_pruning", engine=engine,
+                         seconds=round(t, 4),
+                         dist_evals=r.stats.get("merge_dist_evals", 0),
+                         merge_checks=r.stats.get("merge_checks", 0)))
+    return rows

@@ -1,0 +1,88 @@
+"""Turn dry-run JSON into the EXPERIMENTS.md §Roofline table.
+
+Adds the MODEL_FLOPS column: 6*N*D for training (N = params, MoE: active
+params; D = tokens), 2*N*D for prefill, 2*N*B for one decode step --
+divided by chip count -- and the usefulness ratio MODEL/HLO that catches
+remat/rectangular-attention waste.
+
+    PYTHONPATH=src python -m benchmarks.roofline_report results/dryrun_baseline.json
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def model_flops_per_chip(arch: str, shape: str, kind: str,
+                         chips: int) -> float:
+    from repro.configs import get_config, get_shape
+    from repro.models import count_params, active_params
+
+    cfg = get_config(arch)
+    sc = get_shape(shape)
+    n_act = active_params(cfg)
+    if kind == "train":
+        toks = sc.seq_len * sc.global_batch
+        return 6.0 * n_act * toks / chips
+    if kind == "prefill":
+        toks = sc.seq_len * sc.global_batch
+        return 2.0 * n_act * toks / chips
+    # decode: one token per sequence
+    return 2.0 * n_act * sc.global_batch / chips
+
+
+def fmt(x: float) -> str:
+    return f"{x:.3e}"
+
+
+def build_table(records, mesh_filter: str = "16x16"):
+    lines = []
+    hdr = ("| arch | shape | t_compute | t_memory | t_coll | bound | "
+           "MODEL_FLOPs/chip | HLO/MODEL | note |")
+    lines.append(hdr)
+    lines.append("|" + "---|" * 9)
+    for r in records:
+        if r.get("mesh") != mesh_filter:
+            continue
+        if r.get("status") == "skipped":
+            lines.append(f"| {r['arch']} | {r['shape']} | -- | -- | -- | "
+                         f"skip | -- | -- | {r['reason'][:40]} |")
+            continue
+        if r.get("status") != "ok":
+            lines.append(f"| {r['arch']} | {r['shape']} | -- | -- | -- | "
+                         f"FAILED | -- | -- | {r.get('error', '')[:40]} |")
+            continue
+        rt = r["roofline"]
+        try:
+            mf = model_flops_per_chip(r["arch"], r["shape"],
+                                      r.get("kind", "train"), r["chips"])
+            ratio = r["flops_per_chip"] / mf if mf else float("nan")
+            mf_s, ratio_s = fmt(mf), f"{ratio:.2f}"
+        except Exception:
+            mf_s, ratio_s = "--", "--"
+        note = ""
+        if rt["dominant"] == "memory":
+            note = "attn/logit buffer traffic"
+        elif rt["dominant"] == "collective":
+            note = "gather/reduce traffic"
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {fmt(rt['t_compute'])} | "
+            f"{fmt(rt['t_memory'])} | {fmt(rt['t_collective'])} | "
+            f"{rt['dominant']} | {mf_s} | {ratio_s} | {note} |")
+    return "\n".join(lines)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("json_path")
+    ap.add_argument("--mesh", default="16x16")
+    args = ap.parse_args()
+    with open(args.json_path) as f:
+        records = json.load(f)
+    print(build_table(records, args.mesh))
+
+
+if __name__ == "__main__":
+    main()

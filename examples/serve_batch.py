@@ -1,0 +1,24 @@
+"""Batched serving example: prefill + decode with slot-based batching.
+
+    PYTHONPATH=src python examples/serve_batch.py [--arch mixtral-8x7b]
+
+Thin wrapper over the production serving driver (launch/serve.py) run at
+smoke scale: requests with ragged prompt lengths are left-padded into a
+fixed slot batch, prefetched once, then decoded step-by-step.  Uses the
+SWA ring-buffer KV cache when the arch defines a window (mixtral), the
+RWKV/Mamba O(1) state caches for the recurrent archs.
+"""
+
+import sys
+
+from repro.launch import serve
+
+
+if __name__ == "__main__":
+    argv = sys.argv[1:]
+    if not any(a.startswith("--arch") for a in argv):
+        argv = ["--arch", "mixtral-8x7b"] + argv
+    if "--smoke" not in argv:
+        argv.append("--smoke")
+    sys.argv = [sys.argv[0]] + argv
+    serve.main()

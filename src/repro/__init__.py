@@ -1,0 +1,3 @@
+"""repro: GriT-DBSCAN as a production-grade JAX/TPU framework."""
+
+__version__ = "0.1.0"

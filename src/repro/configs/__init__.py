@@ -1,0 +1,4 @@
+"""Arch configs (one module per assigned architecture) + shape sets."""
+
+from .registry import get_config, list_archs, canonical, long_500k_supported
+from .shapes import SHAPES, get_shape, ShapeCfg

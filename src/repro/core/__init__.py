@@ -1,0 +1,1 @@
+"""core: the paper (grids, grid tree, FastMerging, GriT-DBSCAN, distribution)."""

@@ -1,0 +1,1 @@
+"""data: synthetic generators (paper §5.1) + LM token pipeline."""

@@ -1,0 +1,136 @@
+"""Flash attention Pallas kernel (TPU target).
+
+The LM zoo's compute hot spot.  Online-softmax blocked attention with
+support for the attention variants the assigned architectures need:
+
+* causal masking (decoder LMs),
+* sliding-window masking (mixtral SWA, gemma2 local layers),
+* tanh logit soft-capping (gemma2),
+
+Grid is ``(batch*heads, q_blocks, k_blocks)`` with the k axis innermost;
+running max / denominator / output accumulator live in VMEM scratch and
+are carried across k steps (classic Pallas accumulation pattern).  Fully
+masked (block-level) causal/window tiles are skipped with ``pl.when`` so
+the sliding-window FLOPs actually drop, mirroring how the paper's grid
+pruning skips whole regions of distance work.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+BLOCK_Q = 128
+BLOCK_K = 128
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                  scale: float, causal: bool, window: Optional[int],
+                  softcap: Optional[float], q_offset: int, sk: int,
+                  block_q: int, block_k: int):
+    qi = pl.program_id(1)
+    kj = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(kj == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    # block-level skip: in the (causal, windowed) band?
+    q_lo = qi * block_q + q_offset           # first aligned key pos of block
+    q_hi = q_lo + block_q - 1
+    k_lo = kj * block_k
+    k_hi = k_lo + block_k - 1
+    live = True
+    if causal:
+        live = jnp.asarray(k_lo <= q_hi)
+    if window is not None:
+        live = jnp.logical_and(live, k_hi > q_lo - window)
+
+    @pl.when(live)
+    def _compute():
+        q = q_ref[0].astype(jnp.float32)
+        k = k_ref[0].astype(jnp.float32)
+        logits = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale
+        if softcap is not None:
+            logits = jnp.tanh(logits / softcap) * softcap
+        qpos = q_lo + jax.lax.broadcasted_iota(jnp.int32, logits.shape, 0)
+        kpos = k_lo + jax.lax.broadcasted_iota(jnp.int32, logits.shape, 1)
+        mask = kpos < sk
+        if causal:
+            mask &= kpos <= qpos
+        if window is not None:
+            mask &= (qpos - kpos) < window
+        logits = jnp.where(mask, logits, NEG_INF)
+
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, jnp.max(logits, axis=1, keepdims=True))
+        p = jnp.exp(logits - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_scr[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
+        acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot_general(
+            p, v_ref[0].astype(jnp.float32), (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_scr[...] = m_new
+
+    @pl.when(kj == nk - 1)
+    def _finalize():
+        l = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0] = (acc_scr[...] / l).astype(o_ref.dtype)
+
+
+def flash_attention_pallas(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                           causal: bool = True,
+                           window: Optional[int] = None,
+                           softcap: Optional[float] = None,
+                           scale: Optional[float] = None,
+                           sk_actual: Optional[int] = None,
+                           q_offset: Optional[int] = None,
+                           block_q: int = BLOCK_Q, block_k: int = BLOCK_K,
+                           interpret: bool = False) -> jnp.ndarray:
+    """q: [BH, Sq, D], k/v: [BH, Sk, D]; Sq % block_q == Sk % block_k == 0.
+
+    ``sk_actual`` masks key padding when the true length is below Sk;
+    ``q_offset`` is the key position aligned to query row 0 (defaults to
+    right-alignment against the actual key length).
+    """
+    BH, Sq, D = q.shape
+    Sk = k.shape[1]
+    sk = sk_actual if sk_actual is not None else Sk
+    if q_offset is None:
+        q_offset = sk - Sq
+    if scale is None:
+        scale = D ** -0.5
+    grid = (BH, Sq // block_q, Sk // block_k)
+    kern = functools.partial(
+        _flash_kernel, scale=scale, causal=causal, window=window,
+        softcap=softcap, q_offset=q_offset, sk=sk,
+        block_q=block_q, block_k=block_k)
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q, D), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, block_k, D), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, block_k, D), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, D), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, Sq, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,133 @@
+"""jit'd public wrappers around the Pallas kernels.
+
+Padding / masking policy
+------------------------
+The kernels require MXU-aligned shapes (rows % 128 == 0, feature dim ==
+128 lanes).  The wrappers here pad:
+
+* A-rows: zero-padded; callers receive `[M]` results sliced back.
+* B-rows: padded with ``FAR`` coordinates so padded points can never
+  satisfy a distance predicate (same convention as the device DBSCAN
+  pipeline); an explicit ``valid_b`` mask folds into the same mechanism.
+* feature dim: zero-padded to 128 (distances unchanged).
+
+Platform dispatch: on CPU the kernels run under ``interpret=True``
+(Python-evaluated, used by tests); on TPU they compile natively.  Set
+``repro.kernels.ops.FORCE_REF = True`` to route everything through the
+pure-jnp oracles in ``ref.py``.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+from .pairwise import eps_count_pallas, row_min_pallas, LANE
+from .flash_attention import flash_attention_pallas
+
+FAR = 1e15
+FORCE_REF = False
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _pad_rows(x: jnp.ndarray, mult: int, fill: float) -> jnp.ndarray:
+    m = x.shape[0]
+    tgt = ((m + mult - 1) // mult) * mult
+    if tgt == m:
+        return x
+    return jnp.concatenate(
+        [x, jnp.full((tgt - m,) + x.shape[1:], fill, x.dtype)])
+
+
+def _pad_feat(x: jnp.ndarray, lane: int = LANE) -> jnp.ndarray:
+    d = x.shape[1]
+    if d == lane:
+        return x
+    if d > lane:
+        raise ValueError(f"feature dim {d} > lane width {lane}")
+    return jnp.pad(x, ((0, 0), (0, lane - d)))
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "block_n"))
+def eps_count(a: jnp.ndarray, b: jnp.ndarray, eps,
+              valid_b: Optional[jnp.ndarray] = None,
+              *, block_m: int = 128, block_n: int = 128) -> jnp.ndarray:
+    """Count of b-points within ``eps`` of each a-point. Returns [M] int32."""
+    if FORCE_REF:
+        return ref.eps_count(a, b, eps, valid_b)
+    M = a.shape[0]
+    a32 = a.astype(jnp.float32)
+    b32 = b.astype(jnp.float32)
+    if valid_b is not None:
+        b32 = jnp.where(valid_b[:, None], b32, FAR)
+    ap = _pad_feat(_pad_rows(a32, block_m, 0.0))
+    bp = _pad_feat(_pad_rows(b32, block_n, FAR))
+    eps2 = jnp.asarray(eps, jnp.float32) ** 2
+    out = eps_count_pallas(ap, bp, eps2, block_m=block_m, block_n=block_n,
+                           interpret=_interpret())
+    return out[:M, 0]
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "block_n"))
+def row_min(a: jnp.ndarray, b: jnp.ndarray,
+            valid_b: Optional[jnp.ndarray] = None,
+            *, block_m: int = 128, block_n: int = 128):
+    """Per-row (min squared distance, argmin) into b. Returns ([M], [M])."""
+    if FORCE_REF:
+        return ref.row_min(a, b, valid_b)
+    M = a.shape[0]
+    a32 = a.astype(jnp.float32)
+    b32 = b.astype(jnp.float32)
+    if valid_b is not None:
+        b32 = jnp.where(valid_b[:, None], b32, FAR)
+    ap = _pad_feat(_pad_rows(a32, block_m, 0.0))
+    bp = _pad_feat(_pad_rows(b32, block_n, FAR))
+    mins, args = row_min_pallas(ap, bp, block_m=block_m, block_n=block_n,
+                                interpret=_interpret())
+    return mins[:M, 0], args[:M, 0]
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "causal", "window", "softcap", "scale", "block_q", "block_k"))
+def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                    causal: bool = True, window: Optional[int] = None,
+                    softcap: Optional[float] = None,
+                    scale: Optional[float] = None,
+                    block_q: int = 128, block_k: int = 128) -> jnp.ndarray:
+    """Blocked attention. q: [B, H, Sq, D]; k/v: [B, H, Sk, D] (H already
+    broadcast over kv groups). Pads Sq/Sk to block multiples internally."""
+    if FORCE_REF:
+        return ref.mha(q, k, v, causal=causal, window=window,
+                       softcap=softcap, scale=scale)
+    B, H, Sq, D = q.shape
+    Sk = k.shape[2]
+    qf = q.reshape(B * H, Sq, D)
+    kf = k.reshape(B * H, Sk, D)
+    vf = v.reshape(B * H, Sk, D)
+
+    def pad_seq(x, blk, fill):
+        s = x.shape[1]
+        tgt = ((s + blk - 1) // blk) * blk
+        if tgt == s:
+            return x
+        return jnp.concatenate(
+            [x, jnp.full((x.shape[0], tgt - s, D), fill, x.dtype)], axis=1)
+
+    sq_pad = ((Sq + block_q - 1) // block_q) * block_q
+    qf = pad_seq(qf, block_q, 0.0)
+    kf = pad_seq(kf, block_k, 0.0)
+    vf = pad_seq(vf, block_k, 0.0)
+    # padded queries sit at positions >= Sq and are sliced off; padded keys
+    # are masked via sk_actual.
+    out = flash_attention_pallas(
+        qf, kf, vf, causal=causal, window=window, softcap=softcap,
+        scale=scale, sk_actual=Sk, q_offset=Sk - Sq,
+        block_q=block_q, block_k=block_k, interpret=_interpret())
+    return out[:, :Sq].reshape(B, H, Sq, D)

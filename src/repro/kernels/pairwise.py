@@ -1,0 +1,131 @@
+"""Blocked pairwise-distance Pallas kernels (TPU target, MXU-tiled).
+
+The DBSCAN hot spots (core identification, FastMerging nearest queries,
+border assignment) all reduce to tiles of squared Euclidean distances
+between two point sets.  On TPU the `-2 a.b` term is an MXU matmul, so the
+tile shapes are chosen MXU-aligned: 128 x 128 output tiles, feature dim
+padded to the 128 lane width by the ops.py wrappers.
+
+Kernels (one `pl.pallas_call` each, explicit VMEM BlockSpecs):
+
+* ``eps_count_kernel``  -- per-row count of other-set points within eps.
+* ``row_min_kernel``    -- per-row (min squared distance, argmin index).
+
+Both iterate a (i, j) grid over (rows, cols) tiles and accumulate across
+the j axis in the output block (revisited per i), the standard Pallas
+accumulation pattern.  Padding policy (see ops.py): padded B-rows carry
+coordinates so far away they can never satisfy a predicate; padded A-rows
+produce garbage that callers slice off.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK_M = 128
+BLOCK_N = 128
+LANE = 128
+
+
+def _sq_dist_tile(a, b):
+    """[BM, D] x [BN, D] -> [BM, BN] squared distances (f32, MXU dot)."""
+    a = a.astype(jnp.float32)
+    b = b.astype(jnp.float32)
+    ab = jax.lax.dot_general(a, b, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)
+    aa = jnp.sum(a * a, axis=1, keepdims=True)        # [BM, 1]
+    bb = jnp.sum(b * b, axis=1, keepdims=True).T      # [1, BN]
+    return jnp.maximum(aa + bb - 2.0 * ab, 0.0)
+
+
+# --------------------------------------------------------------------------
+# eps-count
+# --------------------------------------------------------------------------
+
+def _eps_count_kernel(a_ref, b_ref, eps2_ref, out_ref):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    d2 = _sq_dist_tile(a_ref[...], b_ref[...])
+    hit = (d2 <= eps2_ref[0, 0]).astype(jnp.int32)
+    out_ref[...] += jnp.sum(hit, axis=1, keepdims=True)
+
+
+def eps_count_pallas(a: jnp.ndarray, b: jnp.ndarray, eps2: jnp.ndarray,
+                     *, block_m: int = BLOCK_M, block_n: int = BLOCK_N,
+                     interpret: bool = False) -> jnp.ndarray:
+    """a: [M, D], b: [N, D] (M % block_m == N % block_n == 0, D == LANE).
+
+    Returns [M, 1] int32 counts of b-rows within sqrt(eps2) of each a-row.
+    """
+    M, D = a.shape
+    N = b.shape[0]
+    grid = (M // block_m, N // block_n)
+    return pl.pallas_call(
+        _eps_count_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_m, D), lambda i, j: (i, 0)),
+            pl.BlockSpec((block_n, D), lambda i, j: (j, 0)),
+            pl.BlockSpec((1, 1), lambda i, j: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_m, 1), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((M, 1), jnp.int32),
+        interpret=interpret,
+    )(a, b, eps2.reshape(1, 1).astype(jnp.float32))
+
+
+# --------------------------------------------------------------------------
+# row-min (+ argmin)
+# --------------------------------------------------------------------------
+
+def _row_min_kernel(a_ref, b_ref, min_ref, arg_ref, *, block_n: int):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        min_ref[...] = jnp.full_like(min_ref, jnp.inf)
+        arg_ref[...] = jnp.full_like(arg_ref, -1)
+
+    d2 = _sq_dist_tile(a_ref[...], b_ref[...])
+    tile_min = jnp.min(d2, axis=1, keepdims=True)             # [BM, 1]
+    tile_arg = jnp.argmin(d2, axis=1).astype(jnp.int32)[:, None]
+    better = tile_min < min_ref[...]
+    min_ref[...] = jnp.where(better, tile_min, min_ref[...])
+    arg_ref[...] = jnp.where(better, tile_arg + j * block_n, arg_ref[...])
+
+
+def row_min_pallas(a: jnp.ndarray, b: jnp.ndarray,
+                   *, block_m: int = BLOCK_M, block_n: int = BLOCK_N,
+                   interpret: bool = False):
+    """a: [M, D], b: [N, D] (aligned as in ``eps_count_pallas``).
+
+    Returns ([M, 1] f32 min squared distance, [M, 1] int32 argmin row).
+    """
+    M, D = a.shape
+    N = b.shape[0]
+    grid = (M // block_m, N // block_n)
+    return pl.pallas_call(
+        functools.partial(_row_min_kernel, block_n=block_n),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_m, D), lambda i, j: (i, 0)),
+            pl.BlockSpec((block_n, D), lambda i, j: (j, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_m, 1), lambda i, j: (i, 0)),
+            pl.BlockSpec((block_m, 1), lambda i, j: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((M, 1), jnp.float32),
+            jax.ShapeDtypeStruct((M, 1), jnp.int32),
+        ],
+        interpret=interpret,
+    )(a, b)

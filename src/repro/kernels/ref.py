@@ -1,0 +1,93 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the semantic ground truth: kernel tests sweep shapes/dtypes and
+``assert_allclose`` against these functions; the jit'd wrappers in
+``ops.py`` fall back to them on platforms without Pallas support.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+# --------------------------------------------------------------------------
+# pairwise distances (DBSCAN hot spots)
+# --------------------------------------------------------------------------
+
+def sq_dists(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """[M, d] x [N, d] -> [M, N] squared Euclidean distances."""
+    a = a.astype(jnp.float32)
+    b = b.astype(jnp.float32)
+    aa = jnp.sum(a * a, axis=1)[:, None]
+    bb = jnp.sum(b * b, axis=1)[None, :]
+    d2 = aa + bb - 2.0 * (a @ b.T)
+    return jnp.maximum(d2, 0.0)
+
+
+def eps_count(a: jnp.ndarray, b: jnp.ndarray, eps: jnp.ndarray,
+              valid_b: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """Per-row count of points of ``b`` within ``eps`` of each row of ``a``."""
+    d2 = sq_dists(a, b)
+    hit = d2 <= jnp.asarray(eps, jnp.float32) ** 2
+    if valid_b is not None:
+        hit = hit & valid_b[None, :]
+    return hit.sum(axis=1).astype(jnp.int32)
+
+
+def row_min(a: jnp.ndarray, b: jnp.ndarray,
+            valid_b: Optional[jnp.ndarray] = None):
+    """Per-row (min squared distance, argmin index) into ``b``."""
+    d2 = sq_dists(a, b)
+    if valid_b is not None:
+        d2 = jnp.where(valid_b[None, :], d2, jnp.inf)
+    idx = jnp.argmin(d2, axis=1).astype(jnp.int32)
+    return jnp.min(d2, axis=1), idx
+
+
+def min_dist(a: jnp.ndarray, va: jnp.ndarray,
+             b: jnp.ndarray, vb: jnp.ndarray) -> jnp.ndarray:
+    """Minimum squared distance between two masked sets (scalar)."""
+    d2 = sq_dists(a, b)
+    d2 = jnp.where(va[:, None] & vb[None, :], d2, jnp.inf)
+    return jnp.min(d2)
+
+
+# --------------------------------------------------------------------------
+# attention (LM hot spot)
+# --------------------------------------------------------------------------
+
+def mha(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+        causal: bool = True, window: Optional[int] = None,
+        softcap: Optional[float] = None,
+        scale: Optional[float] = None) -> jnp.ndarray:
+    """Reference multi-head attention.
+
+    q: [B, H, Sq, D], k/v: [B, H, Sk, D] (kv heads already broadcast).
+    ``window``: sliding-window width (keys with q_pos - k_pos >= window
+    masked out); ``softcap``: gemma2-style tanh logit soft capping.
+    Query position i is aligned to key position i + (Sk - Sq) so decode
+    (Sq=1) attends to the full prefix.
+    """
+    B, H, Sq, D = q.shape
+    Sk = k.shape[2]
+    if scale is None:
+        scale = D ** -0.5
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q, k,
+                        preferred_element_type=jnp.float32) * scale
+    if softcap is not None:
+        logits = jnp.tanh(logits / softcap) * softcap
+    qpos = jnp.arange(Sq)[:, None] + (Sk - Sq)
+    kpos = jnp.arange(Sk)[None, :]
+    mask = jnp.ones((Sq, Sk), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window is not None:
+        mask &= (qpos - kpos) < window
+    logits = jnp.where(mask[None, None], logits, NEG_INF)
+    p = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p.astype(v.dtype), v)

@@ -1,0 +1,1 @@
+"""Launch layer: mesh, sharding policy, dry-run, train/serve drivers."""

@@ -1,0 +1,231 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+MUST be the entry point that sets XLA_FLAGS *before any jax import* --
+jax locks the device count on first init, which is why the two lines
+above precede everything (including `from repro...`).
+
+Per cell:
+  * build (fn, ShapeDtypeStruct args) via launch.specs,
+  * jax.jit(fn).lower(...).compile()  -- proves the sharding config is
+    coherent; no arrays are allocated,
+  * record memory_analysis (per-device bytes), cost_analysis (FLOPs /
+    bytes), and collective wire bytes parsed from the optimized HLO,
+  * dump JSON for EXPERIMENTS.md §Dry-run / §Roofline.
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen2-1.5b --shape train_4k
+  python -m repro.launch.dryrun --arch all --shape all --mesh both \
+      --out results/dryrun
+Exit code != 0 on any cell failure (sharding mismatch, compile OOM, ...).
+"""
+
+import argparse
+import json
+import sys
+import time
+import traceback
+
+
+def run_cluster_cell(multi_pod: bool, *, n_points_shard: int = 4096,
+                     d: int = 3) -> dict:
+    """Dry-run of the paper's own workload: the distributed GriT-DBSCAN
+    cluster step (shard_map over the full mesh)."""
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro.launch.mesh import make_production_mesh
+    from repro.core.distributed import make_cluster_step, ClusterCaps
+    from repro.core.device_dbscan import GritCaps
+    from repro.launch import hlo_analysis as H
+    from repro.launch import hlo_costs
+
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    rec = {"arch": "grit-cluster-step", "shape": f"n{n_points_shard}xd{d}",
+           "mesh": mesh_name, "kind": "cluster"}
+    t0 = time.time()
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    caps = ClusterCaps(grit=GritCaps(grid_cap=256, frontier_cap=128,
+                                     k_cap=32, c_cap=512, m_cap=256,
+                                     pair_cap=1024, grid_block=64,
+                                     pair_block=256),
+                       halo_cap=128)
+    step = make_cluster_step(mesh, 3000.0, 10, caps, n_points_shard, d)
+    n_shards = mesh.devices.size
+    axes = tuple(mesh.axis_names)
+    N = n_shards * n_points_shard
+    pts = jax.ShapeDtypeStruct((N, d), jnp.float32,
+                               sharding=NamedSharding(mesh, P(axes, None)))
+    valid = jax.ShapeDtypeStruct((N,), jnp.bool_,
+                                 sharding=NamedSharding(mesh, P(axes)))
+    lowered = jax.jit(step).lower(pts, valid)
+    t1 = time.time()
+    compiled = lowered.compile()
+    t2 = time.time()
+    la = hlo_costs.analyze(compiled.as_text(), default_group=16)
+    rec.update({
+        "status": "ok", "chips": int(n_shards),
+        "lower_s": round(t1 - t0, 2), "compile_s": round(t2 - t1, 2),
+        "flops_per_chip": la["flops"], "bytes_per_chip": la["bytes"],
+        "collective_bytes_per_chip": {
+            k[5:]: v for k, v in la.items() if k.startswith("coll_")},
+        "roofline": H.roofline_terms(la["flops"], la["bytes"],
+                                     la["coll_bytes"]),
+    })
+    return rec
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool, *,
+             seq_parallel: bool = False, attn_impl=None,
+             moe_alltoall: bool = False, overrides=None) -> dict:
+    import jax
+    from repro.configs import long_500k_supported
+    from repro.launch.mesh import make_production_mesh
+    from repro.launch.specs import build_cell
+    from repro.launch import hlo_analysis as H
+    from repro.launch import hlo_costs
+
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    rec = {"arch": arch, "shape": shape_name, "mesh": mesh_name}
+    if shape_name == "long_500k" and not long_500k_supported(arch):
+        rec["status"] = "skipped"
+        rec["reason"] = "full-attention arch: 500k decode is quadratic " \
+                        "(see DESIGN.md shape-applicability)"
+        return rec
+
+    t0 = time.time()
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    fn, args, info = build_cell(arch, shape_name, mesh,
+                                seq_parallel=seq_parallel,
+                                attn_impl=attn_impl,
+                                moe_alltoall=moe_alltoall,
+                                overrides=overrides)
+    rec.update(info)
+    lowered = jax.jit(fn).lower(*args)
+    t1 = time.time()
+    compiled = lowered.compile()
+    t2 = time.time()
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    n_chips = mesh.devices.size
+    hlo = compiled.as_text()
+    # loop-aware per-chip costs (XLA's cost_analysis counts while bodies
+    # once; hlo_costs scales by trip counts -- see launch/hlo_costs.py)
+    la = hlo_costs.analyze(hlo, default_group=16)
+    flops = la["flops"]
+    bytes_acc = la["bytes"]
+    coll_total = la["coll_bytes"]
+
+    rec.update({
+        "status": "ok",
+        "chips": int(n_chips),
+        "lower_s": round(t1 - t0, 2),
+        "compile_s": round(t2 - t1, 2),
+        # per-chip, post-SPMD, loop-aware
+        "flops_per_chip": flops,
+        "bytes_per_chip": bytes_acc,
+        "collective_bytes_per_chip": {
+            k[5:]: v for k, v in la.items() if k.startswith("coll_")},
+        "xla_cost_analysis": {           # raw XLA numbers for reference
+            "flops": float(cost.get("flops", 0.0)),
+            "bytes": float(cost.get("bytes accessed", 0.0)),
+        },
+        "memory": {
+            "argument_size": getattr(mem, "argument_size_in_bytes", 0),
+            "output_size": getattr(mem, "output_size_in_bytes", 0),
+            "temp_size": getattr(mem, "temp_size_in_bytes", 0),
+            "generated_code_size": getattr(
+                mem, "generated_code_size_in_bytes", 0),
+        },
+        "roofline": H.roofline_terms(flops, bytes_acc, coll_total),
+    })
+    return rec
+
+
+def main() -> int:
+    from repro.configs import list_archs, SHAPES
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="single",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--seq-parallel", action="store_true")
+    ap.add_argument("--moe-alltoall", action="store_true")
+    ap.add_argument("--cluster", action="store_true",
+                    help="dry-run the distributed GriT-DBSCAN step instead")
+    ap.add_argument("--attn-impl", default=None)
+    ap.add_argument("--override", action="append", default=[],
+                    help="cfg overrides key=value (e.g. attn_chunk=512)")
+    ap.add_argument("--out", default=None, help="JSON output path")
+    args = ap.parse_args()
+
+    archs = list_archs() if args.arch == "all" else [args.arch]
+    shapes = list(SHAPES) if args.shape == "all" else [args.shape]
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+    overrides = {}
+    for ov in args.override:
+        k, v = ov.split("=", 1)
+        try:
+            v = json.loads(v)
+        except json.JSONDecodeError:
+            pass
+        overrides[k] = v
+
+    results, failures = [], 0
+    if args.cluster:
+        for mp in meshes:
+            rec = run_cluster_cell(mp)
+            results.append(rec)
+            r = rec["roofline"]
+            print(f"[{rec['status']:7s}] grit-cluster-step x "
+                  f"{rec['mesh']} bound={r['dominant']}"
+                  f" t_c={r['t_compute']:.3e}s t_m={r['t_memory']:.3e}s"
+                  f" t_x={r['t_collective']:.3e}s", flush=True)
+        if args.out:
+            os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+            with open(args.out, "w") as f:
+                json.dump(results, f, indent=1)
+        return 0
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                tag = f"{arch} x {shape} x {'2x16x16' if mp else '16x16'}"
+                try:
+                    rec = run_cell(arch, shape, mp,
+                                   seq_parallel=args.seq_parallel,
+                                   attn_impl=args.attn_impl,
+                                   moe_alltoall=args.moe_alltoall,
+                                   overrides=overrides or None)
+                except Exception as e:
+                    traceback.print_exc()
+                    rec = {"arch": arch, "shape": shape,
+                           "mesh": "2x16x16" if mp else "16x16",
+                           "status": "failed", "error": repr(e)}
+                    failures += 1
+                results.append(rec)
+                status = rec["status"]
+                extra = ""
+                if status == "ok":
+                    r = rec["roofline"]
+                    extra = (f" bound={r['dominant']}"
+                             f" t_c={r['t_compute']:.3e}s"
+                             f" t_m={r['t_memory']:.3e}s"
+                             f" t_x={r['t_collective']:.3e}s"
+                             f" compile={rec['compile_s']}s")
+                print(f"[{status:7s}] {tag}{extra}", flush=True)
+
+    if args.out:
+        os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+        with open(args.out, "w") as f:
+            json.dump(results, f, indent=1)
+        print(f"wrote {args.out}")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

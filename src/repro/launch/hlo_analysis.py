@@ -1,0 +1,108 @@
+"""Roofline-term extraction from compiled HLO.
+
+``cost_analysis`` gives FLOPs and bytes accessed; collective traffic is
+NOT included there, so we parse the post-SPMD optimized HLO text and sum
+operand sizes of every collective op, with per-op wire factors:
+
+  all-reduce          2 (k-1)/k   (reduce-scatter + all-gather phases)
+  all-gather            (k-1)/k   (each chip receives (k-1)/k of result)
+  reduce-scatter        (k-1)/k   (of the *input*, = output * (k-1))
+  all-to-all            (k-1)/k
+  collective-permute    1
+
+k is parsed from replica_groups when present (else the worst-case axis).
+The result is the per-chip wire-byte count used for the collective
+roofline term  T_coll = bytes / 50 GB/s (serial per-link ICI model).
+"""
+
+from __future__ import annotations
+
+import re
+from typing import Dict, List, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COLL_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(\([^)]*\)|\S+)\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(", re.M)
+_GROUPS_RE = re.compile(r"replica_groups=\{(\{[^}]*\})")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def shape_bytes(shape_str: str) -> int:
+    """Total bytes of 'bf16[8,128]' or '(f32[4], bf16[2,2])'."""
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(shape_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _group_size(line: str, default: int) -> int:
+    m = _GROUPS_RE.search(line)
+    if m:
+        return max(len(m.group(1).split(",")), 1)
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        return max(int(m.group(2)), 1)
+    return default
+
+
+def collective_bytes(hlo_text: str, default_group: int = 16
+                     ) -> Dict[str, float]:
+    """Per-chip wire bytes by collective kind (done-ops skipped to avoid
+    double counting async pairs)."""
+    out: Dict[str, float] = {}
+    lines = hlo_text.splitlines()
+    for ln in lines:
+        m = _COLL_RE.match(ln)
+        if m is None:
+            continue
+        if "-done(" in ln:
+            continue                    # counted at -start
+        shape_str, kind = m.group(1), m.group(2)
+        size = shape_bytes(shape_str)
+        k = _group_size(ln, default_group)
+        frac = (k - 1) / k if k > 1 else 0.0
+        if kind == "all-reduce":
+            wire = 2 * frac * size
+        elif kind == "all-gather":
+            wire = frac * size
+        elif kind == "reduce-scatter":
+            wire = frac * size * k      # input bytes = output * k
+        elif kind == "all-to-all":
+            wire = frac * size
+        else:                           # collective-permute
+            wire = float(size)
+        out[kind] = out.get(kind, 0.0) + wire
+    out["total"] = sum(v for k, v in out.items() if k != "total")
+    return out
+
+
+# hardware constants (TPU v5e)
+PEAK_FLOPS = 197e12        # bf16 / chip
+HBM_BW = 819e9             # bytes/s / chip
+ICI_BW = 50e9              # bytes/s / link
+
+
+def roofline_terms(flops_per_chip: float, bytes_per_chip: float,
+                   coll_bytes_per_chip: float) -> Dict[str, float]:
+    t_c = flops_per_chip / PEAK_FLOPS
+    t_m = bytes_per_chip / HBM_BW
+    t_x = coll_bytes_per_chip / ICI_BW
+    dominant = max((t_c, "compute"), (t_m, "memory"), (t_x, "collective"))
+    return {"t_compute": t_c, "t_memory": t_m, "t_collective": t_x,
+            "dominant": dominant[1],
+            "bound": max(t_c, t_m, t_x),
+            "compute_fraction": t_c / max(t_c, t_m, t_x, 1e-30)}

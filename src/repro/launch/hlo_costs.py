@@ -1,0 +1,395 @@
+"""Loop-aware cost analysis over optimized HLO text.
+
+XLA's built-in ``cost_analysis`` counts a ``while`` body ONCE, so any
+scan-over-layers model under-reports FLOPs/bytes/collectives by the trip
+count.  This module parses the post-SPMD optimized HLO, builds the
+computation call graph, extracts while-loop trip counts from their
+condition computations (scan emits ``compare(induction, constant(N)),
+direction=LT``), and accumulates
+
+  * dot FLOPs       : 2 * |output| * contraction-size (batch dims incl.)
+  * elementwise     : |output| per float op (VPU estimate)
+  * HBM bytes       : operands + outputs of materializing top-level ops
+                      (post-fusion, each op's output is a real buffer)
+  * collective wire bytes per kind (same factors as hlo_analysis)
+
+each scaled by the computation's execution count (product of enclosing
+loop trip counts).  Validated against unrolled references in the tests.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+from .hlo_analysis import _DTYPE_BYTES, _GROUPS_RE, _GROUPS_IOTA_RE
+
+_DEF_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*((?:\([^)]*\)|[\w\[\],\{\}]+?))\s+"
+    r"([\w\-]+)\(")
+_SHAPE_ONE = re.compile(r"(\w+)\[([\d,]*)\]")
+_CALLEE_RE = re.compile(r"(?:calls|to_apply|condition|body)=%?([\w.\-]+)")
+_COND_BODY_RE = re.compile(r"condition=%?([\w.\-]+),\s*body=%?([\w.\-]+)")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+
+_FREE_OPS = {"parameter", "constant", "tuple", "get-tuple-element",
+             "bitcast", "after-all", "partition-id", "replica-id"}
+_COLLECTIVES = {"all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute"}
+
+
+def _shape_elems(shape_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_ONE.findall(shape_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n
+    return total
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_ONE.findall(shape_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _is_float(shape_str: str) -> bool:
+    m = _SHAPE_ONE.search(shape_str)
+    return bool(m) and m.group(1) in ("f16", "bf16", "f32", "f64",
+                                      "f8e4m3fn", "f8e5m2")
+
+
+@dataclasses.dataclass
+class Op:
+    name: str
+    shape: str
+    kind: str
+    line: str
+    operands: List[str]
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    params: Dict[str, str]
+    ops: List[Op]
+
+    def symbol_shapes(self) -> Dict[str, str]:
+        table = dict(self.params)
+        for op in self.ops:
+            table[op.name] = op.shape
+        return table
+
+
+def _split_top(s: str) -> List[str]:
+    """Split on top-level commas (ignoring nested (), [], {})."""
+    out, depth, cur = [], 0, []
+    for ch in s:
+        if ch in "([{":
+            depth += 1
+        elif ch in ")]}":
+            depth -= 1
+        if ch == "," and depth == 0:
+            out.append("".join(cur))
+            cur = []
+        else:
+            cur.append(ch)
+    if cur:
+        out.append("".join(cur))
+    return out
+
+
+def _parse_header(line: str):
+    """'%name (p0: shape, p1: (tuple)) -> ret {' -> (name, {p: shape})."""
+    s = line.strip()
+    if s.startswith("ENTRY"):
+        s = s[len("ENTRY"):].strip()
+    if not s.startswith("%") and not s[:1].isalpha():
+        return None
+    paren = s.find(" (")
+    if paren < 0 or "->" not in s or not s.endswith("{"):
+        return None
+    name = s[:paren].lstrip("%").strip()
+    # balanced param region
+    depth, i = 0, paren + 1
+    start = i
+    while i < len(s):
+        if s[i] == "(":
+            depth += 1
+        elif s[i] == ")":
+            depth -= 1
+            if depth == 0:
+                break
+        i += 1
+    inner = s[start + 1:i]
+    params = {}
+    for part in _split_top(inner):
+        if ":" in part:
+            pname, pshape = part.split(":", 1)
+            params[pname.strip().lstrip("%")] = pshape.strip()
+    return name, params
+
+
+def parse_hlo(text: str) -> Dict[str, Computation]:
+    comps: Dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    for raw in text.splitlines():
+        line = raw.rstrip()
+        if not line:
+            continue
+        if not line.startswith(" ") and line.endswith("{") and "->" in line:
+            hdr = _parse_header(line)
+            if hdr:
+                cur = Computation(hdr[0], hdr[1], [])
+                comps[cur.name] = cur
+                continue
+        if cur is None:
+            continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        m = _DEF_RE.match(line)
+        if m:
+            name, shape, kind = m.group(1), m.group(2), m.group(3)
+            # operands: balanced (...) right after the op name
+            rest = line[m.end():]
+            depth, j = 1, 0
+            while j < len(rest) and depth > 0:
+                if rest[j] == "(":
+                    depth += 1
+                elif rest[j] == ")":
+                    depth -= 1
+                j += 1
+            operands = []
+            for tok in _split_top(rest[:j - 1]):
+                tok = tok.strip().lstrip("%")
+                if tok:
+                    operands.append(tok)
+            cur.ops.append(Op(name, shape, kind, line, operands))
+    return comps
+
+
+def _trip_count(comps: Dict[str, Computation], cond_name: str) -> int:
+    cond = comps.get(cond_name)
+    if cond is None:
+        return 1
+    consts: List[int] = []
+    for op in cond.ops:
+        if op.kind == "constant":
+            mm = re.search(r"constant\((\d+)\)", op.line)
+            if mm and "s32" in op.shape:
+                consts.append(int(mm.group(1)))
+    if not consts:
+        return 1
+    return max(consts)
+
+
+def _exec_counts(comps: Dict[str, Computation]) -> Dict[str, float]:
+    entry = None
+    for name in comps:
+        if name.startswith("main") or ".main" in name:
+            entry = name
+    if entry is None:                      # fall back: last computation
+        entry = list(comps)[-1]
+    counts: Dict[str, float] = {c: 0.0 for c in comps}
+
+    def visit(name: str, mult: float):
+        if name not in comps:
+            return
+        counts[name] += mult
+        for op in comps[name].ops:
+            if op.kind == "while":
+                cb = _COND_BODY_RE.search(op.line)
+                if cb:
+                    tm = _TRIP_RE.search(op.line)
+                    trips = int(tm.group(1)) if tm else \
+                        _trip_count(comps, cb.group(1))
+                    visit(cb.group(1), mult * (trips + 1))
+                    visit(cb.group(2), mult * trips)
+            elif op.kind in ("fusion", "call", "conditional"):
+                for callee in _CALLEE_RE.findall(op.line):
+                    visit(callee, mult)
+            # reduce/map/scatter to_apply bodies: scalar lambdas -- their
+            # cost is folded into the op's own estimate, skip.
+
+    visit(entry, 1.0)
+    return counts
+
+
+def _dot_flops(op: Op, symbols: Dict[str, str]) -> float:
+    out_elems = _shape_elems(op.shape)
+    lhs_shape = symbols.get(op.operands[0], "") if op.operands else ""
+    m = _CONTRACT_RE.search(op.line)
+    k = 1
+    if m and lhs_shape:
+        dims_m = _SHAPE_ONE.search(lhs_shape)
+        if dims_m and dims_m.group(2):
+            dims = [int(d) for d in dims_m.group(2).split(",")]
+            for ci in m.group(1).split(","):
+                ci = ci.strip()
+                if ci and int(ci) < len(dims):
+                    k *= dims[int(ci)]
+    return 2.0 * out_elems * k
+
+
+_SLICY = {"dynamic-slice", "gather", "slice"}
+
+
+def _fusion_param_bytes(comps: Dict[str, Computation], fname: str,
+                        param_idx: int, full_shape: str) -> float:
+    """Bytes a fusion actually reads from its ``param_idx``-th operand.
+
+    * every use is a slice/gather            -> count the slice outputs;
+    * every use is as dynamic-update-slice's *destination* -> 0 bytes
+      (XLA aliases the buffer in place; only the update is written,
+      which is charged on the output side by ``_fusion_out_bytes``).
+    """
+    comp = comps.get(fname)
+    if comp is None:
+        return float(_shape_bytes(full_shape))
+    # parameter names carry their index: parameter(N)
+    pname = None
+    for op in comp.ops:
+        if op.kind == "parameter" and f"parameter({param_idx})" in op.line:
+            pname = op.name
+            break
+    if pname is None:
+        for n, s in comp.params.items():
+            if s == full_shape:
+                pname = n
+                break
+    if pname is None:
+        return float(_shape_bytes(full_shape))
+    uses = [op for op in comp.ops if pname in op.operands]
+    if uses and all(u.kind in _SLICY and u.operands
+                    and u.operands[0] == pname for u in uses):
+        return float(sum(_shape_bytes(u.shape) for u in uses))
+    if uses and all(u.kind == "dynamic-update-slice" and u.operands
+                    and u.operands[0] == pname for u in uses):
+        return 0.0
+    return float(_shape_bytes(full_shape))
+
+
+def _fusion_out_bytes(comps: Dict[str, Computation], fname: str,
+                      out_shape: str) -> float:
+    """Bytes a fusion writes: if its root is a dynamic-update-slice the
+    buffer is updated in place -- only the update slice is written."""
+    comp = comps.get(fname)
+    if comp is None or not comp.ops:
+        return float(_shape_bytes(out_shape))
+    symbols = comp.symbol_shapes()
+    root = comp.ops[-1]
+    roots = [root]
+    if root.kind == "tuple":             # multi-output fusion
+        roots = [op for op in comp.ops if op.name in root.operands]
+    total = 0.0
+    for r in roots:
+        if r.kind == "dynamic-update-slice" and len(r.operands) > 1:
+            total += _shape_bytes(symbols.get(r.operands[1], r.shape))
+        else:
+            total += _shape_bytes(r.shape)
+    return total
+
+
+def _op_bytes(op: Op, symbols: Dict[str, str],
+              comps: Dict[str, Computation]) -> float:
+    """HBM traffic estimate for one top-level op (post-fusion)."""
+    out_b = _shape_bytes(op.shape)
+    if op.kind in _SLICY:
+        return 2.0 * out_b                       # read slice + write out
+    if op.kind == "dynamic-update-slice":
+        upd = _shape_bytes(symbols.get(op.operands[1], "")) \
+            if len(op.operands) > 1 else out_b
+        return 2.0 * upd                         # read update + write slice
+    if op.kind in ("broadcast", "iota"):
+        return float(out_b)
+    if op.kind == "scatter":
+        upd = _shape_bytes(symbols.get(op.operands[-1], "")) \
+            if op.operands else out_b
+        return 2.0 * upd
+    if op.kind == "fusion":
+        m = re.search(r"calls=%?([\w.\-]+)", op.line)
+        b = _fusion_out_bytes(comps, m.group(1), op.shape) if m \
+            else float(out_b)
+        for i, o in enumerate(op.operands):
+            full = symbols.get(o, "")
+            if m:
+                b += _fusion_param_bytes(comps, m.group(1), i, full)
+            else:
+                b += _shape_bytes(full)
+        return b
+    b = float(out_b)
+    for o in op.operands:
+        b += _shape_bytes(symbols.get(o, ""))
+    return b
+
+
+def analyze(text: str, default_group: int = 16) -> Dict[str, float]:
+    """Loop-aware {flops, bytes, coll_bytes, coll_<kind>...} totals."""
+    comps = parse_hlo(text)
+    counts = _exec_counts(comps)
+    flops = 0.0
+    bytes_acc = 0.0
+    coll: Dict[str, float] = {}
+    for cname, comp in comps.items():
+        mult = counts.get(cname, 0.0)
+        if mult == 0.0:
+            continue
+        symbols = comp.symbol_shapes()
+        in_fusion = cname.startswith("fused") or "fused_computation" in cname \
+            or cname.startswith("wrapped")
+        for op in comp.ops:
+            if op.kind == "dot":
+                flops += mult * _dot_flops(op, symbols)
+            elif op.kind == "convolution":
+                # not used by this zoo; approximate as output elems
+                flops += mult * 2.0 * _shape_elems(op.shape)
+            elif op.kind not in _FREE_OPS and _is_float(op.shape):
+                flops += mult * _shape_elems(op.shape)
+            # HBM bytes: only ops that materialize at computation top level
+            if in_fusion:
+                continue                    # fusion internals stay in regs
+            if op.kind in _FREE_OPS or op.kind == "while":
+                continue
+            bytes_acc += mult * _op_bytes(op, symbols, comps)
+            base = op.kind.replace("-start", "").replace("-done", "")
+            if base in _COLLECTIVES and not op.kind.endswith("-done"):
+                size = _shape_bytes(op.shape)
+                if op.kind.endswith("-start"):
+                    size = size // 2 or size   # start returns (in, out) tuple
+                k = default_group
+                m = _GROUPS_RE.search(op.line)
+                if m:
+                    k = max(len(m.group(1).split(",")), 1)
+                else:
+                    m = _GROUPS_IOTA_RE.search(op.line)
+                    if m:
+                        k = max(int(m.group(2)), 1)
+                frac = (k - 1) / k if k > 1 else 0.0
+                if base == "all-reduce":
+                    wire = 2 * frac * size
+                elif base == "reduce-scatter":
+                    wire = frac * size * k
+                elif base in ("all-gather", "all-to-all"):
+                    wire = frac * size
+                else:
+                    wire = float(size)
+                coll[base] = coll.get(base, 0.0) + mult * wire
+    out = {"flops": flops, "bytes": bytes_acc,
+           "coll_bytes": sum(coll.values())}
+    for k, v in coll.items():
+        out[f"coll_{k}"] = v
+    return out

@@ -1,0 +1,259 @@
+"""Declarative sharding policy: param / activation / input / cache specs.
+
+Strategy (per DESIGN.md §5):
+
+* **Weights**: 2D FSDP x TP -- contraction-adjacent dim sharded over
+  'data' (FSDP; all-gathered per layer by GSPMD), head/ff/vocab dim over
+  'model' (TP).  Across pods weights are replicated ('pod' carries only
+  batch), giving hierarchical gradient reduction.
+* **Experts** (MoE): expert axis over 'model' when num_experts >=
+  model-axis size (arctic 128e); otherwise TP inside each expert
+  (mixtral 8e).
+* **Activations**: residual stream sharded over batch axes; logits over
+  'model' (vocab); expert buffers over 'model' when experts are sharded.
+  Sequence parallelism is exposed as the "res" tag override (§Perf).
+* **Decode caches**: batch axis over ('pod','data') when divisible; KV
+  heads over 'model' when divisible, else the sequence dim over 'model'
+  (long-context flash-decoding layout).
+
+Everything returns ``NamedSharding`` bound to the target mesh so AOT
+``ShapeDtypeStruct`` lowering needs no ambient mesh context.
+"""
+
+from __future__ import annotations
+
+import re
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.models.config import LMConfig
+from .mesh import batch_axes, axis_size
+
+
+def _ns(mesh, *spec) -> NamedSharding:
+    return NamedSharding(mesh, P(*spec))
+
+
+# --------------------------------------------------------------------------
+# parameter policy
+# --------------------------------------------------------------------------
+
+# rules: (path regex, spec for the *trailing* dims of the leaf)
+# leading stack dims (layer groups / expert axis handled separately) get None.
+_PARAM_RULES = [
+    (r"\['embed'\]$",                ("model", "data")),
+    (r"\['head'\]$",                 ("data", "model")),
+    (r"\['(wq|wk|wv)'\]$",           ("data", "model")),
+    (r"\['wo'\]$",                   ("model", "data")),
+    (r"\['(bq|bk|bv)'\]$",           ("model",)),
+    (r"\['(w_gate|w_up)'\]$",        ("data", "model")),
+    (r"\['w_down'\]$",               ("model", "data")),
+    (r"\['router'\]$",               ("data", None)),
+    (r"\['(w_r|w_k|w_v|w_g)'\]$",    ("data", "model")),   # rwkv projections
+    (r"\['dec_a'\]$",                ("data", None)),
+    (r"\['dec_b'\]$",                (None, "data")),
+    (r"\['w_in'\]$",                 ("data", None)),      # mamba in-proj
+    (r"\['w_out'\]$",                (None, "data")),
+]
+
+
+def param_pspec(cfg: LMConfig, mesh, path: str, ndim: int,
+                shape, moe_ep: bool = False) -> P:
+    moe_sharded = cfg.moe is not None and \
+        cfg.moe.num_experts % axis_size(mesh, "model") == 0
+    is_expert = bool(re.search(r"\['moe'\]", path)) and \
+        bool(re.search(r"w_(gate|up|down)", path))
+    trailing: tuple = ()
+    for rx, spec in _PARAM_RULES:
+        if re.search(rx, path):
+            trailing = spec
+            break
+    if is_expert:
+        key = re.search(r"w_(gate|up|down)", path).group(0)
+        ep_ok = cfg.moe.num_experts % axis_size(mesh, "data") == 0 and \
+            cfg.moe.d_ff % axis_size(mesh, "model") == 0
+        if moe_ep and ep_ok:
+            # expert-parallel storage == compute layout (GShard):
+            # experts over 'data', FFN dim over 'model'; no weight gather.
+            trailing = ("data", None, "model") if key != "w_down" \
+                else ("data", "model", None)
+        elif moe_sharded:
+            # experts over 'model', FSDP over 'data' on the d dim
+            trailing = ("model", "data", None)
+        else:
+            base = dict(w_gate=("data", "model"), w_up=("data", "model"),
+                        w_down=("model", "data"))
+            trailing = (None,) + base[key]
+    spec = [None] * ndim
+    for i, ax in enumerate(reversed(trailing)):
+        di = ndim - 1 - i
+        if di < 0:
+            break
+        if ax is not None and shape[di] % axis_size(mesh, ax) == 0:
+            spec[di] = ax
+    return P(*spec)
+
+
+def param_shardings(cfg: LMConfig, mesh, params_shape,
+                    moe_ep: bool = False) -> Any:
+    """Map a params pytree (of arrays or ShapeDtypeStructs) to shardings."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params_shape)
+    out = []
+    for path, leaf in flat:
+        pstr = jax.tree_util.keystr(path)
+        spec = param_pspec(cfg, mesh, pstr, len(leaf.shape), leaf.shape,
+                           moe_ep=moe_ep)
+        out.append(NamedSharding(mesh, spec))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+# --------------------------------------------------------------------------
+# activation policy (tags consumed by models.sharding_ctx)
+# --------------------------------------------------------------------------
+
+def activation_specs(cfg: LMConfig, mesh, *, seq_parallel: bool = False,
+                     moe_alltoall: bool = False) -> Dict[str, Any]:
+    b = P(batch_axes(mesh))
+    res_seq = "model" if seq_parallel else None
+    specs = {
+        "btd": NamedSharding(mesh, P(*b, None, None)),
+        "res": NamedSharding(mesh, P(*b, res_seq, None)),
+        "btv": NamedSharding(mesh, P(*b, None, "model")),
+    }
+    if moe_alltoall and cfg.moe is not None:
+        e_sharded = cfg.moe.num_experts % axis_size(mesh, "model") == 0
+        if e_sharded:       # arctic: experts over 'model', capacity over 'data'
+            specs["moe_ecd"] = NamedSharding(mesh, P("model", "data", None))
+            specs["moe_w_in"] = NamedSharding(mesh, P("model", None, None))
+            specs["moe_w_out"] = NamedSharding(mesh, P("model", None, None))
+        else:               # mixtral: TP inside expert, capacity over 'data'
+            specs["moe_ecd"] = NamedSharding(mesh, P(None, "data", None))
+            specs["moe_w_in"] = NamedSharding(mesh, P(None, None, "model"))
+            specs["moe_w_out"] = NamedSharding(mesh, P(None, "model", None))
+    return specs
+
+
+# --------------------------------------------------------------------------
+# inputs
+# --------------------------------------------------------------------------
+
+def _batch_spec(mesh, global_batch: int):
+    """Largest prefix of (pod, data) that divides the batch."""
+    axes = []
+    size = 1
+    for a in batch_axes(mesh):
+        s = axis_size(mesh, a)
+        if global_batch % (size * s) == 0:
+            axes.append(a)
+            size *= s
+    return tuple(axes)
+
+
+def batch_shardings(cfg: LMConfig, mesh, batch_struct) -> Any:
+    """Shardings for a batch dict ({"tokens", "frames", "patches", ...})."""
+    def one(path, leaf):
+        gb = leaf.shape[0]
+        ba = _batch_spec(mesh, gb)
+        return NamedSharding(mesh, P(ba, *([None] * (len(leaf.shape) - 1))))
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(batch_struct)
+    return jax.tree_util.tree_unflatten(
+        treedef, [one(p, l) for p, l in flat])
+
+
+# --------------------------------------------------------------------------
+# decode cache
+# --------------------------------------------------------------------------
+
+def cache_shardings(cfg: LMConfig, mesh, cache_struct) -> Any:
+    """Cache leaves: [G, B, heads?, S, D] / ssm / conv / shift states.
+
+    Preference order per leaf: shard batch over (pod, data) if divisible;
+    shard a heads-like dim over 'model' if divisible; else shard the
+    sequence dim over 'model' (and over 'data' too for batch=1
+    long-context decode).
+    """
+    model = axis_size(mesh, "model")
+
+    def one(path, leaf):
+        pstr = jax.tree_util.keystr(path)
+        shape = leaf.shape
+        nd = len(shape)
+        if pstr.endswith("['pos']"):
+            return NamedSharding(mesh, P())
+        spec = [None] * nd
+        # leading dim is the group stack; dim 1 is batch.
+        if nd >= 2:
+            ba = _batch_spec(mesh, shape[1])
+            if ba:
+                spec[1] = ba
+        batch_sharded = nd >= 2 and spec[1] is not None and \
+            np.prod([axis_size(mesh, a) for a in (spec[1] or ())]) > 1
+        if re.search(r"\['(k|v|xk|xv)'\]$", pstr) and nd == 5:
+            # [G, B, KV, S, Dh]
+            if shape[2] % model == 0:
+                spec[2] = "model"
+            elif shape[3] % model == 0:
+                spec[3] = "model"
+                if not batch_sharded and "data" in mesh.axis_names and \
+                        shape[3] % (model * axis_size(mesh, "data")) == 0:
+                    spec[3] = ("data", "model")
+                    if "pod" in mesh.axis_names and \
+                            shape[3] % (model * axis_size(mesh, "data")
+                                        * axis_size(mesh, "pod")) == 0:
+                        spec[3] = ("pod", "data", "model")
+        elif re.search(r"\['(wkv|ssm)'\]$", pstr) and nd == 5:
+            # [G, B, H, Dk, Dv] / [G, B, H, N, P]
+            if shape[2] % model == 0:
+                spec[2] = "model"
+        return NamedSharding(mesh, P(*spec))
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(cache_struct)
+    return jax.tree_util.tree_unflatten(
+        treedef, [one(p, l) for p, l in flat])
+
+
+# --------------------------------------------------------------------------
+# optimizer state (mirror the param sharding leaf-wise)
+# --------------------------------------------------------------------------
+
+def state_shardings(cfg: LMConfig, mesh, state_struct, params_sh,
+                    moe_ep: bool = False) -> Any:
+    """train state {"params", "opt", "step"[, "ef"]} -> shardings.
+
+    Optimizer slots share their parameter's sharding when shapes match
+    (mu/nu/ef); factored adafactor rows/cols fall back to replication of
+    the reduced dim.
+    """
+    flat_p, _ = jax.tree_util.tree_flatten(params_sh)
+
+    def match(path, leaf):
+        pstr = jax.tree_util.keystr(path)
+        if pstr.startswith("['params']"):
+            sub = jax.tree_util.keystr(path[1:])
+            return _lookup(cfg, mesh, sub, leaf)
+        if pstr.startswith("['opt']") or pstr.startswith("['ef']"):
+            m = re.match(r"\['(opt|ef)'\]\['(mu|nu|slots)'\](.*)", pstr)
+            if m and m.group(2) in ("mu", "nu"):
+                return _lookup(cfg, mesh, m.group(3), leaf)
+            if pstr.startswith("['ef']"):
+                return _lookup(cfg, mesh, pstr[len("['ef']"):], leaf)
+            if m and m.group(2) == "slots":
+                # adafactor: strip the trailing ['vr']/['vc']/['v'] selector
+                sub = re.sub(r"\['(vr|vc|v)'\]$", "", m.group(3))
+                spec = _lookup(cfg, mesh, sub, leaf, allow_rank_pad=True)
+                return spec
+        return NamedSharding(mesh, P())
+
+    def _lookup(cfg, mesh, sub, leaf, allow_rank_pad=False):
+        spec = param_pspec(cfg, mesh, sub, len(leaf.shape), leaf.shape,
+                           moe_ep=moe_ep)
+        return NamedSharding(mesh, spec)
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(state_struct)
+    return jax.tree_util.tree_unflatten(
+        treedef, [match(p, l) for p, l in flat])

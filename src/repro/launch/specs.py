@@ -1,0 +1,153 @@
+"""Input/state ShapeDtypeStruct builders + step functions for every cell.
+
+``build_cell(arch, shape, mesh)`` returns (fn, args) such that
+
+    jax.jit(fn).lower(*args).compile()
+
+is the dry-run for that (architecture x input-shape x mesh) cell.  All
+args are ShapeDtypeStructs carrying NamedShardings -- nothing is
+allocated.  The same builders power the real drivers (train.py/serve.py)
+with concrete arrays.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import get_config, get_shape, canonical
+from repro.models import (init_params, init_cache, loss_fn, prefill,
+                          decode_step)
+from repro.models.config import LMConfig
+from repro.models import sharding_ctx
+from repro.train import TrainCfg, make_train_step, init_state, \
+    get_optimizer, warmup_cosine
+from .mesh import batch_axes, axis_size
+from . import sharding as shd
+
+
+# per-arch training knobs (memory-driven)
+ARCH_TRAIN = {
+    "arctic_480b": dict(optimizer="adafactor", microbatches=8,
+                        param_dtype="bfloat16"),
+    "gemma2_27b": dict(optimizer="adamw", microbatches=4),
+    "mixtral_8x7b": dict(optimizer="adamw", microbatches=2),
+}
+
+
+def _struct(tree, shardings):
+    """Rebuild a ShapeDtypeStruct tree with shardings attached."""
+    return jax.tree.map(
+        lambda l, s: jax.ShapeDtypeStruct(l.shape, l.dtype, sharding=s),
+        tree, shardings)
+
+
+def train_cfg_for(arch: str) -> TrainCfg:
+    kw = ARCH_TRAIN.get(canonical(arch), {})
+    kw = {k: v for k, v in kw.items() if k in ("optimizer", "microbatches")}
+    return TrainCfg(total_steps=10_000, warmup_steps=200, **kw)
+
+
+def model_cfg_for(arch: str, *, smoke: bool = False) -> LMConfig:
+    cfg = get_config(arch, smoke=smoke)
+    extra = ARCH_TRAIN.get(canonical(arch), {})
+    if "param_dtype" in extra and not smoke:
+        cfg = cfg.with_overrides(param_dtype=extra["param_dtype"])
+    return cfg
+
+
+def _batch_struct(cfg: LMConfig, shape_kind: str, seq: int, batch: int
+                  ) -> Dict[str, jax.ShapeDtypeStruct]:
+    act = jnp.dtype(cfg.dtype)
+    toks = seq + 1 if shape_kind == "train" else seq
+    b: Dict[str, Any] = {
+        "tokens": jax.ShapeDtypeStruct((batch, toks), jnp.int32)}
+    if cfg.family == "encdec":
+        b["frames"] = jax.ShapeDtypeStruct(
+            (batch, cfg.enc_seq, cfg.d_model), act)
+    if cfg.family == "vlm":
+        b["patches"] = jax.ShapeDtypeStruct(
+            (batch, cfg.num_patches, cfg.d_model), act)
+    return b
+
+
+def build_cell(arch: str, shape_name: str, mesh, *,
+               seq_parallel: bool = False,
+               attn_impl: Optional[str] = None,
+               moe_alltoall: bool = False,
+               overrides: Optional[dict] = None):
+    """Returns (fn, args_tuple, info) for the dry-run of one cell."""
+    cfg = model_cfg_for(arch)
+    if attn_impl:
+        cfg = cfg.with_overrides(attn_impl=attn_impl)
+    if overrides:
+        cfg = cfg.with_overrides(**overrides)
+    sc = get_shape(shape_name)
+    sharding_ctx.set_policy(
+        shd.activation_specs(cfg, mesh, seq_parallel=seq_parallel))
+    if moe_alltoall and cfg.moe is not None:
+        from .mesh import batch_axes as _ba
+        sharding_ctx.set_shardmap_moe((mesh, _ba(mesh), "model"))
+    else:
+        sharding_ctx.set_shardmap_moe(None)
+
+    params_shape = jax.eval_shape(lambda k: init_params(cfg, k),
+                                  jax.ShapeDtypeStruct((2,), jnp.uint32))
+    params_sh = shd.param_shardings(cfg, mesh, params_shape,
+                                    moe_ep=moe_alltoall)
+    info = {"arch": arch, "shape": shape_name, "kind": sc.kind}
+
+    if sc.kind == "train":
+        tcfg = train_cfg_for(arch)
+        opt = get_optimizer(tcfg.optimizer)
+        lr_fn = warmup_cosine(tcfg.peak_lr, tcfg.warmup_steps,
+                              tcfg.total_steps)
+        step_fn = make_train_step(cfg, tcfg, opt, lr_fn)
+        state_shape = jax.eval_shape(
+            lambda p: init_state(cfg, tcfg, opt, p), params_shape)
+        state_sh = shd.state_shardings(cfg, mesh, state_shape, params_sh,
+                                       moe_ep=moe_alltoall)
+        state = _struct(state_shape, state_sh)
+        batch_shape = _batch_struct(cfg, "train", sc.seq_len,
+                                    sc.global_batch)
+        batch = _struct(batch_shape,
+                        shd.batch_shardings(cfg, mesh, batch_shape))
+        info["microbatches"] = tcfg.microbatches
+        return step_fn, (state, batch), info
+
+    params = _struct(params_shape, params_sh)
+    if sc.kind == "prefill":
+        max_len = sc.seq_len + (cfg.num_patches if cfg.family == "vlm" else 0)
+        cache_shape = jax.eval_shape(
+            lambda: init_cache(cfg, sc.global_batch, max_len))
+        cache = _struct(cache_shape,
+                        shd.cache_shardings(cfg, mesh, cache_shape))
+        batch_shape = _batch_struct(cfg, "prefill", sc.seq_len,
+                                    sc.global_batch)
+        batch = _struct(batch_shape,
+                        shd.batch_shardings(cfg, mesh, batch_shape))
+
+        def prefill_step(params, batch, cache):
+            return prefill(cfg, params, batch, cache)
+
+        return prefill_step, (params, batch, cache), info
+
+    # decode: one new token against a seq_len-deep cache
+    max_len = sc.seq_len + (cfg.num_patches if cfg.family == "vlm" else 0)
+    cache_shape = jax.eval_shape(
+        lambda: init_cache(cfg, sc.global_batch, max_len))
+    cache = _struct(cache_shape,
+                    shd.cache_shardings(cfg, mesh, cache_shape))
+    ba = shd._batch_spec(mesh, sc.global_batch)
+    tokens = jax.ShapeDtypeStruct(
+        (sc.global_batch,), jnp.int32,
+        sharding=NamedSharding(mesh, P(ba)))
+
+    def serve_step(params, tokens, cache):
+        return decode_step(cfg, params, tokens, cache)
+
+    return serve_step, (params, tokens, cache), info

@@ -1,0 +1,107 @@
+"""Training driver: ``python -m repro.launch.train --arch <id> ...``
+
+Runs end-to-end on whatever devices exist (CPU smoke / TPU pod): builds
+the model + sharded train step from the same specs the dry-run lowers,
+then drives the fault-tolerant loop (checkpoint/restart, straggler
+guard, heartbeat) from launch.cluster.
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced config (CPU-scale)")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--seq-len", type=int, default=256)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--optimizer", default=None)
+    ap.add_argument("--microbatches", type=int, default=None)
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--model-axis", type=int, default=1,
+                    help="TP axis size for the host mesh")
+    ap.add_argument("--log-every", type=int, default=10)
+    args = ap.parse_args()
+
+    import jax
+    import jax.numpy as jnp
+    from repro.configs import get_config
+    from repro.models import init_params
+    from repro.models import sharding_ctx
+    from repro.train import (TrainCfg, make_train_step, init_state,
+                             get_optimizer, warmup_cosine)
+    from repro.train import checkpoint as ckpt
+    from repro.data.tokens import TokenPipeline
+    from repro.launch.mesh import make_host_mesh
+    from repro.launch import sharding as shd
+    from repro.launch.cluster import run_resilient, Heartbeat, StepGuard
+    from repro.launch.specs import train_cfg_for, model_cfg_for
+
+    cfg = model_cfg_for(args.arch, smoke=args.smoke)
+    tcfg = train_cfg_for(args.arch)
+    if args.optimizer:
+        tcfg = type(tcfg)(**{**tcfg.__dict__, "optimizer": args.optimizer})
+    if args.microbatches:
+        tcfg = type(tcfg)(**{**tcfg.__dict__,
+                             "microbatches": args.microbatches})
+    tcfg = type(tcfg)(**{**tcfg.__dict__, "peak_lr": args.lr,
+                         "total_steps": args.steps,
+                         "warmup_steps": max(args.steps // 10, 1)})
+
+    mesh = make_host_mesh(args.model_axis)
+    sharding_ctx.set_policy(shd.activation_specs(cfg, mesh))
+    opt = get_optimizer(tcfg.optimizer)
+    lr_fn = warmup_cosine(tcfg.peak_lr, tcfg.warmup_steps, tcfg.total_steps)
+    step_fn = jax.jit(make_train_step(cfg, tcfg, opt, lr_fn))
+
+    pipe = TokenPipeline(cfg.vocab_size, args.seq_len, args.batch, seed=0)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    state = init_state(cfg, tcfg, opt, params)
+    if args.resume and ckpt.latest_step(args.ckpt_dir) is not None:
+        state, extra = ckpt.restore(args.ckpt_dir, state)
+        if "pipeline" in extra:
+            pipe = TokenPipeline.from_state(
+                cfg.vocab_size, args.seq_len, args.batch, extra["pipeline"])
+        print(f"resumed from step {int(state['step'])}")
+
+    hb = Heartbeat(args.ckpt_dir, host_id=jax.process_index())
+    t0 = time.time()
+    losses = []
+
+    def on_metrics(i, m):
+        hb.beat()
+        losses.append(float(m["loss"]))
+        if i % args.log_every == 0:
+            dt = time.time() - t0
+            toks = args.batch * args.seq_len * i
+            print(f"step {i:5d}  loss {float(m['loss']):.4f}  "
+                  f"lr {float(m['lr']):.2e}  grad_norm "
+                  f"{float(m['grad_norm']):.3f}  tok/s {toks / dt:,.0f}",
+                  flush=True)
+
+    def next_batch():
+        b = pipe.next_batch()
+        return {"tokens": jnp.asarray(b["tokens"])}
+
+    state, ran = run_resilient(
+        state, step_fn, next_batch, ckpt_dir=args.ckpt_dir,
+        num_steps=args.steps, ckpt_every=args.ckpt_every,
+        guard=StepGuard(factor=50.0),
+        pipeline_state=lambda: {"pipeline": pipe.state()},
+        on_metrics=on_metrics)
+    print(f"done: {ran} steps, final loss {losses[-1]:.4f} "
+          f"(first {losses[0]:.4f})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,5 @@
+"""Model zoo: 10 assigned architectures behind one pure-function API."""
+
+from .config import LMConfig, MoECfg
+from .lm import (init_params, forward, loss_fn, init_cache, prefill,
+                 decode_step, count_params, active_params, encode)

@@ -1,0 +1,450 @@
+"""Shared transformer building blocks (pure functions, params as dicts).
+
+Conventions
+-----------
+* Parameters are nested dicts of jnp arrays; a *stack* of layers holds the
+  same dict with a leading layer axis on every leaf (for ``lax.scan``).
+* Activations run in ``cfg.dtype`` (bf16 by default); norms/softmax in f32.
+* Attention has four execution paths (``cfg.attn_impl``):
+    direct -- full [Sq, Sk] logits; small sequences.
+    rect   -- lax.scan over KV chunks, online softmax. O(chunk) memory but
+              rectangular FLOPs (computes masked-out blocks).
+    tri    -- static block-pair schedule covering only the causal band:
+              exact triangular FLOPs (the beyond-paper hillclimb lever).
+    banded -- sliding-window band schedule: O(S * window) FLOPs for SWA /
+              gemma2-local layers; required for mixtral long-context.
+  ``auto`` picks direct for short seqs, banded when a window is set, and
+  rect otherwise (paper-faithful XLA baseline).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .config import LMConfig
+
+NEG_INF = -1e30
+
+
+# --------------------------------------------------------------------------
+# init helpers
+# --------------------------------------------------------------------------
+
+def dense_init(key, d_in: int, d_out: int, dtype=jnp.float32,
+               scale: Optional[float] = None) -> jnp.ndarray:
+    scale = scale if scale is not None else (1.0 / math.sqrt(d_in))
+    return (jax.random.normal(key, (d_in, d_out), jnp.float32) * scale
+            ).astype(dtype)
+
+
+def split(key, n: int):
+    return list(jax.random.split(key, n))
+
+
+# --------------------------------------------------------------------------
+# norms
+# --------------------------------------------------------------------------
+
+def rms_norm(x: jnp.ndarray, scale: jnp.ndarray, eps: float) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps) * (1.0 + scale.astype(jnp.float32))
+    return out.astype(x.dtype)
+
+
+def layer_norm(x: jnp.ndarray, scale: jnp.ndarray, bias: jnp.ndarray,
+               eps: float) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    out = (xf - mu) * jax.lax.rsqrt(var + eps)
+    out = out * scale.astype(jnp.float32) + bias.astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+def norm_params(cfg: LMConfig) -> dict:
+    if cfg.norm == "rms":
+        return {"scale": jnp.zeros((cfg.d_model,), jnp.float32)}
+    return {"scale": jnp.ones((cfg.d_model,), jnp.float32),
+            "bias": jnp.zeros((cfg.d_model,), jnp.float32)}
+
+
+def apply_norm(cfg: LMConfig, p: dict, x: jnp.ndarray) -> jnp.ndarray:
+    if cfg.norm == "rms":
+        return rms_norm(x, p["scale"], cfg.norm_eps)
+    return layer_norm(x, p["scale"], p["bias"], cfg.norm_eps)
+
+
+# --------------------------------------------------------------------------
+# RoPE
+# --------------------------------------------------------------------------
+
+def rope_freqs(cfg: LMConfig) -> jnp.ndarray:
+    rot = int(cfg.head_dim * cfg.rope_fraction) // 2 * 2
+    return 1.0 / (cfg.rope_theta ** (
+        jnp.arange(0, rot, 2, dtype=jnp.float32) / rot))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray,
+               freqs: jnp.ndarray) -> jnp.ndarray:
+    """x: [B, S, H, D]; positions: [B, S] (or [S]); rotate first 2*|freqs| dims."""
+    rot = 2 * freqs.shape[0]
+    if positions.ndim == 1:
+        positions = positions[None, :]
+    ang = positions[..., None].astype(jnp.float32) * freqs  # [B, S, rot/2]
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    xr, xp = x[..., :rot], x[..., rot:]
+    x1, x2 = xr[..., ::2], xr[..., 1::2]
+    y1 = x1 * cos - x2 * sin
+    y2 = x2 * cos + x1 * sin
+    yr = jnp.stack([y1, y2], axis=-1).reshape(xr.shape)
+    return jnp.concatenate([yr.astype(x.dtype), xp], axis=-1)
+
+
+# --------------------------------------------------------------------------
+# attention cores (all take q [B, H, Sq, D], k/v [B, H, Sk, D])
+# --------------------------------------------------------------------------
+
+def _mask_logits(logits, qpos, kpos, causal, window, sk_valid=None):
+    mask = jnp.ones(logits.shape[-2:], bool)
+    if causal:
+        mask = mask & (kpos <= qpos)
+    if window is not None:
+        mask = mask & ((qpos - kpos) < window)
+    if sk_valid is not None:
+        mask = mask & sk_valid
+    return jnp.where(mask[None, None], logits, NEG_INF)
+
+
+def _soft_cap(logits, cap):
+    if cap is None:
+        return logits
+    return jnp.tanh(logits / cap) * cap
+
+
+def attn_direct(q, k, v, *, causal, window, softcap, scale, q_offset=0,
+                logit_dtype=jnp.float32):
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q, k,
+                        preferred_element_type=logit_dtype
+                        ).astype(jnp.float32) * scale
+    logits = _soft_cap(logits, softcap)
+    Sq, Sk = q.shape[2], k.shape[2]
+    qpos = jnp.arange(Sq)[:, None] + q_offset
+    kpos = jnp.arange(Sk)[None, :]
+    logits = _mask_logits(logits, qpos, kpos, causal, window)
+    p = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, v)
+
+
+def attn_rect(q, k, v, *, causal, window, softcap, scale, chunk, q_offset=0,
+              logit_dtype=jnp.float32):
+    """Online-softmax scan over KV chunks (flash semantics, jnp)."""
+    B, H, Sq, D = q.shape
+    Sk = k.shape[2]
+    nc = Sk // chunk
+    kc = k.reshape(B, H, nc, chunk, D).transpose(2, 0, 1, 3, 4)
+    vc = v.reshape(B, H, nc, chunk, D).transpose(2, 0, 1, 3, 4)
+    qpos = jnp.arange(Sq)[:, None] + q_offset
+
+    def step(carry, inp):
+        m, l, acc = carry
+        j, kj, vj = inp
+        logits = jnp.einsum("bhqd,bhkd->bhqk", q, kj,
+                            preferred_element_type=logit_dtype
+                            ).astype(jnp.float32) * scale
+        logits = _soft_cap(logits, softcap)
+        kpos = j * chunk + jnp.arange(chunk)[None, :]
+        logits = _mask_logits(logits, qpos, kpos, causal, window)
+        m_new = jnp.maximum(m, logits.max(-1, keepdims=True))
+        p = jnp.exp(logits - m_new)
+        alpha = jnp.exp(m - m_new)
+        l = l * alpha + p.sum(-1, keepdims=True)
+        acc = acc * alpha + jnp.einsum(
+            "bhqk,bhkd->bhqd", p.astype(vj.dtype), vj).astype(jnp.float32)
+        return (m_new, l, acc), None
+
+    init = (jnp.full((B, H, Sq, 1), NEG_INF, jnp.float32),
+            jnp.zeros((B, H, Sq, 1), jnp.float32),
+            jnp.zeros((B, H, Sq, D), jnp.float32))
+    (m, l, acc), _ = jax.lax.scan(
+        step, init, (jnp.arange(nc), kc, vc))
+    return (acc / jnp.maximum(l, 1e-30)).astype(q.dtype)
+
+
+def attn_tri(q, k, v, *, causal, softcap, scale, chunk, q_offset=0,
+             logit_dtype=jnp.float32):
+    """Causal attention over the static lower-triangular block schedule.
+
+    Exact triangular FLOPs: scans a flat list of (qi, kj) block pairs with
+    kj <= qi (assumes q/k aligned: q_offset == Sk - Sq and both chunked the
+    same).  Beyond-paper optimization lever for §Perf.
+    """
+    B, H, Sq, D = q.shape
+    Sk = k.shape[2]
+    nq, nk = Sq // chunk, Sk // chunk
+    shift = (Sk - Sq) // chunk        # q block i aligns to k block i+shift
+    pairs = [(i, j) for i in range(nq) for j in range(nk)
+             if j <= i + shift]
+    pairs = jnp.asarray(pairs, jnp.int32)            # [P, 2]
+    qc = q.reshape(B, H, nq, chunk, D)
+    kc = k.reshape(B, H, nk, chunk, D)
+    vc = v.reshape(B, H, nk, chunk, D)
+
+    def step(carry, pair):
+        m, l, acc = carry              # [nq, B, H, chunk, 1/D]
+        i, j = pair[0], pair[1]
+        qi = jax.lax.dynamic_index_in_dim(qc, i, 2, keepdims=False)
+        kj = jax.lax.dynamic_index_in_dim(kc, j, 2, keepdims=False)
+        vj = jax.lax.dynamic_index_in_dim(vc, j, 2, keepdims=False)
+        logits = jnp.einsum("bhqd,bhkd->bhqk", qi, kj,
+                            preferred_element_type=logit_dtype
+                            ).astype(jnp.float32) * scale
+        logits = _soft_cap(logits, softcap)
+        qpos = i * chunk + jnp.arange(chunk)[:, None] + q_offset
+        kpos = j * chunk + jnp.arange(chunk)[None, :]
+        logits = jnp.where((kpos <= qpos)[None, None], logits, NEG_INF)
+        mi = jax.lax.dynamic_index_in_dim(m, i, 0, keepdims=False)
+        li = jax.lax.dynamic_index_in_dim(l, i, 0, keepdims=False)
+        ai = jax.lax.dynamic_index_in_dim(acc, i, 0, keepdims=False)
+        m_new = jnp.maximum(mi, logits.max(-1, keepdims=True))
+        p = jnp.exp(logits - m_new)
+        alpha = jnp.exp(mi - m_new)
+        li = li * alpha + p.sum(-1, keepdims=True)
+        ai = ai * alpha + jnp.einsum("bhqk,bhkd->bhqd",
+                                     p.astype(vj.dtype), vj)
+        m = jax.lax.dynamic_update_index_in_dim(m, m_new, i, 0)
+        l = jax.lax.dynamic_update_index_in_dim(l, li, i, 0)
+        acc = jax.lax.dynamic_update_index_in_dim(acc, ai, i, 0)
+        return (m, l, acc), None
+
+    init = (jnp.full((nq, B, H, chunk, 1), NEG_INF, jnp.float32),
+            jnp.zeros((nq, B, H, chunk, 1), jnp.float32),
+            jnp.zeros((nq, B, H, chunk, D), jnp.float32))
+    (m, l, acc), _ = jax.lax.scan(step, init, pairs)
+    out = acc / jnp.maximum(l, 1e-30)                # [nq, B, H, chunk, D]
+    return out.transpose(1, 2, 0, 3, 4).reshape(B, H, Sq, D).astype(q.dtype)
+
+
+def attn_banded(q, k, v, *, window, softcap, scale, chunk, q_offset=0,
+                logit_dtype=jnp.float32):
+    """Sliding-window attention over the static band schedule.
+
+    For each q block, gathers the fixed-width KV band [start, start + W')
+    with W' = window rounded up to a chunk multiple plus one chunk; masks
+    exactly. FLOPs O(Sq * (window + chunk)) -- sub-quadratic in S.
+    """
+    B, H, Sq, D = q.shape
+    Sk = k.shape[2]
+    nq = Sq // chunk
+    band = min(((window + chunk - 1) // chunk + 1) * chunk, Sk)
+    qc = q.reshape(B, H, nq, chunk, D)
+
+    def per_block(i):
+        qi = qc[:, :, i]
+        q_lo = i * chunk + q_offset
+        start = jnp.clip(q_lo + chunk - 1 - (band - 1), 0, Sk - band)
+        kj = jax.lax.dynamic_slice_in_dim(k, start, band, axis=2)
+        vj = jax.lax.dynamic_slice_in_dim(v, start, band, axis=2)
+        logits = jnp.einsum("bhqd,bhkd->bhqk", qi, kj,
+                            preferred_element_type=logit_dtype
+                            ).astype(jnp.float32) * scale
+        logits = _soft_cap(logits, softcap)
+        qpos = q_lo + jnp.arange(chunk)[:, None]
+        kpos = start + jnp.arange(band)[None, :]
+        logits = _mask_logits(logits, qpos, kpos, True, window)
+        p = jax.nn.softmax(logits, axis=-1).astype(vj.dtype)
+        return jnp.einsum("bhqk,bhkd->bhqd", p, vj)
+
+    out = jax.lax.map(per_block, jnp.arange(nq))     # [nq, B, H, chunk, D]
+    return out.transpose(1, 2, 0, 3, 4).reshape(B, H, Sq, D)
+
+
+def attention(q, k, v, *, causal=True, window=None, softcap=None,
+              scale=None, impl="auto", chunk=1024, q_offset=None,
+              logit_dtype=jnp.float32):
+    """Dispatch across attention paths. q/k/v: [B, H, S, D]."""
+    B, H, Sq, D = q.shape
+    Sk = k.shape[2]
+    if scale is None:
+        scale = D ** -0.5
+    if q_offset is None:
+        q_offset = Sk - Sq
+    if impl == "auto":
+        if Sq == 1 or Sk <= 2 * chunk:
+            impl = "direct"
+        elif window is not None and window < Sk:
+            impl = "banded"
+        else:
+            impl = "rect"
+    ld = jnp.dtype(logit_dtype)
+    if impl == "direct" or Sk < chunk or Sk % chunk:
+        return attn_direct(q, k, v, causal=causal, window=window,
+                           softcap=softcap, scale=scale, q_offset=q_offset,
+                           logit_dtype=ld)
+    if impl == "banded" and window is not None:
+        return attn_banded(q, k, v, window=window, softcap=softcap,
+                           scale=scale, chunk=chunk, q_offset=q_offset,
+                           logit_dtype=ld)
+    if impl == "tri" and causal and Sq % chunk == 0:
+        return attn_tri(q, k, v, causal=causal, softcap=softcap,
+                        scale=scale, chunk=chunk, q_offset=q_offset,
+                        logit_dtype=ld)
+    return attn_rect(q, k, v, causal=causal, window=window, softcap=softcap,
+                     scale=scale, chunk=chunk, q_offset=q_offset,
+                     logit_dtype=ld)
+
+
+# --------------------------------------------------------------------------
+# GQA attention layer (params + forward incl. KV cache)
+# --------------------------------------------------------------------------
+
+def attn_params(cfg: LMConfig, key) -> dict:
+    ks = split(key, 4)
+    d, H, KV, Dh = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    pd = jnp.dtype(cfg.param_dtype)
+    p = {
+        "wq": dense_init(ks[0], d, H * Dh, pd),
+        "wk": dense_init(ks[1], d, KV * Dh, pd),
+        "wv": dense_init(ks[2], d, KV * Dh, pd),
+        "wo": dense_init(ks[3], H * Dh, d, pd),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((H * Dh,), pd)
+        p["bk"] = jnp.zeros((KV * Dh,), pd)
+        p["bv"] = jnp.zeros((KV * Dh,), pd)
+    return p
+
+
+def _project_qkv(cfg: LMConfig, p: dict, x: jnp.ndarray):
+    B, S, _ = x.shape
+    H, KV, Dh = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    q = x @ p["wq"].astype(x.dtype)
+    k = x @ p["wk"].astype(x.dtype)
+    v = x @ p["wv"].astype(x.dtype)
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(x.dtype)
+        k = k + p["bk"].astype(x.dtype)
+        v = v + p["bv"].astype(x.dtype)
+    return (q.reshape(B, S, H, Dh), k.reshape(B, S, KV, Dh),
+            v.reshape(B, S, KV, Dh))
+
+
+def _broadcast_kv(k: jnp.ndarray, q_per_kv: int) -> jnp.ndarray:
+    """[B, KV, S, D] -> [B, KV*q_per_kv, S, D]."""
+    if q_per_kv == 1:
+        return k
+    B, KV, S, D = k.shape
+    return jnp.broadcast_to(k[:, :, None], (B, KV, q_per_kv, S, D)
+                            ).reshape(B, KV * q_per_kv, S, D)
+
+
+def attn_forward(cfg: LMConfig, p: dict, x: jnp.ndarray, freqs: jnp.ndarray,
+                 *, window: Optional[int], cache: Optional[dict] = None,
+                 positions: Optional[jnp.ndarray] = None) -> tuple:
+    """Self-attention with optional KV cache.
+
+    cache (decode): {"k": [B, KV, S_cache, Dh], "v": same, "pos": [] int32}.
+    If ``window`` is set the cache is a ring buffer of size min(S_cache,
+    window rounded to S_cache).  Returns (out [B, S, d], new_cache).
+    """
+    B, S, _ = x.shape
+    q, k, v = _project_qkv(cfg, p, x)
+    if positions is None:
+        if cache is not None:
+            positions = cache["pos"] + jnp.arange(S)[None, :]
+        else:
+            positions = jnp.arange(S)[None, :]
+    q = apply_rope(q, positions, freqs)
+    k = apply_rope(k, positions, freqs)
+    q = q.transpose(0, 2, 1, 3)         # [B, H, S, Dh]
+    k = k.transpose(0, 2, 1, 3)
+    v = v.transpose(0, 2, 1, 3)
+
+    new_cache = None
+    if cache is not None:
+        # Cache layout: when ``window`` is set the cache was allocated as a
+        # ring buffer with S_c <= window entries (init_cache), so every
+        # live entry is inside the window by construction and only a
+        # validity mask is needed.  RoPE is applied pre-cache with absolute
+        # positions, so ring rotation does not disturb relative phases.
+        S_c = cache["k"].shape[2]
+        ring = window is not None
+        if S == 1:
+            slot = (cache["pos"] % S_c) if ring else cache["pos"]
+            ck = jax.lax.dynamic_update_slice_in_dim(cache["k"], k, slot, axis=2)
+            cv = jax.lax.dynamic_update_slice_in_dim(cache["v"], v, slot, axis=2)
+        else:                       # prefill into an empty cache
+            if S >= S_c:            # keep the trailing window
+                ck = k[:, :, S - S_c:]
+                cv = v[:, :, S - S_c:]
+            else:
+                ck = jax.lax.dynamic_update_slice_in_dim(cache["k"], k, 0, axis=2)
+                cv = jax.lax.dynamic_update_slice_in_dim(cache["v"], v, 0, axis=2)
+        new_cache = {"k": ck, "v": cv, "pos": cache["pos"] + S}
+        if S == 1:
+            # decode: attend over the valid cached prefix
+            kk = _broadcast_kv(ck, cfg.q_per_kv)
+            vv = _broadcast_kv(cv, cfg.q_per_kv)
+            idx = jnp.arange(S_c)
+            valid = (idx <= cache["pos"]) | (cache["pos"] >= S_c)
+            out = _masked_decode_attn(cfg, q, kk, vv, valid,
+                                      softcap=cfg.attn_softcap)
+        else:
+            kk = _broadcast_kv(k, cfg.q_per_kv)
+            vv = _broadcast_kv(v, cfg.q_per_kv)
+            out = attention(q, kk, vv, causal=True, window=window,
+                            softcap=cfg.attn_softcap, impl=cfg.attn_impl,
+                            chunk=cfg.attn_chunk,
+                            logit_dtype=cfg.logit_dtype)
+    else:
+        kk = _broadcast_kv(k, cfg.q_per_kv)
+        vv = _broadcast_kv(v, cfg.q_per_kv)
+        out = attention(q, kk, vv, causal=True, window=window,
+                        softcap=cfg.attn_softcap, impl=cfg.attn_impl,
+                        chunk=cfg.attn_chunk, logit_dtype=cfg.logit_dtype)
+
+    out = out.transpose(0, 2, 1, 3).reshape(B, S, -1)
+    return out @ p["wo"].astype(out.dtype), new_cache
+
+
+def _masked_decode_attn(cfg, q, k, v, valid, softcap=None):
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q, k,
+                        preferred_element_type=jnp.float32) * cfg.head_dim ** -0.5
+    logits = _soft_cap(logits, softcap)
+    logits = jnp.where(valid[None, None, None, :], logits, NEG_INF)
+    p = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, v)
+
+
+# --------------------------------------------------------------------------
+# MLP
+# --------------------------------------------------------------------------
+
+def mlp_params(cfg: LMConfig, key, d_ff: Optional[int] = None) -> dict:
+    ff = d_ff or cfg.d_ff
+    d = cfg.d_model
+    pd = jnp.dtype(cfg.param_dtype)
+    if cfg.mlp_kind == "glu":
+        k1, k2, k3 = split(key, 3)
+        return {"w_gate": dense_init(k1, d, ff, pd),
+                "w_up": dense_init(k2, d, ff, pd),
+                "w_down": dense_init(k3, ff, d, pd)}
+    k1, k2 = split(key, 2)
+    return {"w_up": dense_init(k1, d, ff, pd),
+            "w_down": dense_init(k2, ff, d, pd)}
+
+
+def mlp_forward(cfg: LMConfig, p: dict, x: jnp.ndarray) -> jnp.ndarray:
+    act = jax.nn.silu if cfg.act == "silu" else jax.nn.gelu
+    if cfg.mlp_kind == "glu":
+        h = act(x @ p["w_gate"].astype(x.dtype)) * (x @ p["w_up"].astype(x.dtype))
+    else:
+        h = act(x @ p["w_up"].astype(x.dtype))
+    return h @ p["w_down"].astype(x.dtype)

@@ -1,0 +1,243 @@
+"""Unified LM: init / forward / loss / cache / decode for every family.
+
+Public surface used by the launcher, examples, and tests:
+
+  init_params(cfg, key)                 -> params pytree
+  forward(cfg, params, batch)           -> (hidden, aux) training forward
+  loss_fn(cfg, params, batch)           -> (loss, metrics) chunked CE
+  init_cache(cfg, batch, max_len, ...)  -> decode cache
+  prefill(cfg, params, batch, cache)    -> (last logits, cache)
+  decode_step(cfg, params, tokens, cache) -> (logits, cache)
+  count_params(cfg)                     -> exact param count (eval_shape)
+
+Batch dict keys: "tokens" [B, S+1] int32 always; "frames" [B, T, d]
+(whisper stub frontend); "patches" [B, P, d] (internvl stub frontend).
+"""
+
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .config import LMConfig
+from . import layers as L
+from .transformer import (group_layout, num_groups, stack_params,
+                          stack_forward, block_params, init_block_cache)
+from .sharding_ctx import constrain
+
+
+# --------------------------------------------------------------------------
+# params
+# --------------------------------------------------------------------------
+
+def init_params(cfg: LMConfig, key) -> dict:
+    ks = L.split(key, 6)
+    pd = jnp.dtype(cfg.param_dtype)
+    layout = group_layout(cfg)
+    G = num_groups(cfg)
+    p = {
+        "embed": (jax.random.normal(ks[0], (cfg.vocab_size, cfg.d_model),
+                                    jnp.float32) * 0.02).astype(pd),
+        "blocks": stack_params(cfg, ks[1], layout, G),
+        "ln_f": L.norm_params(cfg),
+    }
+    if not cfg.tie_embeddings:
+        p["head"] = L.dense_init(ks[2], cfg.d_model, cfg.vocab_size, pd)
+    if cfg.family == "hybrid":
+        p["shared"] = block_params(cfg, "attn:full", ks[3])
+    if cfg.family == "encdec":
+        p["enc_blocks"] = stack_params(cfg, ks[4], ("enc_attn",),
+                                       cfg.enc_layers)
+        p["ln_enc"] = L.norm_params(cfg)
+    return p
+
+
+def count_params(cfg: LMConfig) -> int:
+    shapes = jax.eval_shape(lambda k: init_params(cfg, k),
+                            jax.random.PRNGKey(0))
+    return sum(int(np.prod(l.shape))
+               for l in jax.tree_util.tree_leaves(shapes))
+
+
+def active_params(cfg: LMConfig) -> int:
+    """Params touched per token (MoE: top-k experts only)."""
+    total = count_params(cfg)
+    if cfg.moe is None:
+        return total
+    m = cfg.moe
+    per_expert = (3 if cfg.mlp_kind == "glu" else 2) * cfg.d_model * m.d_ff
+    inactive = cfg.num_layers * (m.num_experts - m.top_k) * per_expert
+    return total - inactive
+
+
+# --------------------------------------------------------------------------
+# embedding / head
+# --------------------------------------------------------------------------
+
+def embed(cfg: LMConfig, params: dict, tokens: jnp.ndarray) -> jnp.ndarray:
+    x = params["embed"][tokens].astype(jnp.dtype(cfg.dtype))
+    if cfg.scale_embed:
+        x = x * jnp.asarray(math.sqrt(cfg.d_model), x.dtype)
+    return constrain(x, "btd")
+
+
+def unembed_weights(cfg: LMConfig, params: dict) -> jnp.ndarray:
+    if cfg.tie_embeddings:
+        return params["embed"].T
+    return params["head"]
+
+
+def logits_for(cfg: LMConfig, params: dict, h: jnp.ndarray) -> jnp.ndarray:
+    w = unembed_weights(cfg, params).astype(h.dtype)
+    # logit *buffer* in cfg.logit_dtype (perf lever); softcap/CE math in f32
+    logits = jnp.einsum("...d,dv->...v", h, w,
+                        preferred_element_type=jnp.dtype(cfg.logit_dtype)
+                        ).astype(jnp.float32)
+    if cfg.logit_softcap is not None:
+        logits = jnp.tanh(logits / cfg.logit_softcap) * cfg.logit_softcap
+    return constrain(logits, "btv")
+
+
+# --------------------------------------------------------------------------
+# forward (training / prefill trunk)
+# --------------------------------------------------------------------------
+
+def _frontend(cfg: LMConfig, params: dict, batch: dict) -> jnp.ndarray:
+    """Token (+stub modality) embedding -> [B, S_total, d]."""
+    tokens = batch["tokens"]
+    x = embed(cfg, params, tokens)
+    if cfg.family == "vlm" and "patches" in batch:
+        patches = batch["patches"].astype(x.dtype)      # [B, P, d] stub
+        x = jnp.concatenate([patches, x], axis=1)
+    return x
+
+
+def encode(cfg: LMConfig, params: dict, frames: jnp.ndarray) -> jnp.ndarray:
+    """Whisper encoder over (stub) audio frame embeddings [B, T, d]."""
+    x = frames.astype(jnp.dtype(cfg.dtype))
+    x, _, _ = stack_forward(cfg, params["enc_blocks"], x, ("enc_attn",))
+    return L.apply_norm(cfg, params["ln_enc"], x)
+
+
+def forward(cfg: LMConfig, params: dict, batch: dict,
+            cache: Optional[dict] = None):
+    """Trunk forward. Returns (hidden [B, S, d], new_cache, aux)."""
+    x = _frontend(cfg, params, batch)
+    enc_out = None
+    if cfg.family == "encdec" and "frames" in batch:
+        enc_out = encode(cfg, params, batch["frames"])
+    shared = params.get("shared")
+    x, new_cache, aux = stack_forward(
+        cfg, params["blocks"], x, group_layout(cfg),
+        cache=cache, shared=shared, enc_out=enc_out)
+    x = L.apply_norm(cfg, params["ln_f"], x)
+    return x, new_cache, aux
+
+
+# --------------------------------------------------------------------------
+# loss (chunked CE; never materializes [B, S, V])
+# --------------------------------------------------------------------------
+
+def _ce_chunk(cfg, params, h, labels, mask):
+    logits = logits_for(cfg, params, h)                  # [B, C, V] f32
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    tgt = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = (lse - tgt) * mask
+    return nll.sum(), mask.sum()
+
+
+def loss_fn(cfg: LMConfig, params: dict, batch: dict):
+    """Next-token CE. tokens [B, S+1]; optional loss_mask [B, S]."""
+    tokens = batch["tokens"]
+    inputs = {**batch, "tokens": tokens[:, :-1]}
+    labels = tokens[:, 1:]
+    mask = batch.get("loss_mask")
+    if mask is None:
+        mask = jnp.ones(labels.shape, jnp.float32)
+    h, _, aux = forward(cfg, params, inputs)
+    if cfg.family == "vlm" and "patches" in batch:
+        h = h[:, batch["patches"].shape[1]:]             # text positions only
+    B, S, _ = h.shape
+    C = min(cfg.ce_chunk, S)
+    if S % C == 0 and S > C:
+        nc = S // C
+        hs = h.reshape(B, nc, C, -1).swapaxes(0, 1)
+        ls = labels.reshape(B, nc, C).swapaxes(0, 1)
+        ms = mask.reshape(B, nc, C).swapaxes(0, 1)
+
+        def step(carry, inp):
+            tot, cnt = carry
+            s, c = _ce_chunk(cfg, params, inp[0], inp[1], inp[2])
+            return (tot + s, cnt + c), None
+
+        (tot, cnt), _ = jax.lax.scan(
+            step, (jnp.zeros(()), jnp.zeros(())), (hs, ls, ms))
+    else:
+        tot, cnt = _ce_chunk(cfg, params, h, labels, mask)
+    loss = tot / jnp.maximum(cnt, 1.0)
+    metrics = {"ce": loss, "aux": aux, "tokens": cnt}
+    return loss + aux, metrics
+
+
+# --------------------------------------------------------------------------
+# decode
+# --------------------------------------------------------------------------
+
+def init_cache(cfg: LMConfig, batch: int, max_len: int) -> dict:
+    dtype = jnp.dtype(cfg.dtype)
+    layout = group_layout(cfg)
+    G = num_groups(cfg)
+
+    def one(kind):
+        c = init_block_cache(cfg, kind, batch, max_len, dtype)
+        return jax.tree.map(
+            lambda a: jnp.broadcast_to(a, (G,) + a.shape), c)
+
+    return {"pos": jnp.zeros((), jnp.int32),
+            "slots": tuple(one(k) for k in layout)}
+
+
+def prefill(cfg: LMConfig, params: dict, batch: dict, cache: dict):
+    """Run the prompt through the trunk, filling the cache.
+
+    Returns (logits of the last position [B, V], cache).
+    """
+    if cfg.family == "encdec":
+        cache = _fill_cross_kv(cfg, params, batch["frames"], cache)
+        batch = {k: v for k, v in batch.items() if k != "frames"}
+    h, cache, _ = forward(cfg, params, batch, cache=cache)
+    logits = logits_for(cfg, params, h[:, -1:])[:, 0]
+    return logits, cache
+
+
+def _fill_cross_kv(cfg: LMConfig, params: dict, frames, cache):
+    enc_out = encode(cfg, params, frames)
+    KV, Dh = cfg.num_kv_heads, cfg.head_dim
+
+    def per_group(gp, slot):
+        p = gp["xattn"]
+        B = enc_out.shape[0]
+        k = (enc_out @ p["wk"].astype(enc_out.dtype)).reshape(B, -1, KV, Dh)
+        v = (enc_out @ p["wv"].astype(enc_out.dtype)).reshape(B, -1, KV, Dh)
+        slot = dict(slot)
+        slot["xk"] = k.transpose(0, 2, 1, 3)
+        slot["xv"] = v.transpose(0, 2, 1, 3)
+        return slot
+
+    slots = list(cache["slots"])
+    slots[0] = jax.vmap(per_group)(params["blocks"][0], slots[0])
+    return {**cache, "slots": tuple(slots)}
+
+
+def decode_step(cfg: LMConfig, params: dict, tokens: jnp.ndarray,
+                cache: dict):
+    """One decode step. tokens [B] -> (logits [B, V], new cache)."""
+    batch = {"tokens": tokens[:, None]}
+    h, cache, _ = forward(cfg, params, batch, cache=cache)
+    logits = logits_for(cfg, params, h)[:, 0]
+    return logits, cache

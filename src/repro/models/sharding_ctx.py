@@ -1,0 +1,56 @@
+"""Activation-sharding context.
+
+The model code is mesh-agnostic: it calls ``constrain(x, tag)`` at the
+few points where GSPMD needs a nudge (residual stream, attention heads,
+MoE expert buffers, logit chunks).  The launcher installs a tag ->
+PartitionSpec mapping before tracing; on CPU / in unit tests the mapping
+is empty and ``constrain`` is the identity.
+"""
+
+from __future__ import annotations
+
+import contextlib
+from typing import Dict, Optional
+
+import jax
+from jax.sharding import PartitionSpec
+
+_SPECS: Dict[str, PartitionSpec] = {}
+_SHARDMAP_MOE = None      # (mesh, batch_axes tuple, model_axis name) | None
+
+
+def set_policy(specs: Optional[Dict[str, PartitionSpec]]) -> None:
+    global _SPECS
+    _SPECS = dict(specs or {})
+
+
+def set_shardmap_moe(ctx) -> None:
+    """Enable the manual-SPMD MoE path: ctx = (mesh, batch_axes,
+    model_axis) or None to disable."""
+    global _SHARDMAP_MOE
+    _SHARDMAP_MOE = ctx
+
+
+def get_shardmap_moe():
+    return _SHARDMAP_MOE
+
+
+def get_policy() -> Dict[str, PartitionSpec]:
+    return dict(_SPECS)
+
+
+@contextlib.contextmanager
+def policy(specs: Optional[Dict[str, PartitionSpec]]):
+    old = get_policy()
+    set_policy(specs)
+    try:
+        yield
+    finally:
+        set_policy(old)
+
+
+def constrain(x: jax.Array, tag: str) -> jax.Array:
+    spec = _SPECS.get(tag)
+    if spec is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, spec)

@@ -1,0 +1,176 @@
+"""Mamba2 (SSD) blocks for the zamba2 hybrid backbone.
+
+State-space recurrence with scalar-per-head decay:
+
+    h_t = exp(dt_t * A_h) h_{t-1} + (dt_t * B_t) (x) x_t
+    y_t = C_t . h_t + D_h * x_t
+
+evaluated chunkwise (the SSD algorithm): scalar decays make the
+intra-chunk term a [C, C] masked score matrix per head -- exp of log-decay
+*differences*, so no overflow.  A ``lax.scan`` carries the
+[B, H, d_state, d_head] state across chunks; decode is the O(1) update.
+
+``mamba_sequential`` is the exact oracle used by the tests.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import LMConfig
+from .layers import dense_init, split, rms_norm
+
+NEG_INF = -1e30
+
+
+def mamba_params(cfg: LMConfig, key) -> dict:
+    d = cfg.d_model
+    di = cfg.d_inner
+    ns = cfg.ssm_state
+    nh = cfg.n_ssm_heads
+    pd = jnp.dtype(cfg.param_dtype)
+    ks = split(key, 4)
+    conv_ch = di + 2 * ns
+    return {
+        # in_proj -> [z, xc, B, C, dt]
+        "w_in": dense_init(ks[0], d, 2 * di + 2 * ns + nh, pd),
+        "conv_w": (jax.random.normal(ks[1], (cfg.conv_width, conv_ch),
+                                     jnp.float32) * 0.1).astype(pd),
+        "conv_b": jnp.zeros((conv_ch,), pd),
+        "a_log": jnp.zeros((nh,), jnp.float32),       # A = -exp(a_log)
+        "dt_bias": jnp.full((nh,), -2.0, jnp.float32),
+        "d_skip": jnp.ones((nh,), jnp.float32),
+        "w_out": dense_init(ks[2], di, d, pd),
+        "gn_scale": jnp.ones((di,), pd),              # gated RMSNorm
+    }
+
+
+def _causal_conv(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray,
+                 state: Optional[jnp.ndarray] = None):
+    """Depthwise causal conv. x: [B, S, ch], w: [W, ch].
+
+    state (decode): [B, W-1, ch] trailing inputs. Returns (y, new_state).
+    """
+    B, S, ch = x.shape
+    W = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((B, W - 1, ch), x.dtype)
+    else:
+        pad = state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)            # [B, S+W-1, ch]
+    y = sum(xp[:, i:i + S] * w[i].astype(x.dtype) for i in range(W))
+    y = y + b.astype(x.dtype)
+    new_state = xp[:, -(W - 1):] if state is not None else None
+    return y, new_state
+
+
+def _ssd_chunk(xh, Bm, Cm, dt, la, state, score_dtype=jnp.float32):
+    """One SSD chunk.
+
+    xh: [B, C, H, P] values; Bm/Cm: [B, C, N] in/out mix; dt: [B, C, H];
+    la: [B, C, H] log decay (<0); state: [B, H, N, P].
+    ``score_dtype``: buffer dtype of the [B, C, C, H] score tensor -- the
+    chunk's dominant HBM traffic; math stays f32 inside the fusion.
+    Returns (y [B, C, H, P], new state).
+    """
+    L = jnp.cumsum(la, axis=1)                        # [B, C, H] inclusive
+    # intra-chunk: scores[t,s] = exp(L_t - L_s) * (C_t.B_s) * dt_s, s <= t
+    diff = L[:, :, None, :] - L[:, None, :, :]        # [B, C, C, H]
+    C_len = xh.shape[1]
+    mask = jnp.tril(jnp.ones((C_len, C_len), bool))
+    diff = jnp.where(mask[None, :, :, None], diff, NEG_INF)
+    cb = jnp.einsum("btn,bsn->bts", Cm, Bm)           # [B, C, C]
+    scores = (jnp.exp(diff) * cb[..., None] * dt[:, None, :, :]
+              ).astype(score_dtype)
+    y = jnp.einsum("btsh,bshp->bthp", scores, xh.astype(score_dtype),
+                   preferred_element_type=jnp.float32)
+    # inter-chunk: y += exp(L_t) C_t . h0
+    y = y + jnp.einsum("bth,btn,bhnp->bthp", jnp.exp(L), Cm, state)
+    # state update
+    decay_all = jnp.exp(L[:, -1])                     # [B, H]
+    rem = jnp.exp(L[:, -1][:, None] - L)              # [B, C, H]
+    upd = jnp.einsum("bsh,bsn,bshp->bhnp", rem * dt, Bm, xh)
+    new_state = state * decay_all[:, :, None, None] + upd
+    return y, new_state
+
+
+def mamba_forward(cfg: LMConfig, p: dict, x: jnp.ndarray,
+                  state: Optional[dict] = None
+                  ) -> Tuple[jnp.ndarray, Optional[dict]]:
+    """x: [B, S, d]. state (decode): {"ssm": [B, H, N, P], "conv": [B, W-1, ch]}."""
+    B, S, d = x.shape
+    di, ns, nh = cfg.d_inner, cfg.ssm_state, cfg.n_ssm_heads
+    P = di // nh
+    proj = x @ p["w_in"].astype(x.dtype)
+    z, xc, Bm, Cm, dt = jnp.split(
+        proj, [di, 2 * di, 2 * di + ns, 2 * di + 2 * ns], axis=-1)
+    conv_in = jnp.concatenate([xc, Bm, Cm], axis=-1)
+    conv_out, new_conv = _causal_conv(
+        conv_in, p["conv_w"], p["conv_b"],
+        state["conv"] if state is not None else None)
+    conv_out = jax.nn.silu(conv_out)
+    xc, Bm, Cm = jnp.split(conv_out, [di, di + ns], axis=-1)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])   # [B, S, H]
+    A = -jnp.exp(p["a_log"])                                      # [H] < 0
+    la = jnp.clip(dt * A[None, None, :], -30.0, -1e-6)            # log decay
+    xh = xc.astype(jnp.float32).reshape(B, S, nh, P)
+    Bm = Bm.astype(jnp.float32)
+    Cm = Cm.astype(jnp.float32)
+
+    s0 = state["ssm"].astype(jnp.float32) if state is not None else \
+        jnp.zeros((B, nh, ns, P), jnp.float32)
+
+    score_dtype = jnp.dtype(cfg.logit_dtype)
+    C = min(cfg.chunk_size, S)
+    if S % C == 0 and S > 1:
+        nc = S // C
+
+        def step(carry, inp):
+            xci, bi, ci, dti, lai = inp
+            y, new = _ssd_chunk(xci, bi, ci, dti, lai, carry,
+                                score_dtype=score_dtype)
+            return new, y
+
+        r4 = lambda a: a.reshape(B, nc, C, *a.shape[2:]).swapaxes(0, 1)
+        s_fin, ys = jax.lax.scan(
+            step, s0, (r4(xh), r4(Bm), r4(Cm), r4(dt), r4(la)))
+        y = ys.swapaxes(0, 1).reshape(B, S, nh, P)
+    else:
+        y, s_fin = _ssd_chunk(xh, Bm, Cm, dt, la, s0,
+                              score_dtype=score_dtype)
+
+    y = y + p["d_skip"][None, None, :, None] * xh                 # skip
+    y = y.reshape(B, S, di).astype(x.dtype)
+    # gated RMSNorm (mamba2) then out projection
+    y = rms_norm(y * jax.nn.silu(z), p["gn_scale"].astype(jnp.float32) - 1.0,
+                 cfg.norm_eps)
+    out = y @ p["w_out"].astype(x.dtype)
+    new_state = None
+    if state is not None:
+        new_state = {"ssm": s_fin.astype(state["ssm"].dtype),
+                     "conv": new_conv}
+    return out, new_state
+
+
+# --------------------------------------------------------------------------
+# sequential oracle (tests)
+# --------------------------------------------------------------------------
+
+def ssd_sequential(xh, Bm, Cm, dt, la, state):
+    """Step-by-step SSD recurrence; same contract as _ssd_chunk."""
+    def step(s, inp):
+        xt, bt, ct, dtt, lat = inp
+        a = jnp.exp(lat)                                   # [B, H]
+        upd = jnp.einsum("bh,bn,bhp->bhnp", dtt, bt, xt)
+        s = s * a[:, :, None, None] + upd
+        y = jnp.einsum("bn,bhnp->bhp", ct, s)
+        return s, y
+
+    tr = lambda a: a.swapaxes(0, 1)
+    s_fin, ys = jax.lax.scan(step, state,
+                             (tr(xh), tr(Bm), tr(Cm), tr(dt), tr(la)))
+    return ys.swapaxes(0, 1), s_fin

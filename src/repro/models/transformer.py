@@ -1,0 +1,326 @@
+"""Block assembly and layer stacks for every architecture family.
+
+Layers are organized into *groups*: ``group_layout(cfg)`` returns the
+static tuple of block kinds that make up one group, and the full network
+is ``num_groups(cfg)`` repetitions scanned with ``lax.scan`` (single
+trace per group -> fast compiles at 30-50 layer depth).  Examples:
+
+  qwen2     -> ("attn:full",) x 28 groups
+  mixtral   -> ("moe:swa",) x 32
+  gemma2    -> ("attn:swa", "attn:full") x 23   (local/global alternation)
+  zamba2    -> ("shared_attn", "mamba" x 6) x 9 (shared-params attn block)
+  rwkv6     -> ("rwkv",) x 32
+  whisper   -> encoder ("enc_attn",) x 12 + decoder ("dec_attn",) x 12
+
+Block kinds carry their attention window statically, so the banded /
+rect / direct attention paths stay structurally fixed inside the scan.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import LMConfig
+from . import layers as L
+from . import moe as M
+from . import rwkv as R
+from . import ssm as S
+from .sharding_ctx import constrain
+
+
+# --------------------------------------------------------------------------
+# group layout
+# --------------------------------------------------------------------------
+
+def group_layout(cfg: LMConfig) -> Tuple[str, ...]:
+    if cfg.family == "dense" or cfg.family == "vlm":
+        if cfg.attn_kind == "local_global":
+            return ("attn:swa", "attn:full")
+        if cfg.attn_kind == "swa":
+            return ("attn:swa",)
+        return ("attn:full",)
+    if cfg.family == "moe":
+        return ("moe:swa",) if cfg.attn_kind == "swa" else ("moe:full",)
+    if cfg.family == "rwkv":
+        return ("rwkv",)
+    if cfg.family == "hybrid":
+        return ("shared_attn",) + ("mamba",) * cfg.shared_attn_every
+    if cfg.family == "encdec":
+        return ("dec_attn",)
+    raise ValueError(cfg.family)
+
+
+def num_groups(cfg: LMConfig) -> int:
+    lay = group_layout(cfg)
+    per = len([k for k in lay if k != "shared_attn"]) or 1
+    if cfg.family == "hybrid":
+        assert cfg.num_layers % cfg.shared_attn_every == 0
+        return cfg.num_layers // cfg.shared_attn_every
+    assert cfg.num_layers % per == 0
+    return cfg.num_layers // per
+
+
+def _kind_window(cfg: LMConfig, kind: str) -> Optional[int]:
+    return cfg.window if kind.endswith(":swa") else None
+
+
+# --------------------------------------------------------------------------
+# per-kind params / cache / forward
+# --------------------------------------------------------------------------
+
+def block_params(cfg: LMConfig, kind: str, key) -> dict:
+    ks = L.split(key, 6)
+    if kind.startswith("attn:") or kind == "enc_attn":
+        return {"ln1": L.norm_params(cfg), "attn": L.attn_params(cfg, ks[0]),
+                "ln2": L.norm_params(cfg), "mlp": L.mlp_params(cfg, ks[1])}
+    if kind.startswith("moe:"):
+        p = {"ln1": L.norm_params(cfg), "attn": L.attn_params(cfg, ks[0]),
+             "ln2": L.norm_params(cfg), "moe": M.moe_params(cfg, ks[1])}
+        if cfg.moe.dense_residual:
+            p["mlp"] = L.mlp_params(cfg, ks[2])
+        return p
+    if kind == "rwkv":
+        return {"ln1": L.norm_params(cfg),
+                "tm": R.rwkv_time_mix_params(cfg, ks[0]),
+                "ln2": L.norm_params(cfg),
+                "cm": R.rwkv_channel_mix_params(cfg, ks[1])}
+    if kind == "mamba":
+        return {"ln": L.norm_params(cfg), "mamba": S.mamba_params(cfg, ks[0])}
+    if kind == "shared_attn":
+        return {}                      # actual params live at params["shared"]
+    if kind == "dec_attn":
+        return {"ln1": L.norm_params(cfg), "attn": L.attn_params(cfg, ks[0]),
+                "ln_x": L.norm_params(cfg), "xattn": L.attn_params(cfg, ks[1]),
+                "ln2": L.norm_params(cfg), "mlp": L.mlp_params(cfg, ks[2])}
+    raise ValueError(kind)
+
+
+def init_block_cache(cfg: LMConfig, kind: str, batch: int, max_len: int,
+                     dtype) -> dict:
+    KV, Dh = cfg.num_kv_heads, cfg.head_dim
+    d = cfg.d_model
+
+    def kv_cache(window):
+        S_c = max_len if window is None else min(max_len, window)
+        return {"k": jnp.zeros((batch, KV, S_c, Dh), dtype),
+                "v": jnp.zeros((batch, KV, S_c, Dh), dtype)}
+
+    if kind.startswith("attn:") or kind.startswith("moe:"):
+        return kv_cache(_kind_window(cfg, kind))
+    if kind == "shared_attn":
+        return kv_cache(None)
+    if kind == "rwkv":
+        H = cfg.num_heads
+        Dh_r = d // H
+        return {"wkv": jnp.zeros((batch, H, Dh_r, Dh_r), jnp.float32),
+                "shift_tm": jnp.zeros((batch, d), dtype),
+                "shift_cm": jnp.zeros((batch, d), dtype)}
+    if kind == "mamba":
+        ch = cfg.d_inner + 2 * cfg.ssm_state
+        return {"ssm": jnp.zeros((batch, cfg.n_ssm_heads, cfg.ssm_state,
+                                  cfg.d_inner // cfg.n_ssm_heads), jnp.float32),
+                "conv": jnp.zeros((batch, cfg.conv_width - 1, ch), dtype)}
+    if kind == "dec_attn":
+        c = kv_cache(None)
+        c["xk"] = jnp.zeros((batch, KV, cfg.enc_seq, Dh), dtype)
+        c["xv"] = jnp.zeros((batch, KV, cfg.enc_seq, Dh), dtype)
+        return c
+    raise ValueError(kind)
+
+
+def block_forward(cfg: LMConfig, kind: str, p: dict, x: jnp.ndarray,
+                  freqs: jnp.ndarray, cache: Optional[dict],
+                  shared: Optional[dict] = None,
+                  enc_out: Optional[jnp.ndarray] = None):
+    """One block. Returns (x, new_cache, aux_loss)."""
+    aux = jnp.zeros((), jnp.float32)
+    if kind == "shared_attn":
+        p = shared
+        kind = "attn:full"
+        # falls through to the attention path with full-window KV
+    if kind.startswith("attn:") or kind.startswith("moe:") or kind == "enc_attn":
+        window = _kind_window(cfg, kind)
+        kv_cache = None if cache is None else \
+            {"k": cache["k"], "v": cache["v"], "pos": cache["pos"]}
+        h = L.apply_norm(cfg, p["ln1"], x)
+        causal_kind = kind != "enc_attn"
+        if causal_kind:
+            a, new_kv = L.attn_forward(cfg, p["attn"], h, freqs,
+                                       window=window, cache=kv_cache)
+        else:
+            a, new_kv = _noncausal_self_attn(cfg, p["attn"], h)
+        x = constrain(x + a, "res")
+        h = L.apply_norm(cfg, p["ln2"], x)
+        if kind.startswith("moe:"):
+            y, aux = M.moe_forward(cfg, p["moe"], h)
+            if cfg.moe.dense_residual:
+                y = y + L.mlp_forward(cfg, p["mlp"], h)
+        else:
+            y = L.mlp_forward(cfg, p["mlp"], h)
+        x = constrain(x + y, "res")
+        new_cache = None
+        if cache is not None and new_kv is not None:
+            new_cache = dict(cache)
+            new_cache.update({"k": new_kv["k"], "v": new_kv["v"]})
+        return x, new_cache, aux
+    if kind == "rwkv":
+        st_tm = None if cache is None else \
+            {"wkv": cache["wkv"], "shift": cache["shift_tm"]}
+        h = L.apply_norm(cfg, p["ln1"], x)
+        a, new_tm = R.rwkv_time_mix(cfg, p["tm"], h, st_tm)
+        x = constrain(x + a, "res")
+        st_cm = None if cache is None else {"shift": cache["shift_cm"]}
+        h = L.apply_norm(cfg, p["ln2"], x)
+        y, new_cm = R.rwkv_channel_mix(cfg, p["cm"], h, st_cm)
+        x = constrain(x + y, "res")
+        new_cache = None
+        if cache is not None:
+            new_cache = {"wkv": new_tm["wkv"], "shift_tm": new_tm["shift"],
+                         "shift_cm": new_cm["shift"]}
+        return x, new_cache, aux
+    if kind == "mamba":
+        st = None if cache is None else \
+            {"ssm": cache["ssm"], "conv": cache["conv"]}
+        h = L.apply_norm(cfg, p["ln"], x)
+        y, new_st = S.mamba_forward(cfg, p["mamba"], h, st)
+        x = constrain(x + y, "res")
+        return x, new_st, aux
+    if kind == "dec_attn":
+        kv_cache = None if cache is None else \
+            {"k": cache["k"], "v": cache["v"], "pos": cache["pos"]}
+        h = L.apply_norm(cfg, p["ln1"], x)
+        a, new_kv = L.attn_forward(cfg, p["attn"], h, freqs, window=None,
+                                   cache=kv_cache)
+        x = constrain(x + a, "res")
+        h = L.apply_norm(cfg, p["ln_x"], x)
+        if cache is not None:
+            xa = _cross_attn_cached(cfg, p["xattn"], h, cache["xk"], cache["xv"])
+        else:
+            xa = _cross_attn(cfg, p["xattn"], h, enc_out)
+        x = constrain(x + xa, "res")
+        h = L.apply_norm(cfg, p["ln2"], x)
+        x = constrain(x + L.mlp_forward(cfg, p["mlp"], h), "res")
+        new_cache = None
+        if cache is not None:
+            new_cache = dict(cache)
+            new_cache.update({"k": new_kv["k"], "v": new_kv["v"]})
+        return x, new_cache, aux
+    raise ValueError(kind)
+
+
+def _noncausal_self_attn(cfg: LMConfig, p: dict, x: jnp.ndarray):
+    B, S, _ = x.shape
+    q, k, v = L._project_qkv(cfg, p, x)
+    pos = jnp.arange(S)[None, :]
+    freqs = L.rope_freqs(cfg)
+    q = L.apply_rope(q, pos, freqs).transpose(0, 2, 1, 3)
+    k = L.apply_rope(k, pos, freqs).transpose(0, 2, 1, 3)
+    v = v.transpose(0, 2, 1, 3)
+    kk = L._broadcast_kv(k, cfg.q_per_kv)
+    vv = L._broadcast_kv(v, cfg.q_per_kv)
+    out = L.attention(q, kk, vv, causal=False, impl=cfg.attn_impl,
+                      chunk=cfg.attn_chunk, logit_dtype=cfg.logit_dtype)
+    out = out.transpose(0, 2, 1, 3).reshape(B, S, -1)
+    return out @ p["wo"].astype(out.dtype), None
+
+
+def _cross_attn(cfg: LMConfig, p: dict, x: jnp.ndarray, enc_out: jnp.ndarray):
+    B, S, _ = x.shape
+    H, KV, Dh = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    q = (x @ p["wq"].astype(x.dtype)).reshape(B, S, H, Dh)
+    k = (enc_out @ p["wk"].astype(x.dtype)).reshape(B, -1, KV, Dh)
+    v = (enc_out @ p["wv"].astype(x.dtype)).reshape(B, -1, KV, Dh)
+    return _cross_attn_core(cfg, p, q, k.transpose(0, 2, 1, 3),
+                            v.transpose(0, 2, 1, 3))
+
+
+def _cross_attn_cached(cfg: LMConfig, p: dict, x: jnp.ndarray,
+                       xk: jnp.ndarray, xv: jnp.ndarray):
+    B, S, _ = x.shape
+    H, Dh = cfg.num_heads, cfg.head_dim
+    q = (x @ p["wq"].astype(x.dtype)).reshape(B, S, H, Dh)
+    return _cross_attn_core(cfg, p, q, xk, xv)
+
+
+def _cross_attn_core(cfg, p, q, k, v):
+    B, S = q.shape[0], q.shape[1]
+    q = q.transpose(0, 2, 1, 3)
+    kk = L._broadcast_kv(k, cfg.q_per_kv)
+    vv = L._broadcast_kv(v, cfg.q_per_kv)
+    out = L.attention(q, kk, vv, causal=False, impl=cfg.attn_impl,
+                      chunk=cfg.attn_chunk, logit_dtype=cfg.logit_dtype)
+    out = out.transpose(0, 2, 1, 3).reshape(B, S, -1)
+    return out @ p["wo"].astype(out.dtype)
+
+
+# --------------------------------------------------------------------------
+# stacked groups + scan
+# --------------------------------------------------------------------------
+
+def stack_params(cfg: LMConfig, key, layout: Tuple[str, ...], groups: int):
+    """Params for `groups` repetitions of `layout`, leaves stacked on axis 0."""
+    def one_group(k):
+        ks = L.split(k, len(layout))
+        return tuple(block_params(cfg, kind, ki)
+                     for kind, ki in zip(layout, ks))
+    return jax.vmap(one_group)(jnp.stack(L.split(key, groups)))
+
+
+def stack_forward(cfg: LMConfig, stacked, x: jnp.ndarray,
+                  layout: Tuple[str, ...], *,
+                  cache=None, shared: Optional[dict] = None,
+                  enc_out: Optional[jnp.ndarray] = None):
+    """Scan `x` through all groups. cache: tuple of per-slot caches with
+    leading group axis (or None). Returns (x, new_cache, aux_sum)."""
+    freqs = L.rope_freqs(cfg)
+    pos = None if cache is None else cache["pos"]
+
+    def body(carry, inp):
+        x, aux = carry
+        gp, gc = inp
+        new_slots = []
+        for i, kind in enumerate(layout):
+            slot_cache = None
+            if gc is not None:
+                slot_cache = dict(gc[i])
+                slot_cache["pos"] = pos
+            x, nc, a = block_forward(cfg, kind, gp[i], x, freqs, slot_cache,
+                                     shared=shared, enc_out=enc_out)
+            aux = aux + a
+            if nc is not None:
+                nc.pop("pos", None)
+            new_slots.append(nc)
+        return (x, aux), tuple(new_slots)
+
+    if cfg.remat:
+        body = jax.checkpoint(
+            body, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+
+    aux0 = jnp.zeros((), jnp.float32)
+    if cfg.scan_layers:
+        xs = (stacked, cache["slots"] if cache is not None else None)
+        if cache is None:
+            (x, aux), new_slots = jax.lax.scan(
+                lambda c, p: body(c, (p, None)), (x, aux0), stacked)
+        else:
+            (x, aux), new_slots = jax.lax.scan(body, (x, aux0), xs)
+    else:
+        G = jax.tree_util.tree_leaves(stacked)[0].shape[0]
+        new_list = []
+        for g in range(G):
+            gp = jax.tree.map(lambda a: a[g], stacked)
+            gc = None if cache is None else \
+                jax.tree.map(lambda a: a[g], cache["slots"])
+            (x, aux), ns = body((x, aux), (gp, gc))
+            new_list.append(ns)
+        new_slots = None if cache is None else \
+            jax.tree.map(lambda *a: jnp.stack(a), *new_list)
+
+    new_cache = None
+    if cache is not None:
+        new_cache = {"pos": pos + x.shape[1], "slots": new_slots}
+    return x, new_cache, aux

@@ -1,0 +1,5 @@
+"""Training substrate: optimizers, step builder, checkpointing, compression."""
+
+from .optim import (get_optimizer, adamw, adafactor, lion, warmup_cosine,
+                    clip_by_global_norm, global_norm, Optimizer)
+from .step import TrainCfg, make_train_step, init_state

@@ -1,0 +1,187 @@
+"""Optimizers as pure pytree transforms (no external deps).
+
+``Optimizer`` is an (init, update) pair; ``update`` maps
+(grads, state, params) -> (new_params, new_state).  All three optimizers
+keep master weights in f32 regardless of the compute dtype.
+
+* adamw     -- default for <= ~30B configs.
+* adafactor -- factored second moment: optimizer state is O(rows+cols)
+               per matrix instead of O(rows*cols); used for the arctic
+               480B config so state fits HBM.
+* lion      -- sign-momentum; 1 state slot, cheapest memory after
+               adafactor.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable
+    update: Callable          # (grads, state, params, lr) -> (params, state)
+
+
+def global_norm(tree) -> jnp.ndarray:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in jax.tree_util.tree_leaves(tree)))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: g * scale, grads), norm
+
+
+# --------------------------------------------------------------------------
+# AdamW
+# --------------------------------------------------------------------------
+
+def adamw(b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+          weight_decay: float = 0.1) -> Optimizer:
+    def init(params):
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return {"mu": jax.tree.map(zeros, params),
+                "nu": jax.tree.map(zeros, params),
+                "count": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params, lr):
+        c = state["count"] + 1
+        bc1 = 1 - b1 ** c.astype(jnp.float32)
+        bc2 = 1 - b2 ** c.astype(jnp.float32)
+
+        def upd(g, m, v, p):
+            g = g.astype(jnp.float32)
+            m = b1 * m + (1 - b1) * g
+            v = b2 * v + (1 - b2) * g * g
+            step = (m / bc1) / (jnp.sqrt(v / bc2) + eps)
+            step = step + weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * step).astype(p.dtype), m, v
+
+        flat_g, tdef = jax.tree_util.tree_flatten(grads)
+        flat_m = tdef.flatten_up_to(state["mu"])
+        flat_v = tdef.flatten_up_to(state["nu"])
+        flat_p = tdef.flatten_up_to(params)
+        new = [upd(g, m, v, p) for g, m, v, p
+               in zip(flat_g, flat_m, flat_v, flat_p)]
+        new_p = tdef.unflatten([t[0] for t in new])
+        mu = tdef.unflatten([t[1] for t in new])
+        nu = tdef.unflatten([t[2] for t in new])
+        return new_p, {"mu": mu, "nu": nu, "count": c}
+
+    return Optimizer(init, update)
+
+
+# --------------------------------------------------------------------------
+# Adafactor (factored second moment)
+# --------------------------------------------------------------------------
+
+def adafactor(eps: float = 1e-30, clip_threshold: float = 1.0,
+              decay: float = 0.8, weight_decay: float = 0.0) -> Optimizer:
+    def _factored(shape) -> bool:
+        return len(shape) >= 2 and shape[-1] > 1 and shape[-2] > 1
+
+    def init(params):
+        def slot(p):
+            if _factored(p.shape):
+                return {"vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                        "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:],
+                                        jnp.float32)}
+            return {"v": jnp.zeros(p.shape, jnp.float32)}
+        return {"slots": jax.tree.map(slot, params),
+                "count": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params, lr):
+        c = state["count"] + 1
+        beta = 1.0 - (c.astype(jnp.float32) + 1.0) ** -decay
+
+        def upd(g, s, p):
+            g = g.astype(jnp.float32)
+            g2 = g * g + eps
+            if _factored(p.shape):
+                vr = beta * s["vr"] + (1 - beta) * g2.mean(axis=-1)
+                vc = beta * s["vc"] + (1 - beta) * g2.mean(axis=-2)
+                denom = jnp.maximum(vr.mean(axis=-1, keepdims=True), eps)
+                step = g * jax.lax.rsqrt(vr / denom)[..., None] \
+                    * jax.lax.rsqrt(vc)[..., None, :]
+                new_s = {"vr": vr, "vc": vc}
+            else:
+                v = beta * s["v"] + (1 - beta) * g2
+                step = g * jax.lax.rsqrt(v)
+                new_s = {"v": v}
+            # relative clipping
+            rms = jnp.sqrt(jnp.mean(step * step))
+            step = step / jnp.maximum(1.0, rms / clip_threshold)
+            if weight_decay:
+                step = step + weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * step).astype(p.dtype), new_s
+
+        flat_g, tdef = jax.tree_util.tree_flatten(grads)
+        flat_s = tdef.flatten_up_to(state["slots"])
+        flat_p = tdef.flatten_up_to(params)
+        new = [upd(g, s, p) for g, s, p in zip(flat_g, flat_s, flat_p)]
+        new_p = tdef.unflatten([t[0] for t in new])
+        slots = tdef.unflatten([t[1] for t in new])
+        return new_p, {"slots": slots, "count": c}
+
+    return Optimizer(init, update)
+
+
+# --------------------------------------------------------------------------
+# Lion
+# --------------------------------------------------------------------------
+
+def lion(b1: float = 0.9, b2: float = 0.99,
+         weight_decay: float = 0.1) -> Optimizer:
+    def init(params):
+        return {"mu": jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params),
+            "count": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params, lr):
+        def upd(g, m, p):
+            g = g.astype(jnp.float32)
+            step = jnp.sign(b1 * m + (1 - b1) * g) \
+                + weight_decay * p.astype(jnp.float32)
+            m = b2 * m + (1 - b2) * g
+            return (p.astype(jnp.float32) - lr * step).astype(p.dtype), m
+
+        flat_g, tdef = jax.tree_util.tree_flatten(grads)
+        flat_m = tdef.flatten_up_to(state["mu"])
+        flat_p = tdef.flatten_up_to(params)
+        new = [upd(g, m, p) for g, m, p in zip(flat_g, flat_m, flat_p)]
+        new_p = tdef.unflatten([t[0] for t in new])
+        mu = tdef.unflatten([t[1] for t in new])
+        return new_p, {"mu": mu, "count": state["count"] + 1}
+
+    return Optimizer(init, update)
+
+
+OPTIMIZERS = {"adamw": adamw, "adafactor": adafactor, "lion": lion}
+
+
+def get_optimizer(name: str, **kw) -> Optimizer:
+    return OPTIMIZERS[name](**kw)
+
+
+# --------------------------------------------------------------------------
+# LR schedules
+# --------------------------------------------------------------------------
+
+def warmup_cosine(peak_lr: float, warmup_steps: int, total_steps: int,
+                  final_frac: float = 0.1):
+    def lr(step):
+        step = step.astype(jnp.float32) if hasattr(step, "astype") \
+            else jnp.float32(step)
+        warm = peak_lr * jnp.minimum(step / max(warmup_steps, 1), 1.0)
+        prog = jnp.clip((step - warmup_steps) /
+                        max(total_steps - warmup_steps, 1), 0.0, 1.0)
+        cos = final_frac + (1 - final_frac) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+        return jnp.where(step < warmup_steps, warm, peak_lr * cos)
+    return lr

@@ -1,0 +1,100 @@
+"""Training step: loss + grads + optimizer, with microbatch accumulation.
+
+``make_train_step`` builds the jit-able function the launcher lowers for
+the dry-run.  Structure:
+
+  * grads in f32 via ``jax.value_and_grad`` over the chunked-CE loss,
+  * optional microbatch gradient accumulation (``lax.scan`` over
+    microbatches -- needed for the big configs' activation memory),
+  * global-norm clipping,
+  * LR schedule + optimizer update,
+  * optional error-feedback int8 gradient compression hook (see
+    compress.py) applied before the (GSPMD-inserted) gradient reduction.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import loss_fn
+from repro.models.config import LMConfig
+from .optim import Optimizer, clip_by_global_norm
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainCfg:
+    optimizer: str = "adamw"
+    peak_lr: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 1000
+    grad_clip: float = 1.0
+    microbatches: int = 1          # gradient accumulation factor
+    compress_grads: bool = False   # error-feedback int8 (see compress.py)
+
+
+def make_train_step(cfg: LMConfig, tcfg: TrainCfg, opt: Optimizer,
+                    lr_fn: Callable):
+    """Returns train_step(state, batch) -> (state, metrics).
+
+    state = {"params", "opt", "step"}  (plus "ef" when compressing).
+    batch = {"tokens": [B, S+1], ...modality extras}.
+    """
+
+    def grads_of(params, batch):
+        return jax.value_and_grad(
+            lambda p: loss_fn(cfg, p, batch), has_aux=True)(params)
+
+    def accumulate(params, batch):
+        mb = tcfg.microbatches
+        if mb == 1:
+            (loss, metrics), grads = grads_of(params, batch)
+            return loss, metrics, grads
+        split = lambda x: x.reshape((mb, x.shape[0] // mb) + x.shape[1:])
+        mbatch = jax.tree.map(split, batch)
+
+        def step(carry, b):
+            acc, tot = carry
+            (loss, metrics), grads = grads_of(params, b)
+            acc = jax.tree.map(jnp.add, acc, grads)
+            return (acc, tot + loss), metrics
+
+        zeros = jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        (grads, tot), metrics = jax.lax.scan(
+            step, (zeros, jnp.zeros(())), mbatch)
+        grads = jax.tree.map(lambda g: g / mb, grads)
+        metrics = jax.tree.map(lambda m: m[-1], metrics)
+        return tot / mb, metrics, grads
+
+    def train_step(state, batch):
+        params = state["params"]
+        loss, metrics, grads = accumulate(params, batch)
+        if tcfg.compress_grads:
+            from .compress import ef_compress_tree
+            grads, ef = ef_compress_tree(grads, state["ef"])
+        grads, gnorm = clip_by_global_norm(grads, tcfg.grad_clip)
+        lr = lr_fn(state["step"])
+        new_params, new_opt = opt.update(grads, state["opt"], params, lr)
+        new_state = {"params": new_params, "opt": new_opt,
+                     "step": state["step"] + 1}
+        if tcfg.compress_grads:
+            new_state["ef"] = ef
+        metrics = dict(metrics)
+        metrics.update({"loss": loss, "grad_norm": gnorm, "lr": lr})
+        return new_state, metrics
+
+    return train_step
+
+
+def init_state(cfg: LMConfig, tcfg: TrainCfg, opt: Optimizer, params):
+    state = {"params": params, "opt": opt.init(params),
+             "step": jnp.zeros((), jnp.int32)}
+    if tcfg.compress_grads:
+        from .compress import ef_init
+        state["ef"] = ef_init(params)
+    return state

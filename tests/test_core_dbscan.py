@@ -1,0 +1,96 @@
+"""System behaviour: GriT-DBSCAN (all engines) vs the brute oracle."""
+
+import numpy as np
+import pytest
+import jax.numpy as jnp
+
+from repro.data.seed_spreader import seed_spreader
+from repro.core.dbscan import grit_dbscan, brute_dbscan
+from repro.core.device_dbscan import device_dbscan, GritCaps
+from repro.core.validate import assert_dbscan_equivalent
+from repro.core.grids import build_grids, build_grids_device
+
+
+@pytest.mark.parametrize("d", [2, 3, 5, 7])
+@pytest.mark.parametrize("variant", ["simden", "varden"])
+def test_grit_matches_brute(d, variant):
+    pts = seed_spreader(500, d, variant=variant, restarts=4, seed=d)
+    eps, min_pts = 4000.0, 8
+    ref = brute_dbscan(pts, eps, min_pts)
+    r = grit_dbscan(pts, eps, min_pts)
+    assert_dbscan_equivalent(pts, eps, min_pts, ref, r.labels)
+
+
+@pytest.mark.parametrize("variant", ["grit", "ldf"])
+@pytest.mark.parametrize("neighbor_engine", ["tree", "stencil"])
+@pytest.mark.parametrize("merge_engine", ["fast", "center", "brute"])
+def test_engine_matrix_equivalent(variant, neighbor_engine, merge_engine):
+    pts = seed_spreader(400, 3, variant="varden", restarts=4, seed=7)
+    eps, min_pts = 4000.0, 8
+    ref = brute_dbscan(pts, eps, min_pts)
+    r = grit_dbscan(pts, eps, min_pts, variant=variant,
+                    neighbor_engine=neighbor_engine,
+                    merge_engine=merge_engine)
+    assert_dbscan_equivalent(pts, eps, min_pts, ref, r.labels)
+
+
+def test_kappa_small_like_paper():
+    """Paper Remark 3: kappa <= 11 in all experiments."""
+    pts = seed_spreader(2000, 3, variant="varden", restarts=6, seed=1)
+    r = grit_dbscan(pts, 3000.0, 10)
+    assert r.stats.get("merge_max_iters", 0) <= 11
+
+
+@pytest.mark.parametrize("d", [2, 3, 5])
+def test_device_dbscan_matches_brute(d):
+    pts = seed_spreader(512, d, variant="simden", restarts=4, seed=10 + d)
+    eps, min_pts = 4000.0, 8
+    ref = brute_dbscan(pts, eps, min_pts)
+    caps = GritCaps(grid_cap=256, frontier_cap=256, k_cap=48, c_cap=512,
+                    m_cap=512, pair_cap=2048, grid_block=64, pair_block=256)
+    r = device_dbscan(jnp.asarray(pts, jnp.float32), eps, min_pts, caps)
+    assert not bool(r.overflow)
+    assert_dbscan_equivalent(pts, eps, min_pts, ref, np.asarray(r.labels))
+
+
+def test_device_dbscan_respects_point_validity():
+    pts = seed_spreader(256, 2, variant="simden", restarts=3, seed=3)
+    eps, min_pts = 4000.0, 8
+    caps = GritCaps(grid_cap=256, frontier_cap=256, k_cap=48, c_cap=512,
+                    m_cap=512, pair_cap=2048, grid_block=64, pair_block=256)
+    valid = jnp.asarray(np.arange(256) < 200)
+    r = device_dbscan(jnp.asarray(pts, jnp.float32), eps, min_pts, caps,
+                      point_valid=valid)
+    labels = np.asarray(r.labels)
+    assert (labels[200:] == -1).all()
+    ref = brute_dbscan(pts[:200], eps, min_pts)
+    assert_dbscan_equivalent(pts[:200], eps, min_pts, ref, labels[:200])
+
+
+def test_grid_build_host_vs_device():
+    pts = seed_spreader(300, 3, variant="simden", restarts=3, seed=5)
+    eps = 4000.0
+    gi = build_grids(pts, eps)
+    dg = build_grids_device(jnp.asarray(pts, jnp.float32), eps, grid_cap=512)
+    ng = int(dg.num_grids)
+    assert ng == gi.num_grids
+    np.testing.assert_array_equal(np.asarray(dg.ids)[:ng], gi.ids)
+    np.testing.assert_array_equal(np.asarray(dg.counts)[:ng], gi.counts)
+
+
+def test_all_points_in_one_ball():
+    """The O(n^2)-killer case from the paper's introduction."""
+    rng = np.random.default_rng(0)
+    pts = rng.normal(size=(400, 3)) * 10.0
+    eps = 1e5
+    ref = brute_dbscan(pts, eps, 10)
+    r = grit_dbscan(pts, eps, 10)
+    assert_dbscan_equivalent(pts, eps, 10, ref, r.labels)
+    assert r.stats["num_clusters"] == 1
+
+
+def test_all_noise():
+    rng = np.random.default_rng(1)
+    pts = rng.uniform(0, 1e6, size=(100, 3))
+    r = grit_dbscan(pts, 10.0, 5)
+    assert (r.labels == -1).all()

@@ -1,0 +1,96 @@
+"""Grid-tree property tests (hypothesis): the tree query must agree with
+the exhaustive stencil baseline on arbitrary grid configurations."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from repro.core.grid_tree import (GridTree, stencil_neighbors, radius,
+                                  offset_stencil, device_neighbor_table,
+                                  pack_rows)
+from repro.core.grids import PAD_ID
+
+
+def _csr_to_sets(indptr, nbr):
+    return [frozenset(nbr[indptr[i]:indptr[i + 1]].tolist())
+            for i in range(len(indptr) - 1)]
+
+
+@st.composite
+def grid_ids(draw):
+    d = draw(st.integers(min_value=1, max_value=5))
+    n = draw(st.integers(min_value=1, max_value=60))
+    eta = draw(st.integers(min_value=1, max_value=12))
+    rows = draw(st.lists(
+        st.tuples(*[st.integers(0, eta) for _ in range(d)]),
+        min_size=n, max_size=n))
+    ids = np.unique(np.asarray(sorted(set(rows)), np.int64), axis=0)
+    return ids
+
+
+@given(grid_ids())
+@settings(max_examples=60, deadline=None)
+def test_tree_query_matches_stencil(ids):
+    tree = GridTree.build(ids)
+    ip_t, nb_t, off_t = tree.query(ids, include_self=False)
+    ip_s, nb_s, off_s = stencil_neighbors(ids, ids, include_self=False)
+    assert _csr_to_sets(ip_t, nb_t) == _csr_to_sets(ip_s, nb_s)
+
+
+@given(grid_ids())
+@settings(max_examples=30, deadline=None)
+def test_tree_query_offsets_sorted_and_correct(ids):
+    tree = GridTree.build(ids)
+    indptr, nbr, off = tree.query(ids, include_self=False)
+    d = ids.shape[1]
+    for i in range(len(ids)):
+        sl = slice(indptr[i], indptr[i + 1])
+        offs = off[sl]
+        assert (np.diff(offs) >= 0).all(), "not offset-sorted (paper l.16)"
+        # offset definition: sum_j max(|key_j - g_ij| - 1, 0)^2 < d
+        delta = np.abs(ids[nbr[sl]] - ids[i][None, :])
+        expect = (np.maximum(delta - 1, 0) ** 2).sum(1)
+        np.testing.assert_array_equal(offs, expect)
+        assert (offs < d).all()
+
+
+@given(grid_ids())
+@settings(max_examples=20, deadline=None)
+def test_device_table_matches_host(ids):
+    G = len(ids)
+    cap = max(64, G + 1)
+    padded = np.full((cap, ids.shape[1]), int(PAD_ID), np.int32)
+    padded[:G] = ids
+    nbr, nbr_off, ovf = device_neighbor_table(
+        jnp.asarray(padded), jnp.int32(G), frontier_cap=256, k_cap=64,
+        include_self=False)
+    if bool(ovf):
+        pytest.skip("static caps exceeded for this random instance")
+    tree = GridTree.build(ids)
+    indptr, nb, _ = tree.query(ids, include_self=False)
+    host = _csr_to_sets(indptr, nb)
+    dev = np.asarray(nbr)[:G]
+    for i in range(G):
+        got = frozenset(int(x) for x in dev[i] if x >= 0)
+        assert got == host[i]
+
+
+def test_stencil_size_matches_paper_bound():
+    for d in (2, 3, 5):
+        deltas, off = offset_stencil(d)
+        r = radius(d)
+        assert (np.abs(deltas) <= r).all()
+        assert (off < d).all()
+        # offsets sorted ascending (used for early exit)
+        assert (np.diff(off) >= 0).all()
+
+
+def test_pack_rows_is_lexicographic():
+    rng = np.random.default_rng(0)
+    ids = rng.integers(0, 1000, size=(100, 4))
+    packed = pack_rows(ids)
+    order_p = np.argsort(packed, kind="stable")
+    order_l = np.lexsort(tuple(ids[:, j] for j in range(3, -1, -1)))
+    np.testing.assert_array_equal(ids[order_p], ids[order_l])

@@ -1,0 +1,114 @@
+"""Loop-aware HLO cost analysis: validated against unrolled references."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.launch.hlo_costs import analyze, parse_hlo
+from repro.launch.hlo_analysis import (shape_bytes, collective_bytes,
+                                       roofline_terms)
+
+
+def _compiled_text(f, *args):
+    return jax.jit(f).lower(*args).compile().as_text()
+
+
+def test_scan_matches_unroll():
+    def f_scan(x, w):
+        def body(c, _):
+            return jnp.tanh(c @ w), None
+        y, _ = jax.lax.scan(body, x, None, length=10)
+        return y
+
+    def f_unroll(x, w):
+        for _ in range(10):
+            x = jnp.tanh(x @ w)
+        return x
+
+    xs = jax.ShapeDtypeStruct((128, 128), jnp.float32)
+    ws = jax.ShapeDtypeStruct((128, 128), jnp.float32)
+    a_s = analyze(_compiled_text(f_scan, xs, ws))
+    a_u = analyze(_compiled_text(f_unroll, xs, ws))
+    dot_flops = 10 * 2 * 128 ** 3
+    assert abs(a_s["flops"] - dot_flops) / dot_flops < 0.05
+    assert abs(a_u["flops"] - dot_flops) / dot_flops < 0.05
+    # scanned and unrolled bytes within 2x of each other
+    assert 0.5 < a_s["bytes"] / a_u["bytes"] < 2.0
+
+
+def test_nested_scan_multiplies():
+    def f(x, w):
+        def outer(c, _):
+            def inner(c2, _):
+                return jnp.tanh(c2 @ w), None
+            c2, _ = jax.lax.scan(inner, c, None, length=5)
+            return c2, None
+        y, _ = jax.lax.scan(outer, x, None, length=4)
+        return y
+
+    xs = jax.ShapeDtypeStruct((128, 128), jnp.float32)
+    ws = jax.ShapeDtypeStruct((128, 128), jnp.float32)
+    a = analyze(_compiled_text(f, xs, ws))
+    dot_flops = 20 * 2 * 128 ** 3
+    assert abs(a["flops"] - dot_flops) / dot_flops < 0.05
+
+
+def test_dynamic_slice_bytes_not_amplified():
+    """Reading one [1, 4096] row per iteration from a [64, 4096] stack
+    must cost ~64 rows total, not 64 x the whole stack."""
+    def f(stack):
+        def body(c, i):
+            row = jax.lax.dynamic_index_in_dim(stack, i, 0)
+            return c + row[0], None
+        out, _ = jax.lax.scan(body, jnp.zeros((4096,)),
+                              jnp.arange(64), length=64)
+        return out
+
+    xs = jax.ShapeDtypeStruct((64, 4096), jnp.float32)
+    a = analyze(_compiled_text(f, xs))
+    stack_bytes = 64 * 4096 * 4
+    assert a["bytes"] < 8 * stack_bytes      # O(1x), not O(64x)
+
+
+def test_shape_bytes():
+    assert shape_bytes("bf16[8,128]") == 8 * 128 * 2
+    assert shape_bytes("f32[4]") == 16
+    assert shape_bytes("(f32[4], bf16[2,2])") == 16 + 8
+    assert shape_bytes("pred[16]") == 16
+
+
+def test_collective_parsing_on_synthetic_hlo():
+    hlo = """
+ENTRY %main.1 (p: f32[1024]) -> f32[1024] {
+  %p = f32[1024]{0} parameter(0)
+  %ar = f32[1024]{0} all-reduce(%p), replica_groups={{0,1,2,3}}, to_apply=%add
+  %ag = f32[4096]{0} all-gather(%ar), replica_groups={{0,1,2,3}}, dimensions={0}
+  ROOT %cp = f32[1024]{0} collective-permute(%ar), source_target_pairs={{0,1}}
+}
+"""
+    c = collective_bytes(hlo)
+    assert c["all-reduce"] == 2 * 0.75 * 4096
+    assert c["all-gather"] == 0.75 * 16384
+    assert c["collective-permute"] == 4096
+
+
+def test_roofline_terms_dominance():
+    r = roofline_terms(197e12, 0.0, 0.0)       # 1s of pure compute
+    assert r["dominant"] == "compute"
+    assert r["compute_fraction"] == 1.0
+    r = roofline_terms(197e10, 819e9, 0.0)
+    assert r["dominant"] == "memory"
+    r = roofline_terms(0.0, 0.0, 50e9)
+    assert r["dominant"] == "collective"
+
+
+def test_parse_hlo_finds_computations():
+    def f(x):
+        def body(c, _):
+            return c * 2.0, None
+        y, _ = jax.lax.scan(body, x, None, length=3)
+        return y
+    txt = _compiled_text(f, jax.ShapeDtypeStruct((8,), jnp.float32))
+    comps = parse_hlo(txt)
+    assert any("main" in n for n in comps)
+    assert len(comps) >= 2       # entry + loop body/cond at minimum

@@ -1,0 +1,72 @@
+"""Pallas kernel sweeps: shapes x dtypes vs the pure-jnp oracles."""
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops, ref
+
+RNG = np.random.default_rng(42)
+
+
+def _pts(m, d, dtype):
+    return jnp.asarray(RNG.normal(size=(m, d)) * 10, dtype)
+
+
+@pytest.mark.parametrize("m,n,d", [
+    (1, 1, 1), (5, 7, 2), (127, 129, 3), (128, 128, 7),
+    (200, 64, 5), (64, 300, 4), (256, 256, 2),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_eps_count_sweep(m, n, d, dtype):
+    a, b = _pts(m, d, dtype), _pts(n, d, dtype)
+    vb = jnp.asarray(RNG.uniform(size=n) > 0.3)
+    eps = 6.0
+    got = ops.eps_count(a, b, eps, vb)
+    want = ref.eps_count(a, b, eps, vb)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("m,n,d", [
+    (3, 9, 2), (130, 257, 3), (128, 128, 5), (64, 512, 7),
+])
+def test_row_min_sweep(m, n, d):
+    a, b = _pts(m, d, jnp.float32), _pts(n, d, jnp.float32)
+    vb = jnp.asarray(RNG.uniform(size=n) > 0.2)
+    got_m, got_i = ops.row_min(a, b, vb)
+    want_m, want_i = ref.row_min(a, b, vb)
+    np.testing.assert_allclose(np.asarray(got_m), np.asarray(want_m),
+                               rtol=1e-5, atol=1e-4)
+    np.testing.assert_array_equal(np.asarray(got_i), np.asarray(want_i))
+
+
+@pytest.mark.parametrize("b,h,sq,sk,dh,causal,window,cap", [
+    (2, 3, 64, 64, 32, True, None, None),
+    (1, 2, 128, 128, 64, True, 32, None),
+    (1, 2, 100, 100, 64, True, None, 50.0),
+    (2, 1, 1, 96, 32, True, None, None),        # decode
+    (1, 2, 80, 80, 64, False, None, None),      # encoder
+    (1, 1, 64, 192, 32, True, None, None),      # chunked prefix
+    (1, 2, 256, 256, 64, True, 128, 30.0),      # SWA + softcap (gemma-ish)
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_sweep(b, h, sq, sk, dh, causal, window, cap, dtype):
+    q = jnp.asarray(RNG.normal(size=(b, h, sq, dh)), dtype)
+    k = jnp.asarray(RNG.normal(size=(b, h, sk, dh)), dtype)
+    v = jnp.asarray(RNG.normal(size=(b, h, sk, dh)), dtype)
+    got = ops.flash_attention(q, k, v, causal=causal, window=window,
+                              softcap=cap)
+    want = ref.mha(q, k, v, causal=causal, window=window, softcap=cap)
+    tol = 2e-4 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=tol, atol=tol)
+
+
+def test_eps_count_matches_bruteforce_semantics():
+    a = _pts(50, 3, jnp.float32)
+    got = ops.eps_count(a, a, 5.0)
+    d2 = ((np.asarray(a)[:, None] - np.asarray(a)[None]) ** 2).sum(-1)
+    want = (d2 <= 25.0).sum(1)
+    np.testing.assert_array_equal(np.asarray(got), want)

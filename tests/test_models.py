@@ -1,0 +1,120 @@
+"""Per-arch smoke tests (reduced configs): forward/train-step shapes, no
+NaNs, and cached-decode == uncached-forward consistency."""
+
+import dataclasses
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config, list_archs
+from repro.models import (init_params, loss_fn, init_cache, prefill,
+                          decode_step, forward, count_params, active_params)
+from repro.models.lm import logits_for
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _batch(cfg, B, S, key=KEY):
+    tok = jax.random.randint(key, (B, S), 0, cfg.vocab_size)
+    b = {"tokens": tok}
+    if cfg.family == "encdec":
+        b["frames"] = jax.random.normal(
+            key, (B, cfg.enc_seq, cfg.d_model), jnp.float32)
+    if cfg.family == "vlm":
+        b["patches"] = jax.random.normal(
+            key, (B, cfg.num_patches, cfg.d_model), jnp.float32) * 0.02
+    return b
+
+
+@pytest.mark.parametrize("arch", list_archs())
+def test_smoke_train_step(arch):
+    cfg = get_config(arch, smoke=True)
+    params = init_params(cfg, KEY)
+    B, S = 2, 32
+    batch = _batch(cfg, B, S + 1)
+    (loss, metrics), grads = jax.jit(
+        lambda p, b: jax.value_and_grad(
+            lambda q: loss_fn(cfg, q, b), has_aux=True)(p))(params, batch)
+    assert np.isfinite(float(loss)), f"{arch}: loss not finite"
+    gnorm = sum(float(jnp.sum(jnp.square(g.astype(jnp.float32))))
+                for g in jax.tree_util.tree_leaves(grads))
+    assert np.isfinite(gnorm) and gnorm > 0, f"{arch}: bad grads"
+    # forward output shapes
+    h, _, _ = forward(cfg, params, {**batch, "tokens": batch["tokens"][:, :-1]})
+    extra = cfg.num_patches if cfg.family == "vlm" else 0
+    assert h.shape == (B, S + extra, cfg.d_model)
+
+
+@pytest.mark.parametrize("arch", list_archs())
+def test_smoke_decode_consistency(arch):
+    cfg = get_config(arch, smoke=True).with_overrides(
+        dtype="float32", remat=False)
+    if cfg.moe is not None:
+        cfg = cfg.with_overrides(
+            moe=dataclasses.replace(cfg.moe, capacity_factor=8.0))
+    params = init_params(cfg, KEY)
+    B, S = 2, 12
+    batch = _batch(cfg, B, S, key=jax.random.PRNGKey(1))
+    h, _, _ = forward(cfg, params, batch)
+    full = logits_for(cfg, params, h)
+    if cfg.family == "vlm":
+        full = full[:, cfg.num_patches:]
+    cache = init_cache(cfg, B, 32)
+    pb = dict(batch)
+    pb["tokens"] = batch["tokens"][:, :6]
+    lg, cache = prefill(cfg, params, pb, cache)
+    errs = [np.abs(np.asarray(lg) - np.asarray(full[:, 5])).max()]
+    for t in range(6, S):
+        lg, cache = decode_step(cfg, params, batch["tokens"][:, t], cache)
+        errs.append(np.abs(np.asarray(lg) - np.asarray(full[:, t])).max())
+    assert max(errs) < 2e-2, f"{arch}: decode mismatch {errs}"
+
+
+def test_full_config_param_counts():
+    """Exact parameter counts of the FULL configs via eval_shape (no
+    allocation) -- pins each architecture's scale."""
+    expect = {
+        "rwkv6_3b": (1.4e9, 3.5e9),
+        "mixtral_8x7b": (45e9, 48e9),
+        "arctic_480b": (450e9, 520e9),
+        "qwen2_1_5b": (1.2e9, 1.9e9),
+        "stablelm_3b": (2.5e9, 3.5e9),
+        "qwen1_5_0_5b": (0.4e9, 0.7e9),
+        "gemma2_27b": (26e9, 30e9),
+        "whisper_small": (0.2e9, 0.4e9),
+        "zamba2_2_7b": (2.2e9, 3.2e9),
+        "internvl2_1b": (0.4e9, 0.8e9),
+    }
+    for arch, (lo, hi) in expect.items():
+        n = count_params(get_config(arch))
+        assert lo <= n <= hi, f"{arch}: {n:.3e} outside [{lo:.1e},{hi:.1e}]"
+
+
+def test_moe_active_params_below_total():
+    cfg = get_config("mixtral_8x7b")
+    total, act = count_params(cfg), active_params(cfg)
+    assert act < total * 0.35          # 2-of-8 experts active
+
+
+def test_swa_ring_cache_is_window_bounded():
+    cfg = get_config("mixtral_8x7b", smoke=True)
+    cache = init_cache(cfg, 2, 64)      # window=16 -> ring of 16
+    k = cache["slots"][0]["k"]
+    assert k.shape[3] == cfg.window
+
+
+@pytest.mark.parametrize("arch", ["qwen2_1_5b", "gemma2_27b", "zamba2_2_7b"])
+def test_bf16_logit_buffers_numerically_close(arch):
+    """§Perf lever: bf16 logit/score buffers must not move the loss."""
+    from repro.models import loss_fn
+    cfg32 = get_config(arch, smoke=True).with_overrides(
+        dtype="float32", remat=False)
+    cfg16 = cfg32.with_overrides(logit_dtype="bfloat16")
+    params = init_params(cfg32, KEY)
+    tok = jax.random.randint(jax.random.PRNGKey(1), (2, 33), 0,
+                             cfg32.vocab_size)
+    l32, _ = loss_fn(cfg32, params, {"tokens": tok})
+    l16, _ = loss_fn(cfg16, params, {"tokens": tok})
+    assert abs(float(l32) - float(l16)) / float(l32) < 2e-3

@@ -1,0 +1,103 @@
+"""Chunkwise recurrences vs sequential oracles (RWKV6 WKV, Mamba2 SSD)
+and equivalence of the four attention execution paths."""
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.models.rwkv import _wkv_chunk, wkv_sequential
+from repro.models.ssm import _ssd_chunk, ssd_sequential
+from repro.models import layers as L
+
+RNG = np.random.default_rng(0)
+
+
+def test_wkv_chunk_matches_sequential():
+    B, C, H, D = 2, 16, 3, 8
+    r = jnp.asarray(RNG.normal(size=(B, C, H, D)), jnp.float32)
+    k = jnp.asarray(RNG.normal(size=(B, C, H, D)), jnp.float32)
+    v = jnp.asarray(RNG.normal(size=(B, C, H, D)), jnp.float32)
+    lw = jnp.asarray(-RNG.uniform(0.01, 2.0, size=(B, C, H, D)), jnp.float32)
+    u = jnp.asarray(RNG.normal(size=(H, D)) * 0.1, jnp.float32)
+    s0 = jnp.asarray(RNG.normal(size=(B, H, D, D)) * 0.1, jnp.float32)
+    y1, s1 = _wkv_chunk(r, k, v, lw, u, s0)
+    y2, s2 = wkv_sequential(r, k, v, lw, u, s0)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s2),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_wkv_chunking_invariance():
+    """Two chunks of 8 == one chunk of 16 (state carried across)."""
+    B, H, D = 1, 2, 8
+    r, k, v = (jnp.asarray(RNG.normal(size=(B, 16, H, D)), jnp.float32)
+               for _ in range(3))
+    lw = jnp.asarray(-RNG.uniform(0.01, 1.0, size=(B, 16, H, D)), jnp.float32)
+    u = jnp.asarray(RNG.normal(size=(H, D)) * 0.1, jnp.float32)
+    s0 = jnp.zeros((B, H, D, D), jnp.float32)
+    y_full, s_full = _wkv_chunk(r, k, v, lw, u, s0)
+    y_a, s_a = _wkv_chunk(r[:, :8], k[:, :8], v[:, :8], lw[:, :8], u, s0)
+    y_b, s_b = _wkv_chunk(r[:, 8:], k[:, 8:], v[:, 8:], lw[:, 8:], u, s_a)
+    np.testing.assert_allclose(np.asarray(y_full),
+                               np.concatenate([y_a, y_b], axis=1),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(s_full), np.asarray(s_b),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_ssd_chunk_matches_sequential():
+    B, C, H, N, P = 2, 24, 3, 8, 4
+    xh = jnp.asarray(RNG.normal(size=(B, C, H, P)), jnp.float32)
+    Bm = jnp.asarray(RNG.normal(size=(B, C, N)), jnp.float32)
+    Cm = jnp.asarray(RNG.normal(size=(B, C, N)), jnp.float32)
+    dt = jnp.asarray(RNG.uniform(0.01, 0.5, size=(B, C, H)), jnp.float32)
+    la = jnp.asarray(-RNG.uniform(0.01, 1.5, size=(B, C, H)), jnp.float32)
+    s0 = jnp.asarray(RNG.normal(size=(B, H, N, P)) * 0.1, jnp.float32)
+    y1, s1 = _ssd_chunk(xh, Bm, Cm, dt, la, s0)
+    y2, s2 = ssd_sequential(xh, Bm, Cm, dt, la, s0)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s2),
+                               rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("window", [None, 48])
+def test_attention_impls_agree(window):
+    B, H, S, D = 1, 2, 128, 16
+    chunk = 32
+    q = jnp.asarray(RNG.normal(size=(B, H, S, D)), jnp.float32)
+    k = jnp.asarray(RNG.normal(size=(B, H, S, D)), jnp.float32)
+    v = jnp.asarray(RNG.normal(size=(B, H, S, D)), jnp.float32)
+    base = L.attention(q, k, v, causal=True, window=window, impl="direct",
+                       chunk=chunk)
+    impls = ["rect"] + (["banded"] if window else ["tri"])
+    for impl in impls:
+        out = L.attention(q, k, v, causal=True, window=window, impl=impl,
+                          chunk=chunk)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(base),
+                                   rtol=2e-4, atol=2e-4,
+                                   err_msg=f"impl={impl} window={window}")
+
+
+def test_attention_decode_alignment():
+    """One-query attention must equal the last row of full attention."""
+    B, H, S, D = 2, 2, 40, 16
+    q = jnp.asarray(RNG.normal(size=(B, H, S, D)), jnp.float32)
+    k = jnp.asarray(RNG.normal(size=(B, H, S, D)), jnp.float32)
+    v = jnp.asarray(RNG.normal(size=(B, H, S, D)), jnp.float32)
+    full = L.attention(q, k, v, causal=True, impl="direct")
+    one = L.attention(q[:, :, -1:], k, v, causal=True, impl="direct")
+    np.testing.assert_allclose(np.asarray(one[:, :, 0]),
+                               np.asarray(full[:, :, -1]),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_rope_rotation_preserves_norm():
+    x = jnp.asarray(RNG.normal(size=(2, 8, 4, 16)), jnp.float32)
+    freqs = 1.0 / (100.0 ** (jnp.arange(0, 16, 2) / 16))
+    y = L.apply_rope(x, jnp.arange(8), freqs)
+    np.testing.assert_allclose(np.linalg.norm(np.asarray(x), axis=-1),
+                               np.linalg.norm(np.asarray(y), axis=-1),
+                               rtol=1e-5)

@@ -1,0 +1,96 @@
+"""Sharding policy unit tests (pure spec logic, no devices needed)."""
+
+import types
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import get_config, list_archs, SHAPES
+from repro.launch.sharding import param_pspec, _batch_spec
+from repro.launch.mesh import batch_axes
+
+
+class FakeMesh(types.SimpleNamespace):
+    """Just axis_names + shape -- enough for the spec builders."""
+
+
+SINGLE = FakeMesh(axis_names=("data", "model"),
+                  shape={"data": 16, "model": 16})
+MULTI = FakeMesh(axis_names=("pod", "data", "model"),
+                 shape={"pod": 2, "data": 16, "model": 16})
+
+
+def test_attention_weights_fsdp_x_tp():
+    cfg = get_config("qwen2-1.5b")
+    spec = param_pspec(cfg, SINGLE, "['blocks'][0]['attn']['wq']", 3,
+                       (28, 1536, 1536))
+    assert spec == P(None, "data", "model")
+    spec = param_pspec(cfg, SINGLE, "['blocks'][0]['attn']['wo']", 3,
+                       (28, 1536, 1536))
+    assert spec == P(None, "model", "data")
+
+
+def test_embed_vocab_sharded():
+    cfg = get_config("gemma2-27b")
+    spec = param_pspec(cfg, SINGLE, "['embed']", 2, (256000, 4608))
+    assert spec == P("model", "data")
+
+
+def test_indivisible_dims_stay_replicated():
+    cfg = get_config("qwen2-1.5b")
+    # 12 heads * 128 = 1536 divisible; but a dim of 10 is not
+    spec = param_pspec(cfg, SINGLE, "['blocks'][0]['attn']['wq']", 2,
+                       (10, 1536))
+    assert spec == P(None, "model")
+
+
+def test_arctic_experts_sharded_over_model():
+    cfg = get_config("arctic-480b")          # 128 experts >= 16
+    spec = param_pspec(cfg, SINGLE, "['blocks'][0]['moe']['w_gate']", 4,
+                       (35, 128, 7168, 4864))
+    assert spec == P(None, "model", "data", None)
+
+
+def test_mixtral_experts_tp_within_expert():
+    cfg = get_config("mixtral-8x7b")         # 8 experts < 16
+    spec = param_pspec(cfg, SINGLE, "['blocks'][0]['moe']['w_gate']", 4,
+                       (32, 8, 4096, 14336))
+    assert spec == P(None, None, "data", "model")
+
+
+def test_norm_scales_replicated():
+    cfg = get_config("qwen2-1.5b")
+    spec = param_pspec(cfg, SINGLE, "['blocks'][0]['ln1']['scale']", 2,
+                       (28, 1536))
+    assert spec == P(None, None)
+
+
+def test_batch_spec_divisibility():
+    assert _batch_spec(SINGLE, 256) == ("data",)
+    assert _batch_spec(MULTI, 256) == ("pod", "data")
+    assert _batch_spec(MULTI, 2) == ("pod",)
+    assert _batch_spec(SINGLE, 1) == ()
+    assert _batch_spec(MULTI, 32) == ("pod", "data")
+
+
+def test_every_arch_has_lowerable_spec_table():
+    """Param specs must be constructible for every arch's full config
+    (uses eval_shape; no allocation)."""
+    from repro.models import init_params
+    for arch in list_archs():
+        cfg = get_config(arch)
+        shapes = jax.eval_shape(
+            lambda k: init_params(cfg, k),
+            jax.ShapeDtypeStruct((2,), jnp.uint32))
+        flat, _ = jax.tree_util.tree_flatten_with_path(shapes)
+        for path, leaf in flat:
+            spec = param_pspec(cfg, SINGLE, jax.tree_util.keystr(path),
+                               len(leaf.shape), leaf.shape)
+            # spec rank matches leaf rank and all divisibility holds
+            assert len(spec) <= len(leaf.shape)
+            for dim, ax in zip(leaf.shape, spec):
+                if ax is not None:
+                    assert dim % SINGLE.shape[ax] == 0, (arch, path)

@@ -1,0 +1,164 @@
+"""Train substrate: optimizers, schedule, compression, checkpointing."""
+
+import os
+import tempfile
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.models import init_params
+from repro.train import (TrainCfg, make_train_step, init_state,
+                         get_optimizer, warmup_cosine, clip_by_global_norm,
+                         global_norm)
+from repro.train.compress import quantize, dequantize, ef_compress_tree, \
+    ef_init
+from repro.train import checkpoint as ckpt
+from repro.data.tokens import TokenPipeline
+
+
+@pytest.mark.parametrize("name,lr", [
+    ("adamw", 0.05), ("adafactor", 0.05), ("lion", 0.05)])
+def test_optimizer_quadratic_convergence(name, lr):
+    t = jnp.asarray(np.random.default_rng(0).normal(size=(16, 8)),
+                    jnp.float32)
+    opt = get_optimizer(name, weight_decay=0.0) if name != "adafactor" \
+        else get_optimizer(name)
+    params = {"x": jnp.zeros((16, 8), jnp.float32)}
+    state = opt.init(params)
+    loss = lambda p: jnp.sum((p["x"] - t) ** 2)
+    for _ in range(200):
+        g = jax.grad(loss)(params)
+        params, state = opt.update(g, state, params, lr)
+    assert float(loss(params)) < 0.5
+
+
+def test_lm_training_descends():
+    cfg = get_config("qwen2-1.5b", smoke=True)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    tcfg = TrainCfg(optimizer="adamw", peak_lr=1e-2, warmup_steps=2,
+                    total_steps=40)
+    opt = get_optimizer("adamw")
+    lr_fn = warmup_cosine(tcfg.peak_lr, tcfg.warmup_steps, tcfg.total_steps)
+    step = jax.jit(make_train_step(cfg, tcfg, opt, lr_fn))
+    state = init_state(cfg, tcfg, opt, params)
+    pipe = TokenPipeline(cfg.vocab_size, 32, 4, seed=1)
+    losses = []
+    for _ in range(12):
+        b = pipe.next_batch()
+        state, m = step(state, {"tokens": jnp.asarray(b["tokens"])})
+        losses.append(float(m["loss"]))
+    assert np.isfinite(losses).all()
+    assert losses[-1] < losses[0]
+
+
+def test_microbatch_accumulation_matches_full_batch():
+    cfg = get_config("qwen1.5-0.5b", smoke=True).with_overrides(
+        dtype="float32", remat=False)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    opt = get_optimizer("adamw", weight_decay=0.0)
+    lr_fn = lambda s: 1e-3
+    pipe = TokenPipeline(cfg.vocab_size, 16, 8, seed=2)
+    batch = {"tokens": jnp.asarray(pipe.next_batch()["tokens"])}
+    outs = {}
+    for mb in (1, 2, 4):
+        tcfg = TrainCfg(microbatches=mb)
+        step = jax.jit(make_train_step(cfg, tcfg, opt, lr_fn))
+        state = init_state(cfg, tcfg, opt, params)
+        new, m = step(state, batch)
+        outs[mb] = (float(m["loss"]), new["params"])
+    for mb in (2, 4):
+        assert abs(outs[mb][0] - outs[1][0]) < 1e-3
+        for a, b in zip(jax.tree_util.tree_leaves(outs[1][1]),
+                        jax.tree_util.tree_leaves(outs[mb][1])):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       rtol=1e-3, atol=1e-5)
+
+
+def test_grad_clip():
+    g = {"a": jnp.full((4,), 100.0)}
+    clipped, norm = clip_by_global_norm(g, 1.0)
+    assert abs(float(global_norm(clipped)) - 1.0) < 1e-5
+    assert float(norm) == pytest.approx(200.0)
+
+
+def test_quantize_roundtrip_bounded_error():
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(64, 64)) * 5, jnp.float32)
+    q, s = quantize(x)
+    err = np.abs(np.asarray(dequantize(q, s)) - np.asarray(x)).max()
+    assert err <= float(s) * 0.5 + 1e-6
+
+
+def test_error_feedback_is_unbiased_over_time():
+    """Sum of EF-compressed grads converges to sum of true grads."""
+    rng = np.random.default_rng(1)
+    total_true = np.zeros((8, 8), np.float32)
+    total_comp = np.zeros((8, 8), np.float32)
+    res = ef_init({"g": jnp.zeros((8, 8), jnp.float32)})
+    for i in range(50):
+        g = {"g": jnp.asarray(rng.normal(size=(8, 8)), jnp.float32)}
+        deq, res = ef_compress_tree(g, res)
+        total_true += np.asarray(g["g"])
+        total_comp += np.asarray(deq["g"])
+    # residual carries the outstanding error; totals match within one scale
+    gap = np.abs(total_true - (total_comp + np.asarray(res["g"]))).max()
+    assert gap < 1e-3
+
+
+def test_checkpoint_roundtrip_and_gc():
+    cfg = get_config("qwen2-1.5b", smoke=True)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    state = init_state(cfg, TrainCfg(), get_optimizer("adamw"), params)
+    with tempfile.TemporaryDirectory() as d:
+        ckpt.save(d, 5, state, extra={"cursor": 7})
+        t = ckpt.save_async(d, 9, state, extra={"cursor": 11})
+        t.join()
+        assert ckpt.latest_step(d) == 9
+        restored, extra = ckpt.restore(d, state)
+        assert extra == {"cursor": 11}
+        for a, b in zip(jax.tree_util.tree_leaves(state),
+                        jax.tree_util.tree_leaves(restored)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        ckpt.gc_checkpoints(d, keep=1)
+        assert ckpt.latest_step(d) == 9
+        assert not os.path.exists(os.path.join(d, "step_000000005"))
+
+
+def test_checkpoint_atomicity_partial_write_ignored():
+    cfg = get_config("qwen2-1.5b", smoke=True)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    state = init_state(cfg, TrainCfg(), get_optimizer("adamw"), params)
+    with tempfile.TemporaryDirectory() as d:
+        ckpt.save(d, 3, state)
+        # simulate a crashed write: tmp dir without manifest
+        os.makedirs(os.path.join(d, "step_000000007.tmp", "arrays"))
+        assert ckpt.latest_step(d) == 3
+        restored, _ = ckpt.restore(d, state)
+
+
+def test_schedule_shape():
+    lr = warmup_cosine(1.0, 10, 100, final_frac=0.1)
+    assert float(lr(jnp.int32(0))) == 0.0
+    assert float(lr(jnp.int32(10))) == pytest.approx(1.0)
+    assert float(lr(jnp.int32(100))) == pytest.approx(0.1)
+    assert float(lr(jnp.int32(55))) < 1.0
+
+
+def test_token_pipeline_determinism_and_resume():
+    p1 = TokenPipeline(1024, 16, 4, seed=3)
+    a = p1.next_batch()["tokens"]
+    b = p1.next_batch()["tokens"]
+    p2 = TokenPipeline.from_state(1024, 16, 4, p1.state())
+    c = p1.next_batch()["tokens"]
+    c2 = p2.next_batch()["tokens"]
+    np.testing.assert_array_equal(c, c2)
+    p3 = TokenPipeline(1024, 16, 4, seed=3)
+    np.testing.assert_array_equal(a, p3.next_batch()["tokens"])
+    # different hosts draw disjoint streams
+    h0 = TokenPipeline(1024, 16, 4, seed=3, host_id=0, num_hosts=2)
+    h1 = TokenPipeline(1024, 16, 4, seed=3, host_id=1, num_hosts=2)
+    assert not np.array_equal(h0.next_batch()["tokens"],
+                              h1.next_batch()["tokens"])
