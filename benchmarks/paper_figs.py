@@ -17,6 +17,7 @@ from typing import Dict, List
 import numpy as np
 
 from repro.data.seed_spreader import seed_spreader
+from repro.data.scenarios import default_scenarios
 from repro.core.dbscan import grit_dbscan
 from repro.core.grids import build_grids
 from repro.core.grid_tree import GridTree, stencil_neighbors
@@ -134,6 +135,34 @@ def bench_kappa(n: int = 8000, dims=(2, 3, 5, 7)) -> List[Dict]:
                          mean_iters=round(
                              r.stats.get("merge_iters", 0)
                              / max(r.stats.get("merge_calls", 1), 1), 3)))
+    return rows
+
+
+# -- engine API over the shared scenario catalogue ----------------------------
+
+def bench_engine_scenarios(engines=("grit", "grit-ldf"),
+                           tag: str = None) -> List[Dict]:
+    """Every engine through ``repro.engine.cluster`` on the same scenario
+    catalogue the conformance tests use (repro.data.scenarios) -- the
+    benchmark and the test suite share one data-generation path.
+
+    Emits per-(scenario, engine) rows; run.py checks that all engines
+    report identical cluster/noise counts per scenario (the full
+    label-level equivalence lives in tests/test_conformance.py).
+    """
+    from repro.engine import cluster
+    rows = []
+    for sc in default_scenarios():
+        if tag is not None and not sc.has(tag):
+            continue
+        pts = sc.points()
+        for engine in engines:
+            t, r = _timed(cluster, pts, sc.eps, sc.min_pts, engine=engine)
+            rows.append(dict(
+                bench="engine_scenarios", scenario=sc.name, d=sc.d,
+                n=sc.n, engine=engine, seconds=round(t, 4),
+                clusters=r.n_clusters, noise=r.noise_count,
+                cap_retries=r.stats.get("retries", 0)))
     return rows
 
 

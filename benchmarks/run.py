@@ -42,6 +42,12 @@ def main() -> int:
                                        else (2, 3, 5, 7))
     rows += F.bench_kappa(n=n, dims=(2, 3) if args.quick else (2, 3, 5, 7))
     rows += F.bench_merge_pruning(n=n)
+    # cross-engine matrix over the shared scenario catalogue (same data
+    # generation as tests/test_conformance.py); the device engine joins
+    # in full runs (its CPU cost is jit compiles, not clustering)
+    rows += F.bench_engine_scenarios(
+        engines=("brute", "grit", "grit-ldf") if args.quick
+        else ("brute", "grit", "grit-ldf", "device"))
     rows += D.bench_device_dbscan(n=1024 if args.quick else 2048)
     rows += D.bench_pairwise_kernels()
     rows += D.bench_lm_step()
@@ -104,6 +110,17 @@ def main() -> int:
 
     kap = [r for r in rows if r["bench"] == "kappa"]
     check("kappa <= 11 (Remark 3)", all(r["kappa_max"] <= 11 for r in kap))
+
+    # every engine must report identical cluster/noise counts on every
+    # scenario (Theorem 4 exactness; label-level equivalence is enforced
+    # by tests/test_conformance.py)
+    scen = {}
+    for r in rows:
+        if r["bench"] == "engine_scenarios":
+            scen.setdefault(r["scenario"], set()).add(
+                (r["clusters"], r["noise"]))
+    check("engines agree on the scenario matrix (Theorem 4)",
+          bool(scen) and all(len(v) == 1 for v in scen.values()))
     return 0 if ok else 1
 
 

@@ -18,7 +18,7 @@ def main():
     import jax.numpy as jnp
     from repro.configs import get_config
     from repro.models import init_params, forward
-    from repro.core.dbscan import grit_dbscan
+    from repro.engine import cluster
     from repro.data.tokens import TokenPipeline
 
     cfg = get_config("qwen2-1.5b", smoke=True).with_overrides(
@@ -58,15 +58,14 @@ def main():
     min_pts = 8
     best = None
     for eps in (3000.0, 5000.0, 8000.0, 12000.0, 18000.0):
-        r_try = grit_dbscan(proj, eps, min_pts)
-        noise = int((r_try.labels < 0).sum())
-        score = (r_try.stats["num_clusters"], -noise)
-        if noise <= 0.25 * len(proj) and \
+        r_try = cluster(proj, eps, min_pts, engine="grit")
+        score = (r_try.n_clusters, -r_try.noise_count)
+        if r_try.noise_count <= 0.25 * len(proj) and \
                 (best is None or score > best[0]):
             best = (score, eps, r_try)
     assert best is not None, "no eps produced a low-noise clustering"
     _, eps, r = best
-    found = r.stats["num_clusters"]
+    found = r.n_clusters
     print(f"GriT-DBSCAN (eps={eps:.0f}): {found} clusters, "
           f"{int((r.labels < 0).sum())} noise points, "
           f"kappa_max={r.stats.get('merge_max_iters', 0)}")

@@ -1,18 +1,15 @@
-"""Quickstart: exact GriT-DBSCAN on seed-spreader data, three engines.
+"""Quickstart: exact GriT-DBSCAN through the unified engine API.
 
     PYTHONPATH=src python examples/quickstart.py
 
-Runs the paper-faithful host pipeline, the LDF variant, and the fully
-in-graph device pipeline on the same data and verifies all three produce
-DBSCAN-equivalent clusterings.
+One entry point (``repro.engine.cluster``) drives every backend: the
+paper-faithful host pipeline, the LDF variant, and the fully in-graph
+device pipeline with adaptive static caps.  All are verified equivalent
+to the O(n^2) oracle.
 """
 
-import numpy as np
-import jax.numpy as jnp
-
 from repro.data.seed_spreader import seed_spreader
-from repro.core.dbscan import grit_dbscan, brute_dbscan
-from repro.core.device_dbscan import device_dbscan, GritCaps
+from repro.engine import cluster, engine_descriptions
 from repro.core.validate import assert_dbscan_equivalent
 
 
@@ -22,10 +19,14 @@ def main():
     print(f"generating {n} points in {d}-D (seed-spreader, varden)...")
     pts = seed_spreader(n, d, variant="varden", restarts=6, seed=0)
 
-    print("GriT-DBSCAN (paper Algorithm 6, grid tree + FastMerging):")
-    r = grit_dbscan(pts, eps, min_pts)
+    print("registered engines:")
+    for name, desc in engine_descriptions().items():
+        print(f"  {name:12s} {desc.splitlines()[0]}")
+
+    print("\nGriT-DBSCAN (paper Algorithm 6, grid tree + FastMerging):")
+    r = cluster(pts, eps, min_pts, engine="grit")
     s = r.stats
-    print(f"  clusters={s['num_clusters']}  grids={s['num_grids']}  "
+    print(f"  clusters={r.n_clusters}  grids={s['num_grids']}  "
           f"kappa_max={s.get('merge_max_iters', 0)}  "
           f"merge dist evals={s.get('merge_dist_evals', 0):,}")
     print(f"  time: partition {s['t_partition']*1e3:.1f}ms  "
@@ -34,25 +35,22 @@ def main():
           f"assign {s['t_assign']*1e3:.1f}ms")
 
     print("GriT-DBSCAN-LDF (union-find, low-density-first):")
-    r_ldf = grit_dbscan(pts, eps, min_pts, variant="ldf")
-    print(f"  clusters={r_ldf.stats['num_clusters']}  "
+    r_ldf = cluster(pts, eps, min_pts, engine="grit-ldf")
+    print(f"  clusters={r_ldf.n_clusters}  "
           f"merge checks={r_ldf.stats['merge_checks']} "
           f"(vs {s['merge_checks']} for BFS order)")
 
-    print("device pipeline (single jitted XLA program):")
-    caps = GritCaps(grid_cap=1024, frontier_cap=256, k_cap=48, c_cap=2048,
-                    m_cap=2048, pair_cap=8192, grid_block=128,
-                    pair_block=512)
-    r_dev = device_dbscan(jnp.asarray(pts, jnp.float32), eps, min_pts, caps)
-    print(f"  clusters={int(r_dev.num_clusters)}  "
-          f"overflow={bool(r_dev.overflow)}")
+    print("device pipeline (single jitted XLA program, adaptive caps):")
+    r_dev = cluster(pts, eps, min_pts, engine="device")
+    trail = " -> ".join(str(a["overflow"] or "ok") for a in r_dev.attempts)
+    print(f"  clusters={r_dev.n_clusters}  "
+          f"cap attempts: {trail}  "
+          f"(caps estimated from grid stats, no hand tuning)")
 
     print("validating all three against the O(n^2) oracle...")
-    ref = brute_dbscan(pts, eps, min_pts)
-    assert_dbscan_equivalent(pts, eps, min_pts, ref, r.labels)
-    assert_dbscan_equivalent(pts, eps, min_pts, ref, r_ldf.labels)
-    assert_dbscan_equivalent(pts, eps, min_pts, ref,
-                             np.asarray(r_dev.labels))
+    ref = cluster(pts, eps, min_pts, engine="brute")
+    for res in (r, r_ldf, r_dev):
+        assert_dbscan_equivalent(pts, eps, min_pts, ref.labels, res.labels)
     print("all equivalent. done.")
 
 

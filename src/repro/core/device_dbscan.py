@@ -23,7 +23,7 @@ from __future__ import annotations
 
 import dataclasses
 from functools import partial
-from typing import Optional
+from typing import ClassVar, Optional, Tuple
 
 import numpy as np
 import jax
@@ -35,6 +35,63 @@ from .merging import fast_merging_batch
 from .labels import label_propagation
 
 PAD_COORD = 1e15
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class OverflowReport:
+    """Per-cap overflow flags (scalar device bools).
+
+    Each flag names the ``GritCaps`` field (or distributed halo cap) that
+    was exceeded, so a driver can grow exactly the caps that overflowed
+    instead of blindly scaling everything.  When a flag fires the result
+    is a *subset* (silently truncated) and must not be trusted.
+    """
+
+    grid: jnp.ndarray        # grid_cap: non-empty grids truncated
+    frontier: jnp.ndarray    # frontier_cap: grid-tree level frontier
+    neighbors: jnp.ndarray   # k_cap: neighbor grids per grid
+    candidates: jnp.ndarray  # c_cap: candidate points per small grid
+    core_set: jnp.ndarray    # m_cap: core points per grid (merging)
+    pairs: jnp.ndarray       # pair_cap: core-grid merge pairs
+    halo: jnp.ndarray        # halo_cap: distributed boundary exchange
+
+    FIELDS: ClassVar[Tuple[str, ...]] = (
+        "grid", "frontier", "neighbors", "candidates", "core_set",
+        "pairs", "halo")
+
+    def tree_flatten(self):
+        return tuple(getattr(self, f) for f in self.FIELDS), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, ch):
+        return cls(*ch)
+
+    @classmethod
+    def none(cls) -> "OverflowReport":
+        return cls(*(jnp.zeros((), bool) for _ in cls.FIELDS))
+
+    @classmethod
+    def from_vector(cls, vec) -> "OverflowReport":
+        assert len(vec) == len(cls.FIELDS)
+        return cls(*(vec[i] for i in range(len(cls.FIELDS))))
+
+    def as_vector(self) -> jnp.ndarray:
+        return jnp.stack([jnp.asarray(getattr(self, f), bool)
+                          for f in self.FIELDS])
+
+    def any(self):
+        out = jnp.zeros((), bool)
+        for f in self.FIELDS:
+            out = out | jnp.asarray(getattr(self, f), bool)
+        return out
+
+    def overflowing(self) -> Tuple[str, ...]:
+        """Host-side: names of the caps that overflowed."""
+        return tuple(f for f in self.FIELDS if bool(getattr(self, f)))
+
+    def __bool__(self) -> bool:
+        return bool(self.any())
 
 
 @dataclasses.dataclass(frozen=True)
@@ -72,9 +129,11 @@ class DeviceDBSCANResult:
     core: jnp.ndarray          # [n] bool, original order
     num_clusters: jnp.ndarray  # [] int32
     overflow: jnp.ndarray      # [] bool -- any static cap exceeded
+    report: OverflowReport     # which cap(s) overflowed
 
     def tree_flatten(self):
-        return (self.labels, self.core, self.num_clusters, self.overflow), None
+        return (self.labels, self.core, self.num_clusters, self.overflow,
+                self.report), None
 
     @classmethod
     def tree_unflatten(cls, aux, ch):
@@ -125,7 +184,7 @@ def device_dbscan(points: jnp.ndarray, eps, min_pts: int, caps: GritCaps,
 
     # ---- step 1: grids + grid tree neighbors --------------------------
     dg = build_grids_device(pts, eps, caps.grid_cap)
-    nbr, nbr_off, ovf_tree = device_neighbor_table(
+    nbr, nbr_off, ovf_frontier, ovf_k = device_neighbor_table(
         dg.ids, dg.num_grids, frontier_cap=caps.frontier_cap,
         k_cap=caps.k_cap, include_self=False)
     G = caps.grid_cap
@@ -133,7 +192,6 @@ def device_dbscan(points: jnp.ndarray, eps, min_pts: int, caps: GritCaps,
     sorted_valid = point_valid[dg.order]
 
     spts = dg.sorted_points
-    overflow = dg.overflow | ovf_tree
 
     # ---- step 2: core points ------------------------------------------
     # all-core shortcut: grids with >= MinPts (valid) points
@@ -141,6 +199,10 @@ def device_dbscan(points: jnp.ndarray, eps, min_pts: int, caps: GritCaps,
         sorted_valid.astype(jnp.int32))
     big = (valid_counts >= min_pts) & live
     core_sorted = big[dg.point_grid] & sorted_valid
+    # grids holding only padding points (all invalid points share
+    # PAD_COORD, so they land in grids of their own) need no core scan
+    # and must not count against c_cap
+    occupied = live & (valid_counts > 0)
 
     p_cap = max(min_pts - 1, 1)
 
@@ -150,7 +212,7 @@ def device_dbscan(points: jnp.ndarray, eps, min_pts: int, caps: GritCaps,
         cand_valid = cand_valid & sorted_valid[cand_idx]
         own_slot = jnp.arange(p_cap, dtype=jnp.int32)[None, :]
         own_idx = dg.starts[gsel][:, None] + own_slot
-        small = (~big[gsel]) & live[gsel]
+        small = (~big[gsel]) & occupied[gsel]
         own_valid = (own_slot < dg.counts[gsel][:, None]) & small[:, None]
         own_idx = jnp.where(own_valid, own_idx, 0)
         a = spts[own_idx]                       # [B, P, d]
@@ -166,12 +228,12 @@ def device_dbscan(points: jnp.ndarray, eps, min_pts: int, caps: GritCaps,
     own_idx, is_core, own_valid, c_ovf = jax.lax.map(core_block, gsel_all)
     core_sorted = core_sorted.at[own_idx.reshape(-1)].max(
         (is_core & own_valid).reshape(-1))
-    overflow = overflow | jnp.any(c_ovf)
+    ovf_candidates = jnp.any(c_ovf)
 
     core_per_grid = jnp.zeros((G,), jnp.int32).at[dg.point_grid].add(
         core_sorted.astype(jnp.int32))
     core_grid = (core_per_grid > 0) & live
-    overflow = overflow | jnp.any(core_per_grid > caps.m_cap)
+    ovf_core_set = jnp.any(core_per_grid > caps.m_cap)
 
     # ---- step 3: merging -----------------------------------------------
     # pairs (g, g') with g' in Nei(g), both core, deduped by g' > g
@@ -186,7 +248,7 @@ def device_dbscan(points: jnp.ndarray, eps, min_pts: int, caps: GritCaps,
     pg = gg.reshape(-1)[take]
     ph = jnp.maximum(g2.reshape(-1), 0)[take]
     pvalid = flat_valid[take]
-    overflow = overflow | (jnp.sum(flat_valid) > caps.pair_cap)
+    ovf_pairs = jnp.sum(flat_valid) > caps.pair_cap
 
     def gather_core_set(g):
         w = jnp.arange(caps.m_cap, dtype=jnp.int32)
@@ -231,7 +293,7 @@ def device_dbscan(points: jnp.ndarray, eps, min_pts: int, caps: GritCaps,
         cand_valid = cand_valid & core_sorted[cand_idx]
         own_slot = jnp.arange(p_cap, dtype=jnp.int32)[None, :]
         own_idx = dg.starts[gsel][:, None] + own_slot
-        small = (~big[gsel]) & live[gsel]
+        small = (~big[gsel]) & occupied[gsel]
         own_valid = (own_slot < dg.counts[gsel][:, None]) & small[:, None]
         own_idx_s = jnp.where(own_valid, own_idx, 0)
         noncore = own_valid & ~core_sorted[own_idx_s]
@@ -257,6 +319,10 @@ def device_dbscan(points: jnp.ndarray, eps, min_pts: int, caps: GritCaps,
 
     labels = jnp.zeros((n,), jnp.int32).at[dg.order].set(lab_sorted)
     core = jnp.zeros((n,), bool).at[dg.order].set(core_sorted)
+    report = OverflowReport(
+        grid=dg.overflow, frontier=ovf_frontier, neighbors=ovf_k,
+        candidates=ovf_candidates, core_set=ovf_core_set, pairs=ovf_pairs,
+        halo=jnp.zeros((), bool))
     return DeviceDBSCANResult(labels=labels, core=core,
                               num_clusters=num_clusters,
-                              overflow=overflow)
+                              overflow=report.any(), report=report)

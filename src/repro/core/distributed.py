@@ -39,7 +39,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from .device_dbscan import device_dbscan, GritCaps, PAD_COORD
+from .device_dbscan import (device_dbscan, GritCaps, OverflowReport,
+                            PAD_COORD)
 from .labels import label_propagation
 
 
@@ -74,7 +75,13 @@ def shard_points_by_slab(points: np.ndarray, eps: float, n_shards: int,
         cuts.append(min(tgt, n))
     cuts.append(n)
     counts = [cuts[i + 1] - cuts[i] for i in range(n_shards)]
-    cap = pad_to or int(max(max(counts), 1))
+    need = int(max(max(counts), 1))
+    if pad_to is not None and pad_to < need:
+        raise ValueError(
+            f"pad_to={pad_to} is smaller than the largest slab ({need} "
+            f"points); slab cuts land on grid lines, so per-shard counts "
+            f"cannot be reduced below that")
+    cap = pad_to or need
     out = np.full((n_shards, cap, d), PAD_COORD, np.float32)
     valid = np.zeros((n_shards, cap), bool)
     perm = np.full((n_shards, cap), -1, np.int64)
@@ -115,7 +122,8 @@ def make_cluster_step(mesh: Mesh, eps, min_pts: int, caps: ClusterCaps,
     """Build the SPMD cluster step for ``mesh`` (all axes flattened).
 
     Returns a jit-able fn: (points [N, d] f32, valid [N] bool) ->
-    (labels [N] int32 global cluster ids (-1 noise), overflow [] bool),
+    (labels [N] int32 global cluster ids (-1 noise),
+     overflow ``OverflowReport`` with per-cap flags OR-ed over shards),
     with N = n_shards * n_points_shard sharded over all mesh axes.
     """
     axes = tuple(mesh.axis_names)
@@ -191,46 +199,71 @@ def make_cluster_step(mesh: Mesh, eps, min_pts: int, caps: ClusterCaps,
         glab = jnp.where(own_labels >= 0,
                          gmap[me * L + jnp.maximum(own_labels, 0)],
                          -1)
-        overflow = res.overflow | ov1 | ov2
-        return glab, overflow[None]
+        report = res.report
+        report.halo = report.halo | ov1 | ov2
+        return glab, report.as_vector()[None, :]
 
     from jax.experimental.shard_map import shard_map
     spec = P(axes)
     fn = shard_map(local_step, mesh=mesh,
                    in_specs=(P(axes, None), spec),
-                   out_specs=(spec, spec),
+                   out_specs=(spec, P(axes, None)),
                    check_rep=False)
 
     def cluster_step(points, valid):
-        labels, ovf = fn(points, valid)
-        return labels, jnp.any(ovf)
+        labels, flags = fn(points, valid)           # flags [n_shards, F]
+        return labels, OverflowReport.from_vector(jnp.any(flags, axis=0))
 
     return cluster_step
 
 
+# jitted SPMD steps keyed by everything that shapes the program; reused
+# across distributed_dbscan calls so the adaptive driver's quantized cap
+# retries (and repeated runs on similarly-sized data) don't recompile
+_STEP_CACHE: dict = {}
+_STEP_CACHE_MAX = 32
+
+
+def _cached_cluster_step(mesh: Mesh, eps: float, min_pts: int,
+                         caps: ClusterCaps, n_points_shard: int, d: int):
+    key = (mesh, float(eps), int(min_pts), caps, int(n_points_shard),
+           int(d))
+    if key not in _STEP_CACHE:
+        if len(_STEP_CACHE) >= _STEP_CACHE_MAX:
+            _STEP_CACHE.clear()
+        step = make_cluster_step(mesh, eps, min_pts, caps,
+                                 n_points_shard, d)
+        _STEP_CACHE[key] = jax.jit(step)
+    return _STEP_CACHE[key]
+
+
 def distributed_dbscan(points: np.ndarray, eps: float, min_pts: int,
-                       mesh: Mesh, caps: Optional[ClusterCaps] = None
-                       ) -> Tuple[np.ndarray, bool]:
+                       mesh: Mesh, caps: Optional[ClusterCaps] = None,
+                       pad_to: Optional[int] = None
+                       ) -> Tuple[np.ndarray, OverflowReport]:
     """Host-facing wrapper: pre-shard, run the SPMD step, unpermute.
 
-    Returns (labels in original point order [n], overflow flag).
+    Returns (labels in original point order [n], ``OverflowReport``).
+    The report is truthy iff any static cap overflowed on any shard
+    (``bool(report)`` keeps the legacy overflow-flag contract).
     """
     caps = caps or ClusterCaps()
     axes = tuple(mesh.axis_names)
     n_shards = int(np.prod([mesh.shape[a] for a in axes]))
-    pts_sh, valid_sh, perm = shard_points_by_slab(points, eps, n_shards)
+    pts_sh, valid_sh, perm = shard_points_by_slab(points, eps, n_shards,
+                                                  pad_to=pad_to)
     cap = pts_sh.shape[1]
-    step = make_cluster_step(mesh, eps, min_pts, caps, cap,
-                             points.shape[1])
+    step = _cached_cluster_step(mesh, eps, min_pts, caps, cap,
+                                points.shape[1])
     flat_pts = jnp.asarray(pts_sh.reshape(n_shards * cap, -1))
     flat_valid = jnp.asarray(valid_sh.reshape(-1))
     sharding = NamedSharding(mesh, P(axes))
     flat_pts = jax.device_put(flat_pts, NamedSharding(mesh, P(axes, None)))
     flat_valid = jax.device_put(flat_valid, sharding)
-    labels, ovf = jax.jit(step)(flat_pts, flat_valid)
+    labels, report = step(flat_pts, flat_valid)
     labels = np.asarray(labels).reshape(n_shards, cap)
     out = np.full(len(points), -1, np.int64)
     for i in range(n_shards):
         m = perm[i] >= 0
         out[perm[i][m]] = labels[i][m]
-    return out, bool(ovf)
+    return out, jax.device_get(report)

@@ -285,7 +285,8 @@ def device_neighbor_table(sorted_ids: jnp.ndarray, num_grids: jnp.ndarray,
       nbr:     [G_cap, k_cap] int32 neighbor grid rows (-1 padded),
                offset-ascending per row (paper's sorted order).
       nbr_off: [G_cap, k_cap] int32 integer offsets (side^2 units).
-      overflow: [] bool -- any cap exceeded (result then a subset).
+      ovf_frontier: [] bool -- frontier_cap exceeded (result a subset).
+      ovf_k:        [] bool -- k_cap exceeded (result a subset).
     """
     G_cap, d = sorted_ids.shape
     r = radius(d)
@@ -306,7 +307,7 @@ def device_neighbor_table(sorted_ids: jnp.ndarray, num_grids: jnp.ndarray,
 
         lo, hi = pad(lo0, 0), pad(hi0, 0)
         off, valid = pad(off0, BIG), pad(valid0, False)
-        overflow = jnp.zeros((), bool)
+        ovf_frontier = jnp.zeros((), bool)
 
         for j in range(d):
             col = sorted_ids[:, j]
@@ -332,11 +333,18 @@ def device_neighbor_table(sorted_ids: jnp.ndarray, num_grids: jnp.ndarray,
             key = jnp.where(nval, noff, BIG)
             order = jnp.argsort(key, stable=True)
             take = order[:frontier_cap]
-            overflow = overflow | (jnp.sum(nval) > frontier_cap)
+            ovf_frontier = ovf_frontier | (jnp.sum(nval) > frontier_cap)
             lo, hi = nlo[take], nhi[take]
             off, valid = noff[take], nval[take]
 
         # leaves: each surviving range is a single grid row (full id fixed)
+        if k_cap > frontier_cap:
+            # leaf arrays are frontier-wide; widen so the promised
+            # [., k_cap] output shape holds when k_cap > frontier_cap
+            ext = k_cap - frontier_cap
+            lo = jnp.concatenate([lo, jnp.full((ext,), 0, lo.dtype)])
+            off = jnp.concatenate([off, jnp.full((ext,), BIG, off.dtype)])
+            valid = jnp.concatenate([valid, jnp.zeros((ext,), bool)])
         grid = jnp.where(valid, lo, -1)
         if not include_self:
             is_self = valid & (lo == qid_row)
@@ -344,13 +352,14 @@ def device_neighbor_table(sorted_ids: jnp.ndarray, num_grids: jnp.ndarray,
             grid = jnp.where(valid, grid, -1)
             off = jnp.where(valid, off, BIG)
             order = jnp.argsort(off, stable=True)
-            grid, off = grid[order], off[order]
-        overflow = overflow | (jnp.sum(valid) > k_cap)
-        return grid[:k_cap], jnp.where(valid, off, -1)[:k_cap], overflow
+            grid, off, valid = grid[order], off[order], valid[order]
+        ovf_k = jnp.sum(valid) > k_cap
+        return (grid[:k_cap], jnp.where(valid, off, -1)[:k_cap],
+                ovf_frontier, ovf_k)
 
     rows = jnp.arange(G_cap, dtype=jnp.int32)
-    nbr, nbr_off, ovf = jax.vmap(one_query)(rows)
+    nbr, nbr_off, ovf_f, ovf_k = jax.vmap(one_query)(rows)
     live = rows < num_grids
     nbr = jnp.where(live[:, None], nbr, -1)
     nbr_off = jnp.where(live[:, None], nbr_off, -1)
-    return nbr, nbr_off, jnp.any(ovf & live)
+    return nbr, nbr_off, jnp.any(ovf_f & live), jnp.any(ovf_k & live)

@@ -18,6 +18,28 @@ from __future__ import annotations
 import numpy as np
 
 
+def contested_border_mask(points: np.ndarray, eps: float,
+                          core: np.ndarray,
+                          core_labels: np.ndarray) -> np.ndarray:
+    """True for non-core points reachable from cores of >1 cluster.
+
+    Those are the only points whose DBSCAN label is genuinely
+    order-dependent; everywhere else the output is unique and two exact
+    engines must agree label-for-label (after canonicalization).
+    ``core_labels`` is any labeling of the core partition.
+    """
+    pts = np.asarray(points, np.float64)
+    eps2 = float(eps) ** 2
+    out = np.zeros(len(pts), bool)
+    cpts = pts[core]
+    clab = np.asarray(core_labels)[core]
+    for i in np.flatnonzero(~core):
+        d2 = ((cpts - pts[i]) ** 2).sum(1)
+        cands = np.unique(clab[d2 <= eps2])
+        out[i] = len(cands) > 1
+    return out
+
+
 def core_flags(points: np.ndarray, eps: float, min_pts: int,
                chunk: int = 2048) -> np.ndarray:
     pts = np.asarray(points, np.float64)
@@ -73,3 +95,30 @@ def assert_dbscan_equivalent(points: np.ndarray, eps: float, min_pts: int,
             d2 = ((pts[same] - pts[i]) ** 2).sum(1)
             assert (d2 <= eps2).any(), \
                 f"labeling {name}: border {i} assigned to cluster w/o core in eps"
+
+
+def assert_labels_conformant(points: np.ndarray, eps: float, min_pts: int,
+                             labels_ref: np.ndarray,
+                             labels_got: np.ndarray,
+                             core: np.ndarray | None = None) -> None:
+    """Strictest meaningful engine-equality check.
+
+    1. DBSCAN-equivalence (core partition, noise set, border validity)
+       via :func:`assert_dbscan_equivalent`.
+    2. Label-for-label equality after ``canonicalize_labels`` on every
+       point whose output DBSCAN defines uniquely -- i.e. everything
+       except *contested* borders (non-core points within eps of cores
+       of more than one cluster, which Alg. 6 assigns order-dependently).
+    """
+    from .dbscan import canonicalize_labels
+
+    pts = np.asarray(points, np.float64)
+    if core is None:
+        core = core_flags(pts, eps, min_pts)
+    la, lb = np.asarray(labels_ref), np.asarray(labels_got)
+    assert_dbscan_equivalent(pts, eps, min_pts, la, lb, core=core)
+    contested = contested_border_mask(pts, eps, core, la)
+    m = ~contested
+    np.testing.assert_array_equal(
+        canonicalize_labels(la[m]), canonicalize_labels(lb[m]),
+        err_msg="canonicalized labels differ on uncontested points")

@@ -1,0 +1,233 @@
+"""Adaptive-cap driver for the static-shape device pipeline.
+
+The in-graph GriT pipeline (``device_dbscan``) trades the paper's dynamic
+data structures for static caps; every cap carries an overflow flag.
+Before this driver, callers hand-tuned ``GritCaps`` per dataset and a
+missed cap silently truncated the result.  Now:
+
+1. :func:`estimate_caps` derives an initial ``GritCaps`` from *host-side
+   grid statistics* — an O(n log n) pass that is vanishing next to the
+   clustering itself: the non-empty-grid count bounds ``grid_cap``, the
+   max grid occupancy bounds ``m_cap`` (core points per grid can never
+   exceed occupancy), and the stencil bound (3^d - 1, clamped to the
+   exact offset-stencil size) seeds ``k_cap``.
+2. :func:`adaptive_device_dbscan` runs the jitted pipeline, reads the
+   per-cap :class:`OverflowReport`, geometrically grows exactly the caps
+   that overflowed, and retries.  Caps are quantized to powers of two /
+   block multiples so re-runs on similarly-sized data reuse the jit
+   cache instead of recompiling per dataset.
+
+Growth is geometric (default 2x), so reaching a true bound B from an
+under-estimate costs O(log B) recompiles worst case; each cap is also
+clamped at its provable maximum (e.g. candidates <= n, neighbors <= the
+exact stencil size), so the loop terminates even on adversarial data.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import List, Optional, Tuple
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core.device_dbscan import (GritCaps, DeviceDBSCANResult,
+                                      OverflowReport, device_dbscan)
+from repro.core.grids import identifiers
+from repro.core.grid_tree import offset_stencil, radius
+
+
+class CapOverflowError(RuntimeError):
+    """Raised when the adaptive driver exhausts its retries."""
+
+    def __init__(self, attempts: List[dict]):
+        self.attempts = attempts
+        last = attempts[-1]
+        super().__init__(
+            f"static caps still overflowing after {len(attempts)} "
+            f"attempt(s): {last['overflow']}; last caps {last['caps']}")
+
+
+def _pow2_at_least(x: int, lo: int = 1) -> int:
+    return max(lo, 1 << max(int(x) - 1, 0).bit_length())
+
+
+def _mult8(x: int) -> int:
+    return max(8, (int(x) + 7) // 8 * 8)
+
+
+def stencil_neighbor_bound(d: int) -> int:
+    """Exact max number of neighboring non-empty grids: the size of the
+    offset-< d stencil, minus the grid itself."""
+    deltas, _ = offset_stencil(d)
+    return int(len(deltas)) - 1
+
+
+def grid_stats(points: np.ndarray, eps: float,
+               point_valid: Optional[np.ndarray] = None
+               ) -> Tuple[int, int]:
+    """(non-empty grid count, max occupancy) over the *valid* points."""
+    pts = np.asarray(points, np.float64)
+    if point_valid is not None:
+        pts = pts[np.asarray(point_valid, bool)]
+    if len(pts) == 0:
+        return 1, 1
+    ids, _, _ = identifiers(pts, eps)
+    _, counts = np.unique(ids, axis=0, return_counts=True)
+    return int(len(counts)), int(counts.max())
+
+
+def estimate_caps(points: np.ndarray, eps: float, min_pts: int,
+                  point_valid: Optional[np.ndarray] = None,
+                  margin: float = 1.25,
+                  extra_grids: int = 2) -> GritCaps:
+    """Initial ``GritCaps`` from host grid statistics (see module doc).
+
+    ``extra_grids`` reserves slots for the sentinel grids that padding
+    points (``point_valid == False`` -> PAD_COORD) occupy.
+    """
+    pts = np.asarray(points)
+    n, d = pts.shape
+    num_grids, max_occ = grid_stats(pts, eps, point_valid)
+
+    grid_cap = _pow2_at_least(
+        int(math.ceil(num_grids * margin)) + extra_grids, lo=8)
+    grid_block = min(64, grid_cap)
+
+    # 3^d - 1 stencil heuristic, clamped to the exact offset-stencil
+    # size (the provable per-grid neighbor maximum); at low d the exact
+    # bound is small enough to just provision outright
+    bound = stencil_neighbor_bound(d)
+    k_est = bound if bound <= 32 else max(3 ** d - 1, 8)
+    k_cap = _mult8(min(k_est, bound, max(grid_cap - 1, 1)))
+
+    m_cap = _mult8(max_occ)
+    # candidate list of a small grid: its own < MinPts points plus the
+    # points of up to k_cap neighbor grids (which may be all-core grids
+    # at full occupancy)
+    c_cap = _pow2_at_least(min(n, (min_pts - 1) + k_cap * max_occ), lo=32)
+
+    # deduped (g < g') merge pairs are bounded by G * k / 2; density
+    # rarely reaches it, but a half-bound start avoids a recompile on
+    # blob-like data where most neighbor pairs are core-core
+    pair_cap = _pow2_at_least(num_grids * k_cap // 2 + 8, lo=64)
+    pair_block = min(256, pair_cap)
+
+    r = 2 * radius(d) + 1
+    frontier_cap = _pow2_at_least(min(int(r ** max(d - 1, 1)), 256), lo=16)
+
+    # paper Theorem 3: FastMerging terminates within |s_i| + |s_j|
+    # iterations; lax.while_loop makes a generous bound free at runtime
+    merge_iters = 2 * m_cap + 4
+
+    return GritCaps(grid_cap=grid_cap, frontier_cap=frontier_cap,
+                    k_cap=k_cap, c_cap=c_cap, m_cap=m_cap,
+                    pair_cap=pair_cap, grid_block=grid_block,
+                    pair_block=pair_block, merge_iters=merge_iters)
+
+
+def grow_caps(caps: GritCaps, overflowed: Tuple[str, ...], *,
+              n: int, d: int, growth: float = 2.0) -> GritCaps:
+    """Grow exactly the caps named in ``overflowed`` (an
+    ``OverflowReport.overflowing()`` tuple), geometrically, clamped at
+    each cap's provable maximum."""
+    assert overflowed, "grow_caps called without any overflow"
+    kw = dataclasses.asdict(caps)
+    g = lambda x: int(math.ceil(x * growth))
+
+    if "grid" in overflowed:
+        kw["grid_cap"] = _pow2_at_least(g(caps.grid_cap))
+    if "frontier" in overflowed:
+        kw["frontier_cap"] = _pow2_at_least(
+            min(g(caps.frontier_cap), kw["grid_cap"]))
+    if "neighbors" in overflowed:
+        kw["k_cap"] = _mult8(min(g(caps.k_cap), stencil_neighbor_bound(d)))
+    if "candidates" in overflowed:
+        kw["c_cap"] = min(_pow2_at_least(g(caps.c_cap)),
+                          _pow2_at_least(n))
+    if "core_set" in overflowed:
+        kw["m_cap"] = _mult8(min(g(caps.m_cap), n))
+    if "pairs" in overflowed:
+        kw["pair_cap"] = _pow2_at_least(
+            min(g(caps.pair_cap), kw["grid_cap"] * kw["k_cap"]))
+
+    kw["grid_block"] = min(64, kw["grid_cap"])
+    kw["pair_block"] = min(256, kw["pair_cap"])
+    kw["merge_iters"] = 2 * kw["m_cap"] + 4
+    new = GritCaps(**kw)
+    cap_of = {"grid": "grid_cap", "frontier": "frontier_cap",
+              "neighbors": "k_cap", "candidates": "c_cap",
+              "core_set": "m_cap", "pairs": "pair_cap"}
+    grew = any(getattr(new, cap_of[f]) > getattr(caps, cap_of[f])
+               for f in overflowed if f in cap_of)
+    if not grew:
+        # every overflowing cap is already at its clamp -- nothing left
+        # to grow; surface that instead of looping forever (drivers with
+        # a retry history catch this and re-raise with the full trail)
+        raise CapOverflowError(
+            [{"caps": dataclasses.asdict(caps), "overflow": overflowed}])
+    return new
+
+
+def adaptive_loop(run, grow, describe, caps, max_retries: int):
+    """The shared grow/retry protocol behind both adaptive drivers.
+
+    ``run(caps) -> (result, OverflowReport)`` executes one attempt;
+    ``grow(caps, overflowed) -> caps`` grows exactly the named caps (may
+    raise :class:`CapOverflowError` at a clamp); ``describe(caps)``
+    renders caps for the attempt trail.  When ``grid`` overflows, the
+    flags downstream of the grid table (frontier, neighbors, candidates,
+    core_set, pairs) are dropped for that round: a truncated table
+    funnels the excess points into the last grid, making them unreliable
+    until the grids fit.  ``halo`` is measured from the raw points and
+    stays trustworthy, so it keeps growing alongside ``grid``.
+
+    Returns (result, attempts); raises :class:`CapOverflowError` with
+    the full real attempt trail on exhaustion or clamp.
+    """
+    attempts: List[dict] = []
+    for _ in range(max_retries + 1):
+        result, report = run(caps)
+        overflowed = report.overflowing()
+        attempts.append({"caps": describe(caps), "overflow": overflowed})
+        if not overflowed:
+            return result, attempts
+        if "grid" in overflowed:
+            overflowed = tuple(f for f in overflowed
+                               if f in ("grid", "halo"))
+        try:
+            caps = grow(caps, overflowed)
+        except CapOverflowError:
+            raise CapOverflowError(attempts) from None
+    raise CapOverflowError(attempts)
+
+
+def adaptive_device_dbscan(points, eps: float, min_pts: int,
+                           caps: Optional[GritCaps] = None, *,
+                           point_valid=None, max_retries: int = 8,
+                           growth: float = 2.0
+                           ) -> Tuple[DeviceDBSCANResult, List[dict]]:
+    """Run ``device_dbscan``, growing caps on overflow until exact.
+
+    Returns (result, attempts); ``attempts`` records the caps and the
+    overflowing-cap names of every try (the last entry has no overflow).
+    Raises :class:`CapOverflowError` if ``max_retries`` growth rounds do
+    not suffice (geometric growth makes that pathological).
+    """
+    pts = jnp.asarray(points, jnp.float32)
+    n, d = pts.shape
+    if caps is None:
+        caps = estimate_caps(np.asarray(points), eps, min_pts,
+                             point_valid=None if point_valid is None
+                             else np.asarray(point_valid))
+
+    def run(c):
+        res = device_dbscan(pts, eps, min_pts, c, point_valid=point_valid)
+        return res, jax.device_get(res.report)
+
+    return adaptive_loop(
+        run,
+        lambda c, flags: grow_caps(c, flags, n=n, d=d, growth=growth),
+        dataclasses.asdict, caps, max_retries)

@@ -1,0 +1,123 @@
+"""Engine registry: one ``cluster()`` entry point, many backends.
+
+Every clustering backend in the repo registers itself here under a short
+name (``brute``, ``grit``, ``grit-ldf``, ``device``, ``distributed``)
+and is invoked through :func:`cluster` with identical semantics: exact
+DBSCAN, labels in original point order.  ``engine="auto"`` picks a
+backend from the runtime (multi-device -> distributed, accelerator ->
+device, otherwise the host GriT pipeline).
+
+Registering a new engine:
+
+    @register_engine("my-engine", description="...")
+    def _my_engine(points, eps, min_pts, **opts) -> ClusterResult: ...
+
+Engines receive host numpy points and must return a
+:class:`~repro.engine.result.ClusterResult`; anything cap-bounded must
+either resolve overflow itself (adaptive retry) or surface it in
+``result.overflow``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, Optional, Tuple
+
+import numpy as np
+
+from .result import ClusterResult
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineSpec:
+    name: str
+    fn: Callable[..., ClusterResult]
+    description: str
+
+
+_REGISTRY: Dict[str, EngineSpec] = {}
+
+
+def register_engine(name: str, description: str = ""):
+    """Decorator: register ``fn(points, eps, min_pts, **opts)`` under ``name``."""
+
+    def deco(fn: Callable[..., ClusterResult]):
+        if name in _REGISTRY:
+            raise ValueError(f"engine {name!r} already registered")
+        _REGISTRY[name] = EngineSpec(
+            name=name, fn=fn,
+            description=description or (fn.__doc__ or "").strip())
+        return fn
+
+    return deco
+
+
+def _ensure_loaded() -> None:
+    # the built-in engines live in .engines; importing it populates the
+    # registry (deferred to break the registry <-> engines import cycle)
+    from . import engines  # noqa: F401
+
+
+def available_engines() -> Tuple[str, ...]:
+    _ensure_loaded()
+    return tuple(sorted(_REGISTRY))
+
+
+def get_engine(name: str) -> EngineSpec:
+    _ensure_loaded()
+    if name not in _REGISTRY:
+        raise KeyError(
+            f"unknown engine {name!r}; available: {available_engines()}")
+    return _REGISTRY[name]
+
+
+def engine_descriptions() -> Dict[str, str]:
+    _ensure_loaded()
+    return {n: s.description for n, s in sorted(_REGISTRY.items())}
+
+
+def resolve_auto() -> str:
+    """Pick a backend for ``engine="auto"`` from the runtime.
+
+    * >1 jax devices        -> "distributed" (spatial sharding + halo)
+    * accelerator backend   -> "device" (single jitted XLA program,
+                               adaptive caps)
+    * otherwise             -> "grit" (host pipeline, dynamic shapes:
+                               fastest on CPU for the sizes a single
+                               host should handle)
+    """
+    import jax
+    if jax.device_count() > 1:
+        return "distributed"
+    if jax.default_backend() != "cpu":
+        return "device"
+    return "grit"
+
+
+def cluster(points, eps: float, min_pts: int, *,
+            engine: str = "auto", **opts) -> ClusterResult:
+    """Exact DBSCAN via the named engine (the production entry point).
+
+    Args:
+      points: [n, d] array-like.
+      eps, min_pts: DBSCAN parameters (paper's eps / MinPts).
+      engine: registry name, or "auto" (see :func:`resolve_auto`).
+      **opts: engine-specific options (e.g. ``caps=``, ``mesh=``,
+        ``variant=`` -- see each engine's docstring).
+
+    Returns a :class:`ClusterResult`; ``labels[i] >= 0`` is a cluster
+    id, ``-1`` noise, in the original order of ``points``.
+    """
+    pts = np.asarray(points)
+    if pts.ndim != 2 or pts.shape[0] == 0:
+        raise ValueError(f"points must be [n, d] with n > 0, got {pts.shape}")
+    if not (eps > 0):
+        raise ValueError(f"eps must be positive, got {eps}")
+    if min_pts < 1:
+        raise ValueError(f"min_pts must be >= 1, got {min_pts}")
+    name = resolve_auto() if engine == "auto" else engine
+    spec = get_engine(name)
+    result = spec.fn(pts, float(eps), int(min_pts), **opts)
+    assert result.labels.shape == (pts.shape[0],), \
+        f"engine {name}: labels shape {result.labels.shape}"
+    return result

@@ -71,6 +71,7 @@ class StepGuard:
     window: int = 32
     min_samples: int = 5
     max_retries: int = 2
+    floor_s: float = 0.05    # ignore jitter below this absolute duration
 
     def __post_init__(self):
         self._times: deque = deque(maxlen=self.window)
@@ -90,7 +91,8 @@ class StepGuard:
                 out = step_fn(*args)
                 dt = time.time() - t0
                 self._times.append(dt)
-                if med is not None and dt > self.factor * med:
+                if med is not None and dt > self.factor * med \
+                        and dt > self.floor_s:
                     raise StragglerDetected(
                         f"step took {dt:.3f}s vs median {med:.3f}s")
                 return out
@@ -128,6 +130,9 @@ def run_resilient(state, step_fn, next_batch: Callable, *,
             state, metrics = guard(step_fn, state, batch)
         except StragglerDetected:
             # checkpoint immediately; a coordinator would reschedule us
+            if pending is not None:
+                pending.join()           # avoid two concurrent writers
+                pending = None
             ckpt.save(ckpt_dir, i, state,
                       extra=pipeline_state() if pipeline_state else {})
             raise

@@ -175,7 +175,9 @@ def parse_hlo(text: str) -> Dict[str, Computation]:
                 j += 1
             operands = []
             for tok in _split_top(rest[:j - 1]):
-                tok = tok.strip().lstrip("%")
+                # newer XLA prints typed operands ("f32[8]{0} %name");
+                # the symbol is always the last whitespace token
+                tok = tok.strip().split()[-1].lstrip("%") if tok.strip() else ""
                 if tok:
                     operands.append(tok)
             cur.ops.append(Op(name, shape, kind, line, operands))

@@ -30,6 +30,7 @@ import json
 import os
 import shutil
 import threading
+import time
 from typing import Any, Callable, Optional, Tuple
 
 import numpy as np
@@ -85,7 +86,21 @@ def _write(ckpt_dir, step, host_leaves, treedef, extra) -> str:
     if os.path.exists(final):
         shutil.rmtree(final)
     os.rename(tmp, final)
-    latest_tmp = os.path.join(ckpt_dir, "LATEST.tmp")
+    # unique tmp name: concurrent writers (async + emergency sync saves)
+    # must not race each other's rename.  Writers that died mid-save
+    # leave their tmp behind, so prune stale ones.  The generous age
+    # threshold protects a live writer stalled on slow storage: pruning
+    # its tmp would turn its os.replace into a lost LATEST update.
+    for entry in os.listdir(ckpt_dir):
+        if entry.startswith("LATEST.") and entry.endswith(".tmp"):
+            stale = os.path.join(ckpt_dir, entry)
+            try:
+                if time.time() - os.stat(stale).st_mtime > 600.0:
+                    os.unlink(stale)
+            except OSError:
+                pass
+    latest_tmp = os.path.join(
+        ckpt_dir, f"LATEST.{os.getpid()}.{threading.get_ident()}.tmp")
     with open(latest_tmp, "w") as f:
         f.write(name)
         f.flush()

@@ -1,0 +1,34 @@
+"""Shared fixtures + markers for the test suite.
+
+Markers
+-------
+``slow``: heavyweight device/distributed/model-zoo cases.  The default
+tier-1 run excludes them (``addopts = -m "not slow"`` in pytest.ini) to
+keep ``pytest -x -q`` fast (~1-2 min CPU, load-dependent); the nightly
+CI job runs ``-m "slow or not slow"`` to cover everything.
+"""
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture
+def rng() -> np.random.Generator:
+    """Deterministic per-test RNG (seed 0)."""
+    return np.random.default_rng(0)
+
+
+@pytest.fixture
+def make_rng():
+    """Factory for deterministic RNGs with explicit seeds."""
+    def factory(seed: int = 0) -> np.random.Generator:
+        return np.random.default_rng(seed)
+    return factory
+
+
+@pytest.fixture(scope="session")
+def oracle_cache():
+    """Session-wide memo for expensive O(n^2) oracle labelings, keyed by
+    (scenario name, seed).  Used by the conformance matrix so every
+    engine parametrization shares one brute_dbscan run per scenario."""
+    return {}

@@ -1,0 +1,253 @@
+"""Cross-engine conformance matrix: every registered engine must produce
+labels equivalent to the O(n^2) ``brute`` oracle on the shared scenario
+catalogue (``repro.data.scenarios``), label-for-label after
+canonicalization wherever DBSCAN's output is unique.
+
+This is the load-bearing property of the repo -- the paper's Theorem 4
+claims GriT-DBSCAN is *exact*, so agreement-with-oracle across
+adversarial scenarios is what "correct" means here (the same discipline
+Wang/Gu/Shun and de Berg et al. use to validate their parallel/grid
+variants).
+
+Also covers the adaptive-cap driver: per-cap overflow flags must fire on
+under-provisioned ``GritCaps``, and the driver must recover the exact
+labels without manual tuning.
+"""
+
+import dataclasses
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.data.scenarios import default_scenarios, scenario_map
+from repro.core.dbscan import brute_dbscan
+from repro.core.device_dbscan import GritCaps, device_dbscan
+from repro.core.validate import assert_labels_conformant, core_flags
+from repro.engine import (CapOverflowError, adaptive_device_dbscan,
+                          available_engines, cluster, estimate_caps,
+                          grid_stats, grow_caps, stencil_neighbor_bound)
+
+SCENARIOS = scenario_map()
+ALL = sorted(SCENARIOS)
+QUICK = sorted(s.name for s in default_scenarios() if s.has("quick"))
+SLAB = sorted(s.name for s in default_scenarios() if s.has("slab"))
+NOT_QUICK = [n for n in ALL if n not in QUICK]
+
+HOST_ENGINES = ["grit", "grit-ldf"]
+
+
+def _oracle(name, oracle_cache):
+    """brute labels + core flags, memoized across the whole session."""
+    if name not in oracle_cache:
+        sc = SCENARIOS[name]
+        pts = sc.points()
+        labels = brute_dbscan(pts, sc.eps, sc.min_pts)
+        core = core_flags(pts, sc.eps, sc.min_pts)
+        oracle_cache[name] = (pts, labels, core)
+    return oracle_cache[name]
+
+
+def _conform(name, engine, oracle_cache, **opts):
+    sc = SCENARIOS[name]
+    pts, ref, core = _oracle(name, oracle_cache)
+    res = cluster(pts, sc.eps, sc.min_pts, engine=engine, **opts)
+    assert res.engine == engine
+    assert res.overflow == (), \
+        f"{engine} on {name}: unresolved overflow {res.overflow}"
+    assert_labels_conformant(pts, sc.eps, sc.min_pts, ref, res.labels,
+                             core=core)
+    if res.core is not None:
+        np.testing.assert_array_equal(np.asarray(res.core), core)
+    return res
+
+
+# --------------------------------------------------------------------------
+# registry basics
+# --------------------------------------------------------------------------
+
+def test_registry_lists_all_engines():
+    assert set(available_engines()) >= {
+        "brute", "grit", "grit-ldf", "device", "distributed"}
+
+
+def test_unknown_engine_raises():
+    with pytest.raises(KeyError, match="unknown engine"):
+        cluster(np.zeros((4, 2)), 1.0, 2, engine="nope")
+
+
+def test_bad_inputs_raise():
+    with pytest.raises(ValueError):
+        cluster(np.zeros((0, 2)), 1.0, 2)
+    with pytest.raises(ValueError):
+        cluster(np.zeros((4, 2)), -1.0, 2)
+    with pytest.raises(ValueError):
+        cluster(np.zeros((4, 2)), 1.0, 0)
+
+
+def test_auto_resolves_to_registered_engine():
+    r = cluster(np.random.default_rng(0).uniform(0, 100, (32, 2)), 5.0, 3)
+    assert r.engine in available_engines()
+
+
+# --------------------------------------------------------------------------
+# host engines: full scenario matrix
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("engine", HOST_ENGINES)
+@pytest.mark.parametrize("name", ALL)
+def test_host_engine_conformance(name, engine, oracle_cache):
+    _conform(name, engine, oracle_cache)
+
+
+def test_brute_engine_self_consistent(oracle_cache):
+    pts, ref, core = _oracle("blobs-2d", oracle_cache)
+    sc = SCENARIOS["blobs-2d"]
+    res = cluster(pts, sc.eps, sc.min_pts, engine="brute")
+    np.testing.assert_array_equal(res.labels, ref)
+    np.testing.assert_array_equal(res.core, core)
+
+
+# --------------------------------------------------------------------------
+# device engine: quick subset by default, the rest nightly (slow)
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", QUICK)
+def test_device_engine_conformance_quick(name, oracle_cache):
+    res = _conform(name, "device", oracle_cache)
+    assert res.attempts, "device engine must record its cap attempts"
+    assert res.attempts[-1]["overflow"] == ()
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("name", NOT_QUICK)
+def test_device_engine_conformance_full(name, oracle_cache):
+    _conform(name, "device", oracle_cache)
+
+
+# --------------------------------------------------------------------------
+# distributed engine: in-process single-shard mesh by default; real
+# multi-device parity runs in a subprocess (forced host devices, slow)
+# --------------------------------------------------------------------------
+
+def test_distributed_engine_conformance_single_shard(oracle_cache):
+    mesh = jax.make_mesh((1,), ("shard",))
+    _conform("cross-slab-2d", "distributed", oracle_cache, mesh=mesh)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("name", SLAB + ["blobs-2d"])
+def test_distributed_engine_conformance_multidevice(name):
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    out = subprocess.run(
+        [sys.executable, "-c", textwrap.dedent(f"""
+            import numpy as np
+            from repro.data.scenarios import get_scenario
+            from repro.core.dbscan import brute_dbscan
+            from repro.core.validate import assert_labels_conformant
+            from repro.engine import cluster
+
+            sc = get_scenario({name!r})
+            pts = sc.points()
+            ref = brute_dbscan(pts, sc.eps, sc.min_pts)
+            res = cluster(pts, sc.eps, sc.min_pts, engine="distributed")
+            assert res.stats["n_shards"] == 4, res.stats
+            assert res.overflow == (), res.overflow
+            assert_labels_conformant(pts, sc.eps, sc.min_pts, ref,
+                                     res.labels)
+            print("CONFORM OK")
+        """)], env=env, capture_output=True, text=True, timeout=540)
+    assert out.returncode == 0, f"stderr:\n{out.stderr[-3000:]}"
+    assert "CONFORM OK" in out.stdout
+
+
+# --------------------------------------------------------------------------
+# cap estimation + adaptive overflow recovery (satellite: overflow tests)
+# --------------------------------------------------------------------------
+
+TINY = GritCaps(grid_cap=8, frontier_cap=8, k_cap=8, c_cap=16, m_cap=8,
+                pair_cap=16, grid_block=8, pair_block=8, merge_iters=20)
+
+
+def test_overflow_flags_fire_on_tiny_caps(oracle_cache):
+    """A dataset that exceeds a deliberately tiny GritCaps must raise
+    per-cap overflow flags (not silently truncate)."""
+    pts, _, _ = _oracle("blobs-2d", oracle_cache)
+    res = device_dbscan(jnp.asarray(pts, jnp.float32),
+                        SCENARIOS["blobs-2d"].eps,
+                        SCENARIOS["blobs-2d"].min_pts, TINY)
+    report = jax.device_get(res.report)
+    assert bool(res.overflow)
+    flagged = report.overflowing()
+    assert flagged, "overflow scalar set but no per-cap flag named"
+    assert set(flagged) <= set(report.FIELDS)
+    # this dataset has ~tens of grids and >8-point clusters: both the
+    # grid table and the per-grid core sets must blow the tiny caps
+    assert "grid" in flagged
+    assert "core_set" in flagged
+
+
+def test_adaptive_driver_recovers_from_tiny_caps(oracle_cache):
+    """Satellite acceptance: starting from under-provisioned caps, the
+    adaptive driver must converge to the exact brute labels without
+    manual tuning.  duplicates-2d blows both grid_cap and m_cap (38
+    copies per location vs m_cap=8) while staying small to compile."""
+    sc = SCENARIOS["duplicates-2d"]
+    pts, ref, core = _oracle("duplicates-2d", oracle_cache)
+    res, attempts = adaptive_device_dbscan(
+        jnp.asarray(pts, jnp.float32), sc.eps, sc.min_pts, TINY,
+        growth=3.0)
+    assert len(attempts) > 1, "tiny caps should need at least one retry"
+    assert attempts[0]["overflow"], "first attempt must report overflow"
+    assert attempts[-1]["overflow"] == ()
+    assert not bool(res.overflow)
+    assert_labels_conformant(pts, sc.eps, sc.min_pts, ref,
+                             np.asarray(res.labels), core=core)
+
+
+def test_adaptive_driver_raises_when_out_of_retries(oracle_cache):
+    pts, _, _ = _oracle("blobs-2d", oracle_cache)
+    sc = SCENARIOS["blobs-2d"]
+    with pytest.raises(CapOverflowError, match="overflowing"):
+        adaptive_device_dbscan(jnp.asarray(pts, jnp.float32), sc.eps,
+                               sc.min_pts, TINY, max_retries=0)
+
+
+def test_estimate_caps_from_grid_statistics(oracle_cache):
+    pts, _, _ = _oracle("varden-3d", oracle_cache)
+    sc = SCENARIOS["varden-3d"]
+    num_grids, max_occ = grid_stats(pts, sc.eps)
+    caps = estimate_caps(pts, sc.eps, sc.min_pts)
+    assert caps.grid_cap >= num_grids
+    assert caps.m_cap >= max_occ
+    assert caps.k_cap <= stencil_neighbor_bound(3)
+    assert caps.grid_cap % caps.grid_block == 0
+    assert caps.pair_cap % caps.pair_block == 0
+    # merge_iters covers the Theorem-3 bound |s_i| + |s_j| <= 2 * m_cap
+    assert caps.merge_iters >= 2 * caps.m_cap
+
+
+def test_grow_caps_grows_only_what_overflowed():
+    caps = estimate_caps(np.random.default_rng(0).uniform(0, 1e5, (64, 2)),
+                         3000.0, 5)
+    grown = grow_caps(caps, ("pairs",), n=64, d=2)
+    assert grown.pair_cap > caps.pair_cap
+    assert grown.grid_cap == caps.grid_cap
+    assert grown.k_cap == caps.k_cap
+    assert grown.m_cap == caps.m_cap
+
+
+def test_grow_caps_raises_at_clamp():
+    """Every overflowed cap already at its provable max -> error, not an
+    infinite loop."""
+    caps = dataclasses.replace(
+        TINY, c_cap=64, grid_block=8)          # c_cap clamp is n
+    with pytest.raises(CapOverflowError):
+        grow_caps(caps, ("candidates",), n=64, d=2)

@@ -3,6 +3,10 @@
 These need >1 device, so they run in a subprocess with
 ``--xla_force_host_platform_device_count`` (the main pytest process must
 keep seeing exactly 1 device for all other tests).
+
+All heavyweight (subprocess + multi-device compile): marked ``slow``,
+covered by the nightly CI job.  The default run keeps a single-shard
+distributed conformance case in tests/test_conformance.py.
 """
 
 import os
@@ -11,6 +15,8 @@ import sys
 import textwrap
 
 import pytest
+
+pytestmark = pytest.mark.slow
 
 SRC = os.path.join(os.path.dirname(__file__), "..", "src")
 

@@ -1,35 +1,40 @@
 """FastMerging property tests: exactness (paper Theorem 2) on arbitrary
-linearly-separable point sets; masked device engine == host engine."""
+linearly-separable point sets; masked device engine == host engine.
+
+``hypothesis`` is optional: when present we fuzz; without it the same
+properties run on a deterministic seeded sweep.
+"""
 
 import numpy as np
-from hypothesis import assume, given, settings, strategies as st
+import pytest
 
 import jax.numpy as jnp
 
 from repro.core.merging import (fast_merging, fast_merging_masked,
                                 brute_min_dist, center_prune_merge)
 
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
 
-@st.composite
-def two_sets(draw):
-    d = draw(st.integers(min_value=2, max_value=5))
-    m1 = draw(st.integers(min_value=1, max_value=25))
-    m2 = draw(st.integers(min_value=1, max_value=25))
-    seed = draw(st.integers(0, 2**31 - 1))
-    gap = draw(st.floats(min_value=0.0, max_value=3.0))
-    rng = np.random.default_rng(seed)
-    # linearly separable along dim 0 (as grid core sets are)
+
+def _make_two_sets(rng: np.random.Generator):
+    """Two point sets linearly separable along dim 0 (as grid core sets
+    are), with a random gap and eps."""
+    d = int(rng.integers(2, 6))
+    m1 = int(rng.integers(1, 26))
+    m2 = int(rng.integers(1, 26))
+    gap = float(rng.uniform(0.0, 3.0))
     a = rng.uniform(0, 1, size=(m1, d))
     b = rng.uniform(0, 1, size=(m2, d))
     b[:, 0] += 1.0 + gap
-    eps = draw(st.floats(min_value=0.05, max_value=4.0))
+    eps = float(rng.uniform(0.05, 4.0))
     return a, b, eps
 
 
-@given(two_sets())
-@settings(max_examples=120, deadline=None)
-def test_fast_merging_exact(sets):
-    a, b, eps = sets
+def _check_fast_merging_exact(a, b, eps) -> None:
     want = brute_min_dist(a, b) <= eps
     stats = {}
     got = fast_merging(a, b, eps, stats=stats)
@@ -38,10 +43,7 @@ def test_fast_merging_exact(sets):
     assert stats["max_iters"] <= len(a) + len(b) + 1
 
 
-@given(two_sets())
-@settings(max_examples=60, deadline=None)
-def test_masked_engine_matches_host(sets):
-    a, b, eps = sets
+def _check_masked_matches_host(a, b, eps) -> None:
     want = brute_min_dist(a, b) <= eps
     Mi, Mj = 32, 32
     ap = np.zeros((Mi, a.shape[1]), np.float32)
@@ -57,12 +59,47 @@ def test_masked_engine_matches_host(sets):
     assert int(iters) <= 128
 
 
-@given(two_sets())
-@settings(max_examples=60, deadline=None)
-def test_center_prune_baseline_exact(sets):
-    a, b, eps = sets
+# ---- hypothesis fuzzing (when available) ---------------------------------
+
+if HAVE_HYPOTHESIS:
+
+    @st.composite
+    def two_sets(draw):
+        seed = draw(st.integers(0, 2 ** 31 - 1))
+        return _make_two_sets(np.random.default_rng(seed))
+
+    @given(two_sets())
+    @settings(max_examples=120, deadline=None)
+    def test_fast_merging_exact(sets):
+        _check_fast_merging_exact(*sets)
+
+    @given(two_sets())
+    @settings(max_examples=60, deadline=None)
+    def test_masked_engine_matches_host(sets):
+        _check_masked_matches_host(*sets)
+
+    @given(two_sets())
+    @settings(max_examples=60, deadline=None)
+    def test_center_prune_baseline_exact(sets):
+        a, b, eps = sets
+        want = brute_min_dist(a, b) <= eps
+        assert center_prune_merge(a, b, eps) == want
+
+
+# ---- deterministic fallback sweep (always runs) ---------------------------
+
+@pytest.mark.parametrize("seed", range(40))
+def test_fast_merging_exact_seeded(seed, make_rng):
+    a, b, eps = _make_two_sets(make_rng(seed))
+    _check_fast_merging_exact(a, b, eps)
     want = brute_min_dist(a, b) <= eps
     assert center_prune_merge(a, b, eps) == want
+
+
+@pytest.mark.parametrize("seed", range(8))
+def test_masked_engine_matches_host_seeded(seed, make_rng):
+    a, b, eps = _make_two_sets(make_rng(1000 + seed))
+    _check_masked_matches_host(a, b, eps)
 
 
 def test_fast_merging_prunes_distance_work():

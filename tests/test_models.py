@@ -15,6 +15,16 @@ from repro.models.lm import logits_for
 
 KEY = jax.random.PRNGKey(0)
 
+# smoke-test the smallest config in the default run; the rest of the zoo
+# is nightly (slow) -- each arch costs ~5-12s of CPU compile
+_FAST_ARCHS = {"qwen1_5_0_5b"}
+
+
+def _arch_matrix():
+    return [a if a in _FAST_ARCHS
+            else pytest.param(a, marks=pytest.mark.slow)
+            for a in list_archs()]
+
 
 def _batch(cfg, B, S, key=KEY):
     tok = jax.random.randint(key, (B, S), 0, cfg.vocab_size)
@@ -28,7 +38,7 @@ def _batch(cfg, B, S, key=KEY):
     return b
 
 
-@pytest.mark.parametrize("arch", list_archs())
+@pytest.mark.parametrize("arch", _arch_matrix())
 def test_smoke_train_step(arch):
     cfg = get_config(arch, smoke=True)
     params = init_params(cfg, KEY)
@@ -47,7 +57,7 @@ def test_smoke_train_step(arch):
     assert h.shape == (B, S + extra, cfg.d_model)
 
 
-@pytest.mark.parametrize("arch", list_archs())
+@pytest.mark.parametrize("arch", _arch_matrix())
 def test_smoke_decode_consistency(arch):
     cfg = get_config(arch, smoke=True).with_overrides(
         dtype="float32", remat=False)
@@ -105,7 +115,10 @@ def test_swa_ring_cache_is_window_bounded():
     assert k.shape[3] == cfg.window
 
 
-@pytest.mark.parametrize("arch", ["qwen2_1_5b", "gemma2_27b", "zamba2_2_7b"])
+@pytest.mark.parametrize("arch", [
+    "qwen2_1_5b",
+    pytest.param("gemma2_27b", marks=pytest.mark.slow),
+    pytest.param("zamba2_2_7b", marks=pytest.mark.slow)])
 def test_bf16_logit_buffers_numerically_close(arch):
     """§Perf lever: bf16 logit/score buffers must not move the loss."""
     from repro.models import loss_fn

@@ -29,9 +29,14 @@ def test_optimizer_quadratic_convergence(name, lr):
     params = {"x": jnp.zeros((16, 8), jnp.float32)}
     state = opt.init(params)
     loss = lambda p: jnp.sum((p["x"] - t) ** 2)
-    for _ in range(200):
+
+    @jax.jit
+    def step(params, state):
         g = jax.grad(loss)(params)
-        params, state = opt.update(g, state, params, lr)
+        return opt.update(g, state, params, lr)
+
+    for _ in range(200):
+        params, state = step(params, state)
     assert float(loss(params)) < 0.5
 
 
@@ -54,6 +59,7 @@ def test_lm_training_descends():
     assert losses[-1] < losses[0]
 
 
+@pytest.mark.slow
 def test_microbatch_accumulation_matches_full_batch():
     cfg = get_config("qwen1.5-0.5b", smoke=True).with_overrides(
         dtype="float32", remat=False)
