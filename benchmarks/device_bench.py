@@ -43,6 +43,58 @@ def bench_device_dbscan(n: int = 2048, d: int = 3) -> List[Dict]:
                  us_per_point=round(t / n * 1e6, 2))]
 
 
+def bench_distance_plane(ns=(10_000, 100_000),
+                         scenarios=("blobs-2d", "uniform-dense-2d"),
+                         min_pts: int = 64, reps: int = 2) -> List[Dict]:
+    """Naive-broadcast vs kernelized device pipeline (the PR 2 tentpole
+    comparison behind BENCH_2.json).
+
+    eps is scaled by (n_ref/n)^(1/d) so per-grid occupancy -- and with
+    it the candidate-set structure -- stays that of the catalogue
+    scenario as n grows.  MinPts sits at the paper's experimental scale
+    (GriT-DBSCAN's own experiments run MinPts up to 100), where the
+    core/border distance plane dominates the pipeline; at the
+    catalogue's MinPts ~ 6 the plane is <1% of runtime and the planes
+    tie.  (At that MinPts the scaled uniform box sits below the density
+    threshold and comes out all-noise -- deliberately kept: it is the
+    worst case for the MinPts early exit and the best case for the
+    padding-tail skip.)  Both planes run the *same* adaptive caps; the timed quantity
+    is the warm jitted pipeline (the steady-state serving cost), and
+    cluster/noise counts are recorded to confirm the planes agree.
+    """
+    from repro.data.scenarios import get_scenario
+    from repro.engine import adaptive_device_dbscan
+
+    rows = []
+    for name in scenarios:
+        sc = get_scenario(name)
+        for n in ns:
+            eps = sc.eps * (sc.n / n) ** (1.0 / sc.d)
+            pts = sc.points(n=n)
+            pj = jnp.asarray(pts, jnp.float32)
+            for plane, uk in (("naive", False), ("kernelized", True)):
+                res, attempts = adaptive_device_dbscan(
+                    pj, eps, min_pts, use_kernels=uk)
+                # the attempt trail records every GritCaps field, so the
+                # final attempt reconstructs the exact jit key
+                caps = GritCaps(**attempts[-1]["caps"])
+                best = float("inf")
+                for _ in range(reps):
+                    t0 = time.perf_counter()
+                    jax.block_until_ready(
+                        device_dbscan(pj, eps, min_pts, caps).labels)
+                    best = min(best, time.perf_counter() - t0)
+                lab = np.asarray(res.labels)
+                rows.append(dict(
+                    bench="kernel_vs_naive", scenario=name, n=n, d=sc.d,
+                    min_pts=min_pts, eps=round(eps, 2), plane=plane,
+                    seconds=round(best, 4),
+                    clusters=int(len(np.unique(lab[lab >= 0]))),
+                    noise=int((lab < 0).sum()),
+                    backend=jax.default_backend()))
+    return rows
+
+
 def bench_pairwise_kernels(m: int = 512, n: int = 512, d: int = 3
                            ) -> List[Dict]:
     rng = np.random.default_rng(0)

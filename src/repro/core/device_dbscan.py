@@ -11,12 +11,28 @@ The whole of Algorithm 6 as one jittable function with static shape caps:
 
 Static caps replace the dynamic data structures of the paper; every cap
 has an ``overflow`` flag so a driver can retry with larger caps (the
-standard static-shape discipline on TPU).  Distance-heavy inner loops
-are delegated to the Pallas kernels when ``use_kernels=True`` (see
-``repro.kernels``); the pure-jnp path is the oracle.
+standard static-shape discipline on TPU).
+
+``GritCaps.use_kernels`` selects the distance plane for the two
+distance-heavy stages.  ``False`` (default) materializes the naive
+``[B, P, C, d]`` broadcast difference tensor -- the in-graph oracle.
+``True`` routes ``core_block`` (per-point eps-counts over own+neighbor
+candidates) through ``kernels.ops.eps_count_batch`` and ``border_block``
+(nearest-core-point query) through ``kernels.ops.row_min_batch``: the
+MXU-tiled batched Pallas kernels on TPU, a tiled loop with a
+data-dependent trip count (padding-tail skip + MinPts early exit)
+elsewhere (see the dispatch policy in ``repro.kernels.ops``).  Before a
+kernel call both point sets are re-centered on the grid's first own
+point: candidates live within the neighbor stencil (a few eps), so the
+`aa + bb - 2ab` contraction runs on stencil-scale coordinates and the
+cancellation error stays far below the scenario decision margins.  The
+overflow flags are computed from candidate totals, never from distance
+values, so kernelization leaves the ``OverflowReport`` untouched.
 
 Padding convention: invalid points are moved to ``PAD_COORD`` so they
-land in (ignorable) far-away grids and never satisfy a distance predicate.
+land in (ignorable) far-away grids and never satisfy a distance
+predicate; the kernels share the convention (``kernels.ops.FAR``) for
+masked candidate rows.
 """
 
 from __future__ import annotations
@@ -33,6 +49,7 @@ from .grids import build_grids_device, DeviceGrids
 from .grid_tree import device_neighbor_table
 from .merging import fast_merging_batch
 from .labels import label_propagation
+from ..kernels import ops as kernel_ops
 
 PAD_COORD = 1e15
 
@@ -96,7 +113,12 @@ class OverflowReport:
 
 @dataclasses.dataclass(frozen=True)
 class GritCaps:
-    """Static shape caps for the in-graph pipeline."""
+    """Static shape caps + execution strategy for the in-graph pipeline.
+
+    ``use_kernels`` rides along with the caps (it is part of the same
+    static jit key): True routes the core/border distance plane through
+    the batched Pallas kernels instead of the naive broadcast tensor.
+    """
 
     grid_cap: int = 1024       # max non-empty grids
     frontier_cap: int = 128    # grid-tree per-level frontier
@@ -107,6 +129,7 @@ class GritCaps:
     grid_block: int = 128      # chunk over grids (memory bound)
     pair_block: int = 512      # chunk over merge pairs
     merge_iters: int = 64      # FastMerging max iterations (paper kappa<=11)
+    use_kernels: bool = False  # kernelized distance plane (see module doc)
 
     @classmethod
     def for_dim(cls, d: int, **kw) -> "GritCaps":
@@ -206,6 +229,11 @@ def device_dbscan(points: jnp.ndarray, eps, min_pts: int, caps: GritCaps,
 
     p_cap = max(min_pts - 1, 1)
 
+    def grid_anchor(gsel):
+        """First own point of each selected grid: the re-centering origin
+        for the kernelized distance plane (module docstring)."""
+        return spts[jnp.minimum(dg.starts[gsel], n - 1)][:, None, :]
+
     def core_block(gsel):
         cand_idx, cand_grid, cand_valid, total = _candidates_for_grids(
             dg, nbr, gsel, caps.c_cap)
@@ -217,9 +245,20 @@ def device_dbscan(points: jnp.ndarray, eps, min_pts: int, caps: GritCaps,
         own_idx = jnp.where(own_valid, own_idx, 0)
         a = spts[own_idx]                       # [B, P, d]
         b = spts[cand_idx]                      # [B, C, d]
-        d2 = jnp.sum((a[:, :, None, :] - b[:, None, :, :]) ** 2, axis=-1)
-        hit = (d2 <= eps2) & cand_valid[:, None, :]
-        cnt = hit.sum(axis=2)
+        if caps.use_kernels:
+            # stop_at=min_pts: the saturating-count contract -- exact
+            # below min_pts, ">= min_pts" above -- is all the core test
+            # needs, and it unlocks the paper's offset-ascending early
+            # exit (candidates are already in that order)
+            anchor = grid_anchor(gsel)
+            cnt = kernel_ops.eps_count_batch(a - anchor, b - anchor, eps,
+                                             valid_b=cand_valid,
+                                             valid_a=own_valid,
+                                             stop_at=min_pts)
+        else:
+            d2 = jnp.sum((a[:, :, None, :] - b[:, None, :, :]) ** 2, axis=-1)
+            hit = (d2 <= eps2) & cand_valid[:, None, :]
+            cnt = hit.sum(axis=2)
         is_core = (cnt >= min_pts) & own_valid
         c_overflow = jnp.any((total > caps.c_cap) & small)
         return own_idx, is_core, own_valid, c_overflow
@@ -299,11 +338,21 @@ def device_dbscan(points: jnp.ndarray, eps, min_pts: int, caps: GritCaps,
         noncore = own_valid & ~core_sorted[own_idx_s]
         a = spts[own_idx_s]
         b = spts[cand_idx]
-        d2 = jnp.sum((a[:, :, None, :] - b[:, None, :, :]) ** 2, axis=-1)
-        d2 = jnp.where(cand_valid[:, None, :], d2, jnp.inf)
-        jbest = jnp.argmin(d2, axis=2)
-        dbest = jnp.take_along_axis(d2, jbest[..., None], axis=2)[..., 0]
-        gbest = jnp.take_along_axis(cand_grid, jbest, axis=1)
+        if caps.use_kernels:
+            anchor = grid_anchor(gsel)
+            dbest, jbest = kernel_ops.row_min_batch(a - anchor, b - anchor,
+                                                    valid_b=cand_valid)
+            # jbest == -1: no core candidate at all (row_min contract);
+            # dbest is inf there, so the eps2 test already rejects it --
+            # the clamp only keeps the gather in range
+            gbest = jnp.take_along_axis(cand_grid,
+                                        jnp.maximum(jbest, 0), axis=1)
+        else:
+            d2 = jnp.sum((a[:, :, None, :] - b[:, None, :, :]) ** 2, axis=-1)
+            d2 = jnp.where(cand_valid[:, None, :], d2, jnp.inf)
+            jbest = jnp.argmin(d2, axis=2)
+            dbest = jnp.take_along_axis(d2, jbest[..., None], axis=2)[..., 0]
+            gbest = jnp.take_along_axis(cand_grid, jbest, axis=1)
         lab = jnp.where((dbest <= eps2) & noncore,
                         grid_label[gbest], jnp.int32(G))
         return own_idx_s, jnp.where(noncore, lab, G), noncore

@@ -58,13 +58,16 @@ def build_grids(points: np.ndarray, eps: float) -> GridIndex:
     """Algorithm 1 (host). O(n log n) via lexsort (radix-family, stable)."""
     pts = np.asarray(points, dtype=np.float64)
     n, d = pts.shape
+    # n == 0 must fail *here*, not as an opaque reduction error inside
+    # identifiers(); the public API (engine.cluster) validates earlier
+    # still, with the same message style
+    if n == 0:
+        raise ValueError("empty point set")
     ids, mins, side = identifiers(pts, eps)
     # np.lexsort sorts by last key first -> feed dims reversed for lexicographic.
     order = np.lexsort(tuple(ids[:, j] for j in range(d - 1, -1, -1)))
     sids = ids[order]
     # boundary flags: first point of each grid
-    if n == 0:
-        raise ValueError("empty point set")
     new = np.empty(n, dtype=bool)
     new[0] = True
     new[1:] = np.any(sids[1:] != sids[:-1], axis=1)
@@ -126,7 +129,22 @@ def build_grids_device(points: jnp.ndarray, eps, grid_cap: int) -> DeviceGrids:
     n, d = points.shape
     side = jnp.asarray(eps, jnp.float32) / jnp.sqrt(jnp.float32(d))
     mins = points.min(axis=0)
-    ids = jnp.floor((points - mins[None, :]) / side).astype(jnp.int32)
+    # Clamp identifiers into [0, PAD_ID] *before* the int32 cast:
+    # padding points sit at PAD_COORD (~1e15), whose raw interval index
+    # overflows int32, and XLA's out-of-range float->int conversion is
+    # implementation-defined -- it may wrap negative and lex-sort the
+    # padding grids *ahead of* every real grid, corrupting
+    # point_grid/starts.  Clamped, every out-of-range (or non-finite)
+    # coordinate lands exactly on the PAD_ID sentinel, so padding points
+    # share one sentinel grid that sorts after all real grids.  A *valid*
+    # point can only reach the clamp when span/side >= 2^30 -- but the
+    # f32 quotient already quantizes by whole cells beyond ~2^22, so the
+    # engine layer rejects span/side >= 2^22 host-side before tracing
+    # (engines._check_device_grid_range); raising is impossible here
+    # under jit.
+    idf = jnp.floor((points - mins[None, :]) / side)
+    idf = jnp.where(jnp.isfinite(idf), idf, jnp.float32(PAD_ID))
+    ids = jnp.clip(idf, 0.0, jnp.float32(PAD_ID)).astype(jnp.int32)
 
     operands = tuple(ids[:, j] for j in range(d)) + (
         jnp.arange(n, dtype=jnp.int32),)

@@ -82,11 +82,14 @@ def grid_stats(points: np.ndarray, eps: float,
 def estimate_caps(points: np.ndarray, eps: float, min_pts: int,
                   point_valid: Optional[np.ndarray] = None,
                   margin: float = 1.25,
-                  extra_grids: int = 2) -> GritCaps:
+                  extra_grids: int = 2,
+                  use_kernels: bool = False) -> GritCaps:
     """Initial ``GritCaps`` from host grid statistics (see module doc).
 
     ``extra_grids`` reserves slots for the sentinel grids that padding
     points (``point_valid == False`` -> PAD_COORD) occupy.
+    ``use_kernels`` selects the kernelized distance plane; it rides on
+    the caps (same static jit key) and is preserved by ``grow_caps``.
     """
     pts = np.asarray(points)
     n, d = pts.shape
@@ -125,7 +128,8 @@ def estimate_caps(points: np.ndarray, eps: float, min_pts: int,
     return GritCaps(grid_cap=grid_cap, frontier_cap=frontier_cap,
                     k_cap=k_cap, c_cap=c_cap, m_cap=m_cap,
                     pair_cap=pair_cap, grid_block=grid_block,
-                    pair_block=pair_block, merge_iters=merge_iters)
+                    pair_block=pair_block, merge_iters=merge_iters,
+                    use_kernels=use_kernels)
 
 
 def grow_caps(caps: GritCaps, overflowed: Tuple[str, ...], *,
@@ -207,9 +211,14 @@ def adaptive_loop(run, grow, describe, caps, max_retries: int):
 def adaptive_device_dbscan(points, eps: float, min_pts: int,
                            caps: Optional[GritCaps] = None, *,
                            point_valid=None, max_retries: int = 8,
-                           growth: float = 2.0
+                           growth: float = 2.0,
+                           use_kernels: Optional[bool] = None
                            ) -> Tuple[DeviceDBSCANResult, List[dict]]:
     """Run ``device_dbscan``, growing caps on overflow until exact.
+
+    ``use_kernels`` overrides the distance plane carried by ``caps``
+    (None leaves the caps' own setting -- False for estimated caps --
+    untouched); the flag survives every growth round unchanged.
 
     Returns (result, attempts); ``attempts`` records the caps and the
     overflowing-cap names of every try (the last entry has no overflow).
@@ -221,7 +230,10 @@ def adaptive_device_dbscan(points, eps: float, min_pts: int,
     if caps is None:
         caps = estimate_caps(np.asarray(points), eps, min_pts,
                              point_valid=None if point_valid is None
-                             else np.asarray(point_valid))
+                             else np.asarray(point_valid),
+                             use_kernels=bool(use_kernels))
+    elif use_kernels is not None and caps.use_kernels != use_kernels:
+        caps = dataclasses.replace(caps, use_kernels=use_kernels)
 
     def run(c):
         res = device_dbscan(pts, eps, min_pts, c, point_valid=point_valid)

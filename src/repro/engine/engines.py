@@ -10,7 +10,14 @@ grit       paper-faithful host GriT-DBSCAN (Alg 6: grid tree +
 grit-ldf   host GriT-DBSCAN-LDF (union-find, low-density-first, §5.2).
 device     fully in-graph jitted pipeline with *adaptive* static caps:
            estimated from grid statistics, grown geometrically on
-           overflow (never silently truncated).
+           overflow (never silently truncated).  Naive-broadcast
+           distance plane (the in-graph oracle).
+device-kernels
+           the same pipeline with ``use_kernels=True``: core/border
+           distances go through the batched Pallas kernels (MXU-tiled
+           on TPU; elsewhere a tiled loop that skips the candidate
+           padding tail and early-exits core counts at MinPts -- see
+           ``repro.kernels.ops``).
 distributed spatial slab sharding + halo exchange + global label
            reconciliation over a jax mesh (shard_map), with the same
            adaptive cap loop wrapped around the whole SPMD program.
@@ -79,11 +86,34 @@ def _pad_bucket(n: int, quantum: int = 128) -> int:
     return max(quantum, (n + quantum - 1) // quantum * quantum)
 
 
-@register_engine("device",
-                 "in-graph jitted pipeline, adaptive static caps")
-def _device_engine(points, eps, min_pts, *, caps=None,
-                   max_retries: int = 8, growth: float = 2.0,
-                   pad_quantum: int = 128) -> ClusterResult:
+# build_grids_device computes interval indices as floor((x - min)/side)
+# in f32 and clamps them into [0, PAD_ID] before the int32 cast.  Both
+# steps lose correctness silently once span/side gets large: beyond
+# ~2^22 the f32 quotient's ulp approaches a whole grid cell, so a
+# point's identifier can land cells away from its true cell and miss
+# its eps-neighbors' stencils, and near 2^30 a top-edge valid point can
+# round up onto the PAD_ID sentinel itself.  The in-graph pipeline
+# cannot raise under jit, so the device-backed engines reject such
+# inputs host-side here.  Host engines are unaffected (float64/int64
+# identifiers).
+def _check_device_grid_range(pts: np.ndarray, eps: float,
+                             limit: int = 2 ** 22) -> None:
+    d = pts.shape[1]
+    side = float(eps) / np.sqrt(d)
+    span = float((pts.max(axis=0) - pts.min(axis=0)).max())
+    if span / side >= limit:
+        raise ValueError(
+            f"eps={eps} is too small for the coordinate span {span:.3g}: "
+            f"span/side = {span / side:.3g} >= 2^22 exceeds the f32 "
+            f"device-grid identifier range (grid assignment would "
+            f"quantize by whole cells); rescale the data, increase eps, "
+            f"or use a host engine (grit/grit-ldf)")
+
+
+def _device_impl(points, eps, min_pts, name: str, *, caps=None,
+                 use_kernels=None, max_retries: int = 8,
+                 growth: float = 2.0,
+                 pad_quantum: int = 128) -> ClusterResult:
     """Single-program XLA pipeline with the adaptive-cap driver.
 
     Points are padded to a coarse size bucket (``pad_quantum``) with
@@ -95,6 +125,7 @@ def _device_engine(points, eps, min_pts, *, caps=None,
     t0 = time.perf_counter()
     pts = np.asarray(points, np.float32)
     n, d = pts.shape
+    _check_device_grid_range(pts, eps)
     n_pad = _pad_bucket(n, pad_quantum)
     padded = np.zeros((n_pad, d), np.float32)
     padded[:n] = pts
@@ -103,14 +134,30 @@ def _device_engine(points, eps, min_pts, *, caps=None,
     res, attempts = adaptive_device_dbscan(
         jnp.asarray(padded), eps, min_pts, caps,
         point_valid=jnp.asarray(valid), max_retries=max_retries,
-        growth=growth)
+        growth=growth, use_kernels=use_kernels)
     labels = np.asarray(res.labels)[:n].astype(np.int64)
     core = np.asarray(res.core)[:n]
     return ClusterResult.build(
-        labels, "device", core=core, attempts=attempts,
+        labels, name, core=core, attempts=attempts,
         overflow=attempts[-1]["overflow"],
         stats={"n": n, "n_padded": n_pad, "retries": len(attempts) - 1,
                "t_total": time.perf_counter() - t0})
+
+
+@register_engine("device",
+                 "in-graph jitted pipeline, adaptive static caps, "
+                 "naive-broadcast distance plane")
+def _device_engine(points, eps, min_pts, **opts) -> ClusterResult:
+    opts.setdefault("use_kernels", False)
+    return _device_impl(points, eps, min_pts, "device", **opts)
+
+
+@register_engine("device-kernels",
+                 "device pipeline with the batched Pallas distance "
+                 "kernels (MXU on TPU, tiled early-exit loop elsewhere)")
+def _device_kernels_engine(points, eps, min_pts, **opts) -> ClusterResult:
+    opts.setdefault("use_kernels", True)
+    return _device_impl(points, eps, min_pts, "device-kernels", **opts)
 
 
 def _halo_bound(points: np.ndarray, eps: float) -> int:
@@ -141,6 +188,7 @@ def _distributed_engine(points, eps, min_pts, *, mesh=None, caps=None,
     t0 = time.perf_counter()
     pts = np.asarray(points, np.float64)
     n, d = pts.shape
+    _check_device_grid_range(pts, eps)
     if mesh is None:
         mesh = jax.make_mesh((jax.device_count(),), ("shard",))
     if caps is None:

@@ -1,11 +1,18 @@
 """Engine registry: one ``cluster()`` entry point, many backends.
 
 Every clustering backend in the repo registers itself here under a short
-name (``brute``, ``grit``, ``grit-ldf``, ``device``, ``distributed``)
-and is invoked through :func:`cluster` with identical semantics: exact
-DBSCAN, labels in original point order.  ``engine="auto"`` picks a
-backend from the runtime (multi-device -> distributed, accelerator ->
-device, otherwise the host GriT pipeline).
+name (``brute``, ``grit``, ``grit-ldf``, ``device``, ``device-kernels``,
+``distributed``) and is invoked through :func:`cluster` with identical
+semantics: exact DBSCAN, labels in original point order.
+``engine="auto"`` picks a backend from the runtime (multi-device ->
+distributed, TPU -> the kernelized device pipeline, other accelerators
+-> the device pipeline, otherwise the host GriT pipeline).
+
+Input validation happens *here*, once, for every engine: empty point
+sets, ``n < min_pts`` (every point would be noise -- always a caller
+bug) and non-finite coordinates raise ``ValueError`` before any engine
+runs, so no backend needs its own guards and all of them fail
+identically.
 
 Registering a new engine:
 
@@ -80,8 +87,14 @@ def resolve_auto() -> str:
     """Pick a backend for ``engine="auto"`` from the runtime.
 
     * >1 jax devices        -> "distributed" (spatial sharding + halo)
-    * accelerator backend   -> "device" (single jitted XLA program,
-                               adaptive caps)
+    * TPU backend           -> "device-kernels" (single jitted XLA
+                               program, adaptive caps, MXU Pallas
+                               distance plane -- on TPU the kernels are
+                               the point)
+    * other accelerator     -> "device" (the one-shot broadcast plane
+                               fuses well under XLA; the kernels'
+                               non-TPU tiled loop is serialized and has
+                               not been benchmarked on GPU)
     * otherwise             -> "grit" (host pipeline, dynamic shapes:
                                fastest on CPU for the sizes a single
                                host should handle)
@@ -89,6 +102,8 @@ def resolve_auto() -> str:
     import jax
     if jax.device_count() > 1:
         return "distributed"
+    if jax.default_backend() == "tpu":
+        return "device-kernels"
     if jax.default_backend() != "cpu":
         return "device"
     return "grit"
@@ -115,6 +130,15 @@ def cluster(points, eps: float, min_pts: int, *,
         raise ValueError(f"eps must be positive, got {eps}")
     if min_pts < 1:
         raise ValueError(f"min_pts must be >= 1, got {min_pts}")
+    if pts.shape[0] < min_pts:
+        raise ValueError(
+            f"n={pts.shape[0]} < min_pts={min_pts}: no point can ever be "
+            f"core, every point would come out as noise")
+    if not np.isfinite(pts).all():
+        bad = int((~np.isfinite(pts).all(axis=1)).sum())
+        raise ValueError(
+            f"points contain non-finite coordinates ({bad} row(s) with "
+            f"NaN/Inf); clean the input before clustering")
     name = resolve_auto() if engine == "auto" else engine
     spec = get_engine(name)
     result = spec.fn(pts, float(eps), int(min_pts), **opts)

@@ -11,10 +11,34 @@ The kernels require MXU-aligned shapes (rows % 128 == 0, feature dim ==
   pipeline); an explicit ``valid_b`` mask folds into the same mechanism.
 * feature dim: zero-padded to 128 (distances unchanged).
 
-Platform dispatch: on CPU the kernels run under ``interpret=True``
-(Python-evaluated, used by tests); on TPU they compile natively.  Set
-``repro.kernels.ops.FORCE_REF = True`` to route everything through the
-pure-jnp oracles in ``ref.py``.
+The batched wrappers (``eps_count_batch`` / ``row_min_batch``) apply the
+identical policy per batch slot: a per-row ``valid_b`` [B, N] mask is
+folded into FAR coordinates, row padding is batched, and a row whose
+*every* b-point is masked/padded reports ``(inf, -1)`` -- the squared
+distance to a FAR point exceeds ``FAR_D2`` (1e29), far above any real
+distance, which is how "no valid candidate" is detected after the kernel
+(the kernel itself never sees a mask).
+
+Platform dispatch: on TPU the batched kernels compile natively
+(MXU-tiled).  Elsewhere they run as a *tiled jnp loop* over b-tiles --
+the same blocking as the kernels, expressed as ``lax.while_loop`` so the
+trip count is data-dependent: the loop stops at the last tile holding a
+valid candidate (static padding up to the candidate cap is never
+scanned) and, for ``eps_count_batch(stop_at=k)``, as soon as every
+valid a-row has accumulated ``k`` hits -- the paper's offset-ascending
+early termination, which a one-shot broadcast cannot express.
+``interpret=True`` forces the Pallas kernels under the interpreter
+(slow; kernel parity tests only).  The unbatched wrappers keep their
+historical behaviour of interpreting on non-TPU backends.  Set
+``repro.kernels.ops.FORCE_REF = True`` to route everything through
+``ref.py``.
+
+``stop_at`` contract: with ``stop_at=k`` the returned counts satisfy
+``min(count, k) == min(exact_count, k)`` (values below k are exact;
+values >= k mean "at least k" and may undercount the exact total).
+Thresholding at ``>= k`` -- the only thing core identification does --
+is therefore exact.  The TPU kernels simply return full counts, which
+satisfies the contract trivially.
 """
 
 from __future__ import annotations
@@ -26,10 +50,15 @@ import jax
 import jax.numpy as jnp
 
 from . import ref
-from .pairwise import eps_count_pallas, row_min_pallas, LANE
+from .pairwise import (eps_count_pallas, row_min_pallas,
+                       eps_count_batch_pallas, row_min_batch_pallas, LANE)
 from .flash_attention import flash_attention_pallas
 
 FAR = 1e15
+# any squared distance >= FAR_D2 can only involve a FAR-padded/masked
+# point (real coordinates are orders of magnitude below FAR), so it
+# marks "no valid candidate" after a row_min kernel
+FAR_D2 = 1e29
 FORCE_REF = False
 
 
@@ -37,22 +66,26 @@ def _interpret() -> bool:
     return jax.default_backend() != "tpu"
 
 
-def _pad_rows(x: jnp.ndarray, mult: int, fill: float) -> jnp.ndarray:
-    m = x.shape[0]
+def _pad_rows(x: jnp.ndarray, mult: int, fill: float,
+              axis: int = 0) -> jnp.ndarray:
+    """Pad ``axis`` up to a multiple of ``mult`` with ``fill``."""
+    m = x.shape[axis]
     tgt = ((m + mult - 1) // mult) * mult
     if tgt == m:
         return x
-    return jnp.concatenate(
-        [x, jnp.full((tgt - m,) + x.shape[1:], fill, x.dtype)])
+    shape = list(x.shape)
+    shape[axis] = tgt - m
+    return jnp.concatenate([x, jnp.full(shape, fill, x.dtype)], axis=axis)
 
 
 def _pad_feat(x: jnp.ndarray, lane: int = LANE) -> jnp.ndarray:
-    d = x.shape[1]
+    """Zero-pad the (last) feature axis to the lane width."""
+    d = x.shape[-1]
     if d == lane:
         return x
     if d > lane:
         raise ValueError(f"feature dim {d} > lane width {lane}")
-    return jnp.pad(x, ((0, 0), (0, lane - d)))
+    return jnp.pad(x, [(0, 0)] * (x.ndim - 1) + [(0, lane - d)])
 
 
 @functools.partial(jax.jit, static_argnames=("block_m", "block_n"))
@@ -79,7 +112,12 @@ def eps_count(a: jnp.ndarray, b: jnp.ndarray, eps,
 def row_min(a: jnp.ndarray, b: jnp.ndarray,
             valid_b: Optional[jnp.ndarray] = None,
             *, block_m: int = 128, block_n: int = 128):
-    """Per-row (min squared distance, argmin) into b. Returns ([M], [M])."""
+    """Per-row (min squared distance, argmin) into b. Returns ([M], [M]).
+
+    A row with no valid b-point at all (every candidate masked by
+    ``valid_b``) reports ``(inf, -1)``, never an in-range index into a
+    masked row -- the distance to a FAR-folded point exceeds ``FAR_D2``,
+    which is the post-kernel detection threshold."""
     if FORCE_REF:
         return ref.row_min(a, b, valid_b)
     M = a.shape[0]
@@ -91,7 +129,164 @@ def row_min(a: jnp.ndarray, b: jnp.ndarray,
     bp = _pad_feat(_pad_rows(b32, block_n, FAR))
     mins, args = row_min_pallas(ap, bp, block_m=block_m, block_n=block_n,
                                 interpret=_interpret())
-    return mins[:M, 0], args[:M, 0]
+    mins, args = mins[:M, 0], args[:M, 0]
+    none = mins >= FAR_D2
+    return (jnp.where(none, jnp.inf, mins),
+            jnp.where(none, jnp.int32(-1), args))
+
+
+# --------------------------------------------------------------------------
+# batched (leading grid-batch dimension) wrappers
+# --------------------------------------------------------------------------
+
+def _use_batch_pallas(interpret) -> bool:
+    """Dispatch policy for the batched wrappers (module docstring):
+    native Pallas on TPU, the tiled jnp loop elsewhere, unless the
+    caller forces the interpreter (parity tests) or native
+    compilation."""
+    if FORCE_REF:
+        return False
+    if interpret is None:
+        return jax.default_backend() == "tpu"
+    return True
+
+
+def _tile_prep(b32, valid_b, block_n):
+    """Pad the candidate axis to a tile multiple and return (b tiles,
+    valid tiles, index of the last tile holding any valid candidate)."""
+    B, N = b32.shape[0], b32.shape[1]
+    if valid_b is None:
+        valid_b = jnp.ones((B, N), bool)
+    bp = _pad_rows(b32, block_n, FAR, axis=1)
+    vp = jnp.concatenate(
+        [valid_b, jnp.zeros((B, bp.shape[1] - N), bool)], axis=1) \
+        if bp.shape[1] != N else valid_b
+    # 1 + the highest valid slot, in tiles: the loop never scans the
+    # all-padding tail that static caps force onto the candidate axis
+    last = jnp.max(jnp.where(vp, jnp.arange(vp.shape[1])[None, :] + 1, 0))
+    n_tiles = (last + block_n - 1) // block_n
+    return bp, vp, n_tiles
+
+
+def _eps_count_tiled(a32, b32, eps2, valid_a, valid_b, stop_at, block_n):
+    """Non-TPU fast path: b-tile loop with data-dependent trip count
+    (see module docstring).  Each tile is the fused broadcast form --
+    the optimal XLA-CPU shape -- so the win over the one-shot broadcast
+    is pure work skipped, not a different contraction."""
+    B, M, _ = a32.shape
+    bp, vp, n_tiles = _tile_prep(b32, valid_b, block_n)
+    if valid_a is None:
+        valid_a = jnp.ones((B, M), bool)
+
+    def cond(state):
+        t, cnt = state
+        live = t < n_tiles
+        if stop_at is not None:
+            live = live & jnp.any((cnt < stop_at) & valid_a)
+        return live
+
+    def body(state):
+        t, cnt = state
+        bt = jax.lax.dynamic_slice_in_dim(bp, t * block_n, block_n, axis=1)
+        vt = jax.lax.dynamic_slice_in_dim(vp, t * block_n, block_n, axis=1)
+        d2 = jnp.sum((a32[:, :, None, :] - bt[:, None, :, :]) ** 2, axis=-1)
+        hit = (d2 <= eps2) & vt[:, None, :]
+        return t + 1, cnt + hit.sum(axis=2, dtype=jnp.int32)
+
+    _, cnt = jax.lax.while_loop(
+        cond, body, (jnp.int32(0), jnp.zeros((B, M), jnp.int32)))
+    return cnt
+
+
+def _row_min_tiled(a32, b32, valid_b, block_n):
+    """Non-TPU fast path for the nearest query: same b-tile loop; no
+    stop condition (the minimum needs every valid candidate) but the
+    padding tail is still skipped."""
+    B, M, _ = a32.shape
+    bp, vp, n_tiles = _tile_prep(b32, valid_b, block_n)
+
+    def body(state):
+        t, best_d, best_i = state
+        bt = jax.lax.dynamic_slice_in_dim(bp, t * block_n, block_n, axis=1)
+        vt = jax.lax.dynamic_slice_in_dim(vp, t * block_n, block_n, axis=1)
+        d2 = jnp.sum((a32[:, :, None, :] - bt[:, None, :, :]) ** 2, axis=-1)
+        d2 = jnp.where(vt[:, None, :], d2, jnp.inf)
+        tmin = jnp.min(d2, axis=2)
+        targ = jnp.argmin(d2, axis=2).astype(jnp.int32) + t * block_n
+        better = tmin < best_d
+        return (t + 1, jnp.where(better, tmin, best_d),
+                jnp.where(better, targ, best_i))
+
+    _, mins, args = jax.lax.while_loop(
+        lambda s: s[0] < n_tiles, body,
+        (jnp.int32(0), jnp.full((B, M), jnp.inf, jnp.float32),
+         jnp.full((B, M), -1, jnp.int32)))
+    return mins, args
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "block_m", "block_n", "interpret", "stop_at"))
+def eps_count_batch(a: jnp.ndarray, b: jnp.ndarray, eps,
+                    valid_b: Optional[jnp.ndarray] = None,
+                    valid_a: Optional[jnp.ndarray] = None,
+                    *, block_m: int = 128, block_n: int = 128,
+                    interpret: Optional[bool] = None,
+                    stop_at: Optional[int] = None) -> jnp.ndarray:
+    """Batched eps-counts: a [B, M, d], b [B, N, d], valid_b [B, N].
+
+    Returns [B, M] int32 counts of valid b-rows of batch slot g within
+    ``eps`` of each a-row of slot g.  ``stop_at`` enables the saturating
+    early-exit contract (module docstring); ``valid_a`` only feeds that
+    exit decision -- invalid a-rows still receive (garbage) counts the
+    caller masks."""
+    eps2 = jnp.asarray(eps, jnp.float32) ** 2
+    a32 = a.astype(jnp.float32)
+    b32 = b.astype(jnp.float32)
+    if not _use_batch_pallas(interpret):
+        if FORCE_REF:
+            return ref.eps_count_batch(a32, b32, eps, valid_b)
+        return _eps_count_tiled(a32, b32, eps2, valid_a, valid_b,
+                                stop_at, block_n)
+    if valid_b is not None:
+        b32 = jnp.where(valid_b[:, :, None], b32, FAR)
+    M = a.shape[1]
+    ap = _pad_feat(_pad_rows(a32, block_m, 0.0, axis=1))
+    bp = _pad_feat(_pad_rows(b32, block_n, FAR, axis=1))
+    out = eps_count_batch_pallas(ap, bp, eps2, block_m=block_m,
+                                 block_n=block_n,
+                                 interpret=bool(interpret))
+    return out[:, :M, 0]
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("block_m", "block_n", "interpret"))
+def row_min_batch(a: jnp.ndarray, b: jnp.ndarray,
+                  valid_b: Optional[jnp.ndarray] = None,
+                  *, block_m: int = 128, block_n: int = 128,
+                  interpret: Optional[bool] = None):
+    """Batched :func:`row_min`: a [B, M, d], b [B, N, d], valid_b [B, N].
+
+    Returns ([B, M] f32 min squared distance, [B, M] int32 argmin into
+    slot g's b-rows); a row with no valid candidate reports
+    ``(inf, -1)``."""
+    a32 = a.astype(jnp.float32)
+    b32 = b.astype(jnp.float32)
+    if not _use_batch_pallas(interpret):
+        if FORCE_REF:
+            return ref.row_min_batch(a32, b32, valid_b)
+        return _row_min_tiled(a32, b32, valid_b, block_n)
+    if valid_b is not None:
+        b32 = jnp.where(valid_b[:, :, None], b32, FAR)
+    M = a.shape[1]
+    ap = _pad_feat(_pad_rows(a32, block_m, 0.0, axis=1))
+    bp = _pad_feat(_pad_rows(b32, block_n, FAR, axis=1))
+    mins, args = row_min_batch_pallas(ap, bp, block_m=block_m,
+                                      block_n=block_n,
+                                      interpret=bool(interpret))
+    mins, args = mins[:, :M, 0], args[:, :M, 0]
+    none = mins >= FAR_D2
+    return (jnp.where(none, jnp.inf, mins),
+            jnp.where(none, jnp.int32(-1), args))
 
 
 @functools.partial(jax.jit, static_argnames=(

@@ -10,12 +10,17 @@ Kernels (one `pl.pallas_call` each, explicit VMEM BlockSpecs):
 
 * ``eps_count_kernel``  -- per-row count of other-set points within eps.
 * ``row_min_kernel``    -- per-row (min squared distance, argmin index).
+* ``eps_count_batch_*`` / ``row_min_batch_*`` -- the same contractions
+  with a leading grid-batch dimension, one (a-set, b-set) pair per grid
+  of the DBSCAN pipeline; the batch axis is the outermost grid dimension
+  so each (g, i) output block still accumulates across the j axis.
 
-Both iterate a (i, j) grid over (rows, cols) tiles and accumulate across
-the j axis in the output block (revisited per i), the standard Pallas
-accumulation pattern.  Padding policy (see ops.py): padded B-rows carry
-coordinates so far away they can never satisfy a predicate; padded A-rows
-produce garbage that callers slice off.
+All iterate a (..., i, j) grid over (rows, cols) tiles and accumulate
+across the j axis in the output block (revisited per i), the standard
+Pallas accumulation pattern.  Padding policy (see ops.py): padded B-rows
+carry coordinates so far away they can never satisfy a predicate (and
+per-row validity masks are folded into the same FAR coordinates before
+the call); padded A-rows produce garbage that callers slice off.
 """
 
 from __future__ import annotations
@@ -126,6 +131,90 @@ def row_min_pallas(a: jnp.ndarray, b: jnp.ndarray,
         out_shape=[
             jax.ShapeDtypeStruct((M, 1), jnp.float32),
             jax.ShapeDtypeStruct((M, 1), jnp.int32),
+        ],
+        interpret=interpret,
+    )(a, b)
+
+
+# --------------------------------------------------------------------------
+# batched forms: leading grid-batch dimension (one DBSCAN grid per slot)
+# --------------------------------------------------------------------------
+
+def _eps_count_batch_kernel(a_ref, b_ref, eps2_ref, out_ref):
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    d2 = _sq_dist_tile(a_ref[0, :, :], b_ref[0, :, :])
+    hit = (d2 <= eps2_ref[0, 0]).astype(jnp.int32)
+    out_ref[0, :, :] += jnp.sum(hit, axis=1, keepdims=True)
+
+
+def eps_count_batch_pallas(a: jnp.ndarray, b: jnp.ndarray, eps2: jnp.ndarray,
+                           *, block_m: int = BLOCK_M, block_n: int = BLOCK_N,
+                           interpret: bool = False) -> jnp.ndarray:
+    """a: [G, M, D], b: [G, N, D] (M % block_m == N % block_n == 0,
+    D == LANE).  Returns [G, M, 1] int32 counts of b-rows of batch g
+    within sqrt(eps2) of each a-row of batch g."""
+    G, M, D = a.shape
+    N = b.shape[1]
+    grid = (G, M // block_m, N // block_n)
+    return pl.pallas_call(
+        _eps_count_batch_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_m, D), lambda g, i, j: (g, i, 0)),
+            pl.BlockSpec((1, block_n, D), lambda g, i, j: (g, j, 0)),
+            pl.BlockSpec((1, 1), lambda g, i, j: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_m, 1), lambda g, i, j: (g, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((G, M, 1), jnp.int32),
+        interpret=interpret,
+    )(a, b, eps2.reshape(1, 1).astype(jnp.float32))
+
+
+def _row_min_batch_kernel(a_ref, b_ref, min_ref, arg_ref, *, block_n: int):
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        min_ref[...] = jnp.full_like(min_ref, jnp.inf)
+        arg_ref[...] = jnp.full_like(arg_ref, -1)
+
+    d2 = _sq_dist_tile(a_ref[0, :, :], b_ref[0, :, :])
+    tile_min = jnp.min(d2, axis=1, keepdims=True)             # [BM, 1]
+    tile_arg = jnp.argmin(d2, axis=1).astype(jnp.int32)[:, None]
+    better = tile_min < min_ref[0, :, :]
+    min_ref[0, :, :] = jnp.where(better, tile_min, min_ref[0, :, :])
+    arg_ref[0, :, :] = jnp.where(better, tile_arg + j * block_n,
+                                 arg_ref[0, :, :])
+
+
+def row_min_batch_pallas(a: jnp.ndarray, b: jnp.ndarray,
+                         *, block_m: int = BLOCK_M, block_n: int = BLOCK_N,
+                         interpret: bool = False):
+    """a: [G, M, D], b: [G, N, D] (aligned as in
+    ``eps_count_batch_pallas``).  Returns ([G, M, 1] f32 min squared
+    distance, [G, M, 1] int32 argmin row within batch g)."""
+    G, M, D = a.shape
+    N = b.shape[1]
+    grid = (G, M // block_m, N // block_n)
+    return pl.pallas_call(
+        functools.partial(_row_min_batch_kernel, block_n=block_n),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_m, D), lambda g, i, j: (g, i, 0)),
+            pl.BlockSpec((1, block_n, D), lambda g, i, j: (g, j, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, block_m, 1), lambda g, i, j: (g, i, 0)),
+            pl.BlockSpec((1, block_m, 1), lambda g, i, j: (g, i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((G, M, 1), jnp.float32),
+            jax.ShapeDtypeStruct((G, M, 1), jnp.int32),
         ],
         interpret=interpret,
     )(a, b)

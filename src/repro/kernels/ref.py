@@ -41,12 +41,63 @@ def eps_count(a: jnp.ndarray, b: jnp.ndarray, eps: jnp.ndarray,
 
 def row_min(a: jnp.ndarray, b: jnp.ndarray,
             valid_b: Optional[jnp.ndarray] = None):
-    """Per-row (min squared distance, argmin index) into ``b``."""
+    """Per-row (min squared distance, argmin index) into ``b``.
+
+    Contract for a fully-masked row (no valid b-point at all): the min
+    distance is ``inf`` and the argmin is ``-1`` -- never an in-range
+    index into masked/padded rows.  ``border_block`` relies on this
+    whenever a grid has no core candidates.
+    """
     d2 = sq_dists(a, b)
     if valid_b is not None:
         d2 = jnp.where(valid_b[None, :], d2, jnp.inf)
+    mins = jnp.min(d2, axis=1)
     idx = jnp.argmin(d2, axis=1).astype(jnp.int32)
-    return jnp.min(d2, axis=1), idx
+    idx = jnp.where(jnp.isinf(mins), jnp.int32(-1), idx)
+    return mins, idx
+
+
+# --------------------------------------------------------------------------
+# batched (leading grid-batch dimension) forms
+# --------------------------------------------------------------------------
+
+def sq_dists_batch(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """[B, M, d] x [B, N, d] -> [B, M, N] squared Euclidean distances.
+
+    Same `aa + bb - 2ab` matmul form as the Pallas kernels (the MXU
+    path), so kernel parity against this oracle is tight."""
+    a = a.astype(jnp.float32)
+    b = b.astype(jnp.float32)
+    aa = jnp.sum(a * a, axis=-1)[:, :, None]
+    bb = jnp.sum(b * b, axis=-1)[:, None, :]
+    ab = jnp.einsum("bmd,bnd->bmn", a, b,
+                    preferred_element_type=jnp.float32)
+    return jnp.maximum(aa + bb - 2.0 * ab, 0.0)
+
+
+def eps_count_batch(a: jnp.ndarray, b: jnp.ndarray, eps: jnp.ndarray,
+                    valid_b: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """Per-batch per-row eps-counts: a [B, M, d], b [B, N, d], valid_b
+    [B, N] -> [B, M] int32."""
+    d2 = sq_dists_batch(a, b)
+    hit = d2 <= jnp.asarray(eps, jnp.float32) ** 2
+    if valid_b is not None:
+        hit = hit & valid_b[:, None, :]
+    return hit.sum(axis=-1).astype(jnp.int32)
+
+
+def row_min_batch(a: jnp.ndarray, b: jnp.ndarray,
+                  valid_b: Optional[jnp.ndarray] = None):
+    """Batched :func:`row_min`: a [B, M, d], b [B, N, d], valid_b [B, N]
+    -> ([B, M] f32 min d2, [B, M] int32 argmin; (inf, -1) for rows with
+    no valid b-point)."""
+    d2 = sq_dists_batch(a, b)
+    if valid_b is not None:
+        d2 = jnp.where(valid_b[:, None, :], d2, jnp.inf)
+    mins = jnp.min(d2, axis=-1)
+    idx = jnp.argmin(d2, axis=-1).astype(jnp.int32)
+    idx = jnp.where(jnp.isinf(mins), jnp.int32(-1), idx)
+    return mins, idx
 
 
 def min_dist(a: jnp.ndarray, va: jnp.ndarray,

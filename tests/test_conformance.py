@@ -40,6 +40,9 @@ SLAB = sorted(s.name for s in default_scenarios() if s.has("slab"))
 NOT_QUICK = [n for n in ALL if n not in QUICK]
 
 HOST_ENGINES = ["grit", "grit-ldf"]
+# both distance planes of the in-graph pipeline: naive broadcast and
+# the batched Pallas kernel route (matmul-form jnp on CPU)
+DEVICE_ENGINES = ["device", "device-kernels"]
 
 
 def _oracle(name, oracle_cache):
@@ -73,7 +76,8 @@ def _conform(name, engine, oracle_cache, **opts):
 
 def test_registry_lists_all_engines():
     assert set(available_engines()) >= {
-        "brute", "grit", "grit-ldf", "device", "distributed"}
+        "brute", "grit", "grit-ldf", "device", "device-kernels",
+        "distributed"}
 
 
 def test_unknown_engine_raises():
@@ -88,6 +92,41 @@ def test_bad_inputs_raise():
         cluster(np.zeros((4, 2)), -1.0, 2)
     with pytest.raises(ValueError):
         cluster(np.zeros((4, 2)), 1.0, 0)
+
+
+@pytest.mark.parametrize("engine", sorted(available_engines()) + ["auto"])
+def test_degenerate_inputs_rejected_uniformly(engine):
+    """Empty sets, n < min_pts and non-finite coordinates must raise the
+    same clear ValueError for *every* engine: validation lives at the
+    cluster() boundary, before any backend runs (so e.g. build_grids'
+    own empty-set guard is defense-in-depth, not the API surface)."""
+    opts = {"engine": engine}
+    with pytest.raises(ValueError, match="n > 0"):
+        cluster(np.zeros((0, 2)), 1.0, 2, **opts)
+    with pytest.raises(ValueError, match="min_pts"):
+        cluster(np.random.default_rng(0).uniform(0, 10, (3, 2)), 1.0, 5,
+                **opts)
+    bad = np.random.default_rng(0).uniform(0, 10, (16, 2))
+    bad[3, 1] = np.nan
+    with pytest.raises(ValueError, match="non-finite"):
+        cluster(bad, 1.0, 2, **opts)
+    bad[3, 1] = np.inf
+    with pytest.raises(ValueError, match="non-finite"):
+        cluster(bad, 1.0, 2, **opts)
+
+
+@pytest.mark.parametrize("engine", ["device", "device-kernels"])
+def test_device_engines_reject_identifier_overflow(engine):
+    """A valid point whose grid interval index would exceed the f32
+    device-grid identifier range (span/side >= 2^22: whole-cell f32
+    quantization, and near 2^30 the PAD_ID clamp itself) must be
+    rejected host-side rather than silently mislabeled in-graph."""
+    pts = np.array([[0.0, 0.0], [1e9, 1e9], [1e9, 0.0]])
+    with pytest.raises(ValueError, match="device-grid identifier range"):
+        cluster(pts, 1e-3, 2, engine=engine)
+    # the host pipeline uses int64 identifiers and must still work
+    res = cluster(pts, 1e-3, 2, engine="grit")
+    assert (res.labels == -1).all()
 
 
 def test_auto_resolves_to_registered_engine():
@@ -114,20 +153,47 @@ def test_brute_engine_self_consistent(oracle_cache):
 
 
 # --------------------------------------------------------------------------
-# device engine: quick subset by default, the rest nightly (slow)
+# device engine (both distance planes): quick subset by default, the
+# rest nightly (slow)
 # --------------------------------------------------------------------------
 
+@pytest.mark.parametrize("engine", DEVICE_ENGINES)
 @pytest.mark.parametrize("name", QUICK)
-def test_device_engine_conformance_quick(name, oracle_cache):
-    res = _conform(name, "device", oracle_cache)
+def test_device_engine_conformance_quick(name, engine, oracle_cache):
+    res = _conform(name, engine, oracle_cache)
     assert res.attempts, "device engine must record its cap attempts"
     assert res.attempts[-1]["overflow"] == ()
 
 
 @pytest.mark.slow
+@pytest.mark.parametrize("engine", DEVICE_ENGINES)
 @pytest.mark.parametrize("name", NOT_QUICK)
-def test_device_engine_conformance_full(name, oracle_cache):
-    _conform(name, "device", oracle_cache)
+def test_device_engine_conformance_full(name, engine, oracle_cache):
+    _conform(name, engine, oracle_cache)
+
+
+def test_kernelized_caps_share_overflow_machinery(oracle_cache):
+    """use_kernels must not perturb overflow reporting: identical tiny
+    caps raise identical per-cap flags on both distance planes, and the
+    adaptive driver recovers the kernelized path exactly like the naive
+    one (the flags come from candidate totals, never distance values)."""
+    pts, ref, core = _oracle("duplicates-2d", oracle_cache)
+    sc = SCENARIOS["duplicates-2d"]
+    tiny_k = dataclasses.replace(TINY, use_kernels=True)
+    r_naive = device_dbscan(jnp.asarray(pts, jnp.float32), sc.eps,
+                            sc.min_pts, TINY)
+    r_kern = device_dbscan(jnp.asarray(pts, jnp.float32), sc.eps,
+                           sc.min_pts, tiny_k)
+    assert (jax.device_get(r_naive.report).overflowing()
+            == jax.device_get(r_kern.report).overflowing())
+    res, attempts = adaptive_device_dbscan(
+        jnp.asarray(pts, jnp.float32), sc.eps, sc.min_pts, tiny_k,
+        growth=3.0)
+    assert attempts[0]["overflow"] and attempts[-1]["overflow"] == ()
+    assert all(a["caps"]["use_kernels"] for a in attempts), \
+        "use_kernels must survive every growth round"
+    assert_labels_conformant(pts, sc.eps, sc.min_pts, ref,
+                             np.asarray(res.labels), core=core)
 
 
 # --------------------------------------------------------------------------

@@ -6,9 +6,9 @@ import jax.numpy as jnp
 
 from repro.data.seed_spreader import seed_spreader
 from repro.core.dbscan import grit_dbscan, brute_dbscan
-from repro.core.device_dbscan import device_dbscan, GritCaps
+from repro.core.device_dbscan import device_dbscan, GritCaps, PAD_COORD
 from repro.core.validate import assert_dbscan_equivalent
-from repro.core.grids import build_grids, build_grids_device
+from repro.core.grids import build_grids, build_grids_device, PAD_ID
 
 
 @pytest.mark.parametrize("d", [2, 3, 5, 7])
@@ -70,6 +70,52 @@ def test_device_dbscan_respects_point_validity():
     assert (labels[200:] == -1).all()
     ref = brute_dbscan(pts[:200], eps, min_pts)
     assert_dbscan_equivalent(pts[:200], eps, min_pts, ref, labels[:200])
+
+
+@pytest.mark.parametrize("use_kernels", [False, True])
+def test_padding_points_never_share_a_grid_with_real_ones(use_kernels):
+    """Regression: identifiers of PAD_COORD rows used to go through an
+    out-of-range f32->int32 cast (implementation-defined in XLA; can
+    wrap negative and lex-sort padding *ahead of* real grids, corrupting
+    point_grid/starts).  Clamped to the PAD_ID sentinel, every padding
+    point must land in the sentinel grid, strictly after all real grids,
+    and the pipeline must stay exact under a point_valid mask."""
+    pts = seed_spreader(192, 2, variant="simden", restarts=3, seed=7)
+    n_valid = 150
+    valid = np.arange(192) < n_valid
+    padded = np.where(valid[:, None], pts, PAD_COORD)
+
+    dg = build_grids_device(jnp.asarray(padded, jnp.float32), 4000.0,
+                            grid_cap=256)
+    point_grid = np.asarray(dg.point_grid)
+    order = np.asarray(dg.order)
+    real_grids = set(point_grid[np.isin(order, np.flatnonzero(valid))])
+    pad_grids = set(point_grid[np.isin(order, np.flatnonzero(~valid))])
+    assert not (real_grids & pad_grids), \
+        f"padding shares grids with real points: {real_grids & pad_grids}"
+    # the sentinel grid must sort after every real grid and carry PAD_ID
+    ids = np.asarray(dg.ids)
+    assert all(g > max(real_grids) for g in pad_grids)
+    assert all((ids[g] == int(PAD_ID)).all() for g in pad_grids)
+
+    caps = GritCaps(grid_cap=256, frontier_cap=256, k_cap=48, c_cap=512,
+                    m_cap=512, pair_cap=2048, grid_block=64,
+                    pair_block=256, use_kernels=use_kernels)
+    r = device_dbscan(jnp.asarray(pts, jnp.float32), 4000.0, 8, caps,
+                      point_valid=jnp.asarray(valid))
+    assert not bool(r.overflow)
+    labels = np.asarray(r.labels)
+    assert (labels[n_valid:] == -1).all()
+    ref = brute_dbscan(pts[:n_valid], 4000.0, 8)
+    assert_dbscan_equivalent(pts[:n_valid], 4000.0, 8, ref,
+                             labels[:n_valid])
+
+
+def test_build_grids_empty_raises_cleanly():
+    """The n == 0 guard must fire before identifiers() reduces an empty
+    array (it used to be unreachable)."""
+    with pytest.raises(ValueError, match="empty point set"):
+        build_grids(np.zeros((0, 3)), 1.0)
 
 
 def test_grid_build_host_vs_device():

@@ -95,3 +95,148 @@ def test_eps_count_matches_bruteforce_semantics():
     d2 = ((np.asarray(a)[:, None] - np.asarray(a)[None]) ** 2).sum(-1)
     want = (d2 <= 25.0).sum(1)
     np.testing.assert_array_equal(np.asarray(got), want)
+
+
+# --------------------------------------------------------------------------
+# batched (leading grid-batch dimension) kernels: Pallas (interpret) vs
+# the pure-jnp oracles, on deliberately unaligned shapes
+# --------------------------------------------------------------------------
+
+def _batch(key, bsz, m, n, d):
+    rng = _rng(*key)
+    a = jnp.asarray(rng.normal(size=(bsz, m, d)) * 10, jnp.float32)
+    b = jnp.asarray(rng.normal(size=(bsz, n, d)) * 10, jnp.float32)
+    vb = jnp.asarray(rng.uniform(size=(bsz, n)) > 0.3)
+    # whole-slot mask: one batch row with *no* valid candidate at all
+    if bsz > 1:
+        vb = vb.at[0].set(False)
+    return a, b, vb
+
+
+# M, N deliberately not multiples of 128; d sweeps the supported 1..5
+BATCH_SHAPES = [
+    (1, 1, 1, 1), (3, 5, 7, 2), (2, 17, 130, 3),
+    pytest.param(4, 127, 129, 4, marks=slow),
+    pytest.param(2, 128, 256, 5, marks=slow),
+    pytest.param(3, 130, 257, 1, marks=slow),
+    pytest.param(2, 64, 300, 5, marks=slow),
+]
+
+
+@pytest.mark.parametrize("bsz,m,n,d", BATCH_SHAPES)
+def test_eps_count_batch_parity(bsz, m, n, d):
+    a, b, vb = _batch(("eps_count_batch", bsz, m, n, d), bsz, m, n, d)
+    got = ops.eps_count_batch(a, b, 6.0, vb, interpret=True)
+    want = ref.eps_count_batch(a, b, 6.0, vb)
+    assert got.shape == (bsz, m)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("bsz,m,n,d", BATCH_SHAPES)
+def test_row_min_batch_parity(bsz, m, n, d):
+    a, b, vb = _batch(("row_min_batch", bsz, m, n, d), bsz, m, n, d)
+    got_m, got_i = ops.row_min_batch(a, b, vb, interpret=True)
+    want_m, want_i = ref.row_min_batch(a, b, vb)
+    np.testing.assert_allclose(np.asarray(got_m), np.asarray(want_m),
+                               rtol=1e-5, atol=1e-4)
+    np.testing.assert_array_equal(np.asarray(got_i), np.asarray(want_i))
+    if bsz > 1:   # the all-masked slot obeys the (inf, -1) contract
+        assert np.isinf(np.asarray(got_m[0])).all()
+        assert (np.asarray(got_i[0]) == -1).all()
+
+
+@pytest.mark.parametrize("bsz,m,n,d", BATCH_SHAPES)
+def test_batch_default_dispatch_parity(bsz, m, n, d):
+    """The default (non-TPU) dispatch -- the tiled while-loop fast path
+    -- must agree with the oracles too, not just the interpreted Pallas
+    kernels.  The tiled path sums (a-b)^2 directly while the oracle uses
+    the matmul form, so an argmin may legitimately land on the *other*
+    member of a distance tie (1-ulp rounding flip); differing indices
+    are accepted only when they are such ties."""
+    a, b, vb = _batch(("tiled", bsz, m, n, d), bsz, m, n, d)
+    got = ops.eps_count_batch(a, b, 6.0, vb)
+    np.testing.assert_array_equal(
+        np.asarray(got), np.asarray(ref.eps_count_batch(a, b, 6.0, vb)))
+    got_m, got_i = ops.row_min_batch(a, b, vb)
+    want_m, want_i = ref.row_min_batch(a, b, vb)
+    np.testing.assert_allclose(np.asarray(got_m), np.asarray(want_m),
+                               rtol=1e-5, atol=1e-4)
+    got_i, want_i = np.asarray(got_i), np.asarray(want_i)
+    vb_np = np.asarray(vb)
+    differ = got_i != want_i
+    if differ.any():
+        d2 = np.asarray(ref.sq_dists_batch(a, b))
+        for bb, mm in zip(*np.nonzero(differ)):
+            gi, wi = got_i[bb, mm], want_i[bb, mm]
+            assert gi >= 0 and vb_np[bb, gi], \
+                f"[{bb},{mm}]: argmin {gi} is not a valid candidate"
+            np.testing.assert_allclose(
+                d2[bb, mm, gi], d2[bb, mm, wi], rtol=1e-5, atol=1e-4,
+                err_msg=f"[{bb},{mm}]: argmins {gi} vs {wi} not a tie")
+
+
+@pytest.mark.parametrize("stop_at", [1, 3, 8, 1000])
+def test_eps_count_stop_at_contract(stop_at):
+    """Saturating-count contract: with stop_at=k, min(count, k) must
+    equal min(exact, k) -- thresholding at >= k (core identification)
+    is exact even though counts may saturate once every valid a-row has
+    k hits."""
+    bsz, m, n, d = 3, 9, 260, 2
+    a, b, vb = _batch(("stop_at", bsz, m, n, d), bsz, m, n, d)
+    va = jnp.asarray(_rng("stop_at_va", stop_at).uniform(size=(bsz, m)) > 0.2)
+    exact = np.asarray(ref.eps_count_batch(a, b, 6.0, vb))
+    got = np.asarray(ops.eps_count_batch(a, b, 6.0, vb, va,
+                                         stop_at=stop_at))
+    va_np = np.asarray(va)
+    np.testing.assert_array_equal(
+        np.minimum(got, stop_at)[va_np], np.minimum(exact, stop_at)[va_np])
+    assert (got[va_np] <= exact[va_np]).all()
+
+
+def test_row_min_no_valid_candidate_contract():
+    """Every b-row masked -> (inf, -1), never a bogus in-range argmin
+    over FAR padding (border_block depends on this whenever a grid has
+    no core candidates).  Holds for the wrapper on both dispatch paths
+    and for the oracle, batched and not."""
+    rng = _rng("row_min_contract")
+    a = jnp.asarray(rng.normal(size=(5, 3)) * 10, jnp.float32)
+    b = jnp.asarray(rng.normal(size=(9, 3)) * 10, jnp.float32)
+    none = jnp.zeros((9,), bool)
+    for m, i in [ref.row_min(a, b, none),
+                 ops.row_min(a, b, none),
+                 ref.row_min_batch(a[None], b[None], none[None]),
+                 ops.row_min_batch(a[None], b[None], none[None]),
+                 ops.row_min_batch(a[None], b[None], none[None],
+                                   interpret=True)]:
+        assert np.isinf(np.asarray(m)).all()
+        assert (np.asarray(i) == -1).all()
+
+
+def test_eps_exactly_on_tile_boundary_ties():
+    """Distances exactly equal to eps (d2 == eps2, exactly representable
+    in f32) must count as hits (<= is inclusive) in kernel and oracle
+    alike, including for tie points straddling the 128-column tile
+    boundary where the j-accumulation switches tiles."""
+    n, d = 130, 2
+    b = np.zeros((n, d), np.float32)
+    b[:, 0] = np.arange(n, dtype=np.float32)     # integer grid: exact f32
+    # a-row at x = 6: points at x in {0, 12} sit at distance exactly 6;
+    # a-row at x = 121: ties at {115, 127} -- both sides of column 128
+    a = np.zeros((2, d), np.float32)
+    a[0, 0] = 6.0
+    a[1, 0] = 121.0
+    eps = 6.0
+    aj, bj = jnp.asarray(a), jnp.asarray(b)
+    want = ((a[:, None, 0] - b[None, :, 0]) ** 2 <= eps ** 2).sum(1)
+    for got in [ref.eps_count(aj, bj, eps),
+                ops.eps_count(aj, bj, eps),
+                ref.eps_count_batch(aj[None], bj[None], eps)[0],
+                ops.eps_count_batch(aj[None], bj[None], eps,
+                                    interpret=True)[0]]:
+        np.testing.assert_array_equal(np.asarray(got), want)
+    # the nearest-core tie at exactly eps must also survive row_min's
+    # <=-side: min d2 == eps2 exactly
+    m, i = ops.row_min_batch(aj[None], bj[None],
+                             jnp.asarray(np.arange(n) == 127)[None],
+                             interpret=True)
+    assert float(m[0, 1]) == eps ** 2 and int(i[0, 1]) == 127
