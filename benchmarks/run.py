@@ -16,6 +16,11 @@ The kernel-vs-naive comparison is additionally written as JSON to
 ``--json-out`` (default ``BENCH_2.json``): the perf-trajectory artifact
 CI uploads from every run.  ``--smoke`` runs *only* that comparison at
 CI scale (seconds, not minutes).
+
+``--serve`` runs the serving-plane benchmark instead (fitted-index
+predict throughput + insert latency vs a full refit per query batch,
+n = 1e5 blobs) and writes ``BENCH_3.json``; the >= 10x
+predict-vs-refit check gates the run.
 """
 
 from __future__ import annotations
@@ -25,6 +30,40 @@ import csv
 import io
 import json
 import sys
+
+
+def _print_csv(rows) -> str:
+    out = io.StringIO()
+    fields = sorted({k for r in rows for k in r})
+    w = csv.DictWriter(out, fieldnames=fields)
+    w.writeheader()
+    for r in rows:
+        w.writerow(r)
+    print(out.getvalue())
+    return out.getvalue()
+
+
+def _write_bench3(path: str, rows) -> bool:
+    """Dump the serve rows + verdict as BENCH_3.json.
+
+    Verdict: batched predict at the benched n is >= 10x faster than a
+    full refit per query batch (the fitted-index acceptance bar)."""
+    import jax
+
+    pred = [r for r in rows if r.get("op") == "predict_batch"]
+    verdict = bool(pred) and all(
+        r["speedup_vs_refit"] >= 10.0 for r in pred)
+    payload = {
+        "bench": "BENCH_3",
+        "backend": jax.default_backend(),
+        "rows": rows,
+        "checks": {"predict_10x_faster_than_refit_per_batch": verdict},
+    }
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2)
+        f.write("\n")
+    print(f"wrote {path} ({len(rows)} rows)")
+    return verdict
 
 
 def _write_bench2(path: str, rows, smoke: bool) -> bool:
@@ -65,14 +104,35 @@ def main() -> int:
                     help="kernel-vs-naive distance-plane bench only "
                          "(CI smoke: seconds, not minutes); still "
                          "writes --json-out")
+    ap.add_argument("--serve", action="store_true",
+                    help="serving-plane bench only (fitted-index "
+                         "predict/insert vs refit-per-batch); writes "
+                         "BENCH_3.json")
+    ap.add_argument("--serve-n", type=int, default=100_000,
+                    help="fit-set size for --serve")
     ap.add_argument("--out", default=None)
-    ap.add_argument("--json-out", default="BENCH_2.json",
-                    help="where to write the kernel-vs-naive JSON "
-                         "artifact")
+    ap.add_argument("--json-out", default=None,
+                    help="where to write the JSON artifact (default "
+                         "BENCH_2.json, or BENCH_3.json under --serve)")
     args = ap.parse_args()
+    if args.json_out is None:
+        args.json_out = "BENCH_3.json" if args.serve else "BENCH_2.json"
 
     from benchmarks import paper_figs as F
     from benchmarks import device_bench as D
+
+    if args.serve:
+        from benchmarks import serve_bench as S
+        rows = S.bench_serve(n=args.serve_n)
+        csv_text = _print_csv(rows)
+        if args.out:
+            with open(args.out, "w") as f:
+                f.write(csv_text)
+        ok = _write_bench3(args.json_out, rows)
+        print(f"[{'PASS' if ok else 'FAIL'}] batched predict >= 10x "
+              f"faster than a full refit per query batch (n="
+              f"{args.serve_n})")
+        return 0 if ok else 1
 
     if args.smoke:
         # same MinPts operating point as the full bench so smoke rows
@@ -80,13 +140,7 @@ def main() -> int:
         rows = D.bench_distance_plane(ns=(2000, 10_000),
                                       scenarios=("blobs-2d",),
                                       min_pts=64, reps=2)
-        out = io.StringIO()
-        fields = sorted({k for r in rows for k in r})
-        w = csv.DictWriter(out, fieldnames=fields)
-        w.writeheader()
-        for r in rows:
-            w.writerow(r)
-        print(out.getvalue())
+        _print_csv(rows)
         ok = _write_bench2(args.json_out, rows, smoke=True)
         # informational at smoke scale: CI-sized runs sit within
         # scheduler noise of each other, so the verdict gates only the
@@ -123,16 +177,10 @@ def main() -> int:
     rows += D.bench_lm_step()
 
     # ---- CSV dump ----
-    out = io.StringIO()
-    fields = sorted({k for r in rows for k in r})
-    w = csv.DictWriter(out, fieldnames=fields)
-    w.writeheader()
-    for r in rows:
-        w.writerow(r)
-    print(out.getvalue())
+    csv_text = _print_csv(rows)
     if args.out:
         with open(args.out, "w") as f:
-            f.write(out.getvalue())
+            f.write(csv_text)
 
     # ---- paper-claim checks ----
     ok = True

@@ -1,0 +1,108 @@
+"""Serving-plane benchmark: predict throughput + insert latency vs the
+fit-and-forget baseline (the BENCH_3.json perf-trajectory artifact).
+
+The fitted ``GritIndex`` exists so that serving a query batch does NOT
+cost a refit; this bench quantifies exactly that at paper scale
+(n = 1e5 blobs by default):
+
+* ``fit``            -- one ``cluster(..., return_index=True)`` run.
+* ``predict_batch``  -- warm latency of one batched point-query call
+                        against the fitted index (the serving hot path).
+* ``refit_baseline`` -- what the same query batch costs without the
+                        index: a full ``cluster()`` over fit ∪ batch
+                        (the only exact alternative).
+* ``insert_batch``   -- micro-batch incremental insert latency.
+
+The headline check -- batched predict >= 10x faster than a refit per
+query batch -- gates the run.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+import numpy as np
+
+
+def _query_mix(rng: np.random.Generator, base: np.ndarray, eps: float,
+               n: int) -> np.ndarray:
+    """Serving-shaped queries: mostly on-cluster, some far-field."""
+    d = base.shape[1]
+    n_near = int(0.8 * n)
+    near = base[rng.integers(0, len(base), n_near)] + rng.normal(
+        scale=0.3 * eps, size=(n_near, d))
+    far = rng.uniform(base.min() - 5 * eps, base.max() + 5 * eps,
+                      size=(n - n_near, d))
+    return np.concatenate([near, far])
+
+
+def bench_serve(n: int = 100_000, scenario: str = "blobs-2d",
+                engine: str = "grit", q_batch: int = 2048,
+                insert_m: int = 256, insert_steps: int = 4,
+                reps: int = 3, seed: int = 0) -> List[Dict]:
+    """Rows for the serve bench (see module docstring)."""
+    from repro.data.scenarios import get_scenario
+    from repro.engine import cluster
+
+    sc = get_scenario(scenario)
+    # same occupancy-preserving eps rescale as bench_distance_plane
+    eps = sc.eps * (sc.n / n) ** (1.0 / sc.d)
+    pts = sc.points(n=n)
+    rng = np.random.default_rng(seed)
+    rows: List[Dict] = []
+
+    t0 = time.perf_counter()
+    res = cluster(pts, eps, sc.min_pts, engine=engine, return_index=True)
+    t_fit = time.perf_counter() - t0
+    idx = res.index
+    rows.append(dict(bench="serve", op="fit", scenario=scenario, n=n,
+                     d=sc.d, engine=engine, seconds=round(t_fit, 4),
+                     clusters=res.n_clusters,
+                     grids=idx.num_grids))
+
+    q = _query_mix(rng, pts, eps, q_batch)
+    idx.predict(q)                           # warm (jit for kernel mode)
+    t_pred = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        labels = idx.predict(q)
+        t_pred = min(t_pred, time.perf_counter() - t0)
+
+    # baseline: serving the same batch without an index is a full
+    # cluster() over fit ∪ batch
+    union = np.concatenate([pts, q])
+    t0 = time.perf_counter()
+    base_res = cluster(union, eps, sc.min_pts, engine=engine)
+    t_refit = time.perf_counter() - t0
+    agree = float(np.mean(
+        (labels >= 0) == (base_res.labels[n:] >= 0)))
+    rows.append(dict(bench="serve", op="predict_batch", scenario=scenario,
+                     n=n, d=sc.d, engine=engine, q=q_batch,
+                     seconds=round(t_pred, 5),
+                     queries_per_s=round(q_batch / t_pred, 1),
+                     noise=int((labels < 0).sum()),
+                     border_noise_agreement_vs_refit=round(agree, 4),
+                     speedup_vs_refit=round(t_refit / t_pred, 1)))
+    rows.append(dict(bench="serve", op="refit_baseline", scenario=scenario,
+                     n=n + q_batch, d=sc.d, engine=engine,
+                     seconds=round(t_refit, 4)))
+
+    ins_times = []
+    for t in range(insert_steps):
+        batch = _query_mix(rng, pts, eps, insert_m)
+        t0 = time.perf_counter()
+        st = idx.insert(batch)
+        ins_times.append(time.perf_counter() - t0)
+    rows.append(dict(bench="serve", op="insert_batch", scenario=scenario,
+                     n=n, d=sc.d, engine=engine, m=insert_m,
+                     batches=insert_steps,
+                     seconds_mean=round(float(np.mean(ins_times)), 5),
+                     seconds_max=round(float(np.max(ins_times)), 5),
+                     newly_core_last=st["newly_core"]))
+
+    snap = idx.snapshot()
+    rows.append(dict(bench="serve", op="snapshot", scenario=scenario,
+                     n=idx.n, d=sc.d, engine=engine,
+                     bytes=int(sum(v.nbytes for v in snap.values()))))
+    return rows

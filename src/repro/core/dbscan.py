@@ -92,6 +92,7 @@ class DBSCANResult:
     labels: np.ndarray           # [n] cluster per point (-1 noise)
     core: np.ndarray             # [n] bool
     stats: dict                  # timings + counters
+    grid: Optional[GridIndex] = None   # the partition the run was built on
 
 
 def _neighbor_lists(gi: GridIndex, engine: str):
@@ -282,4 +283,4 @@ def grit_dbscan(points: np.ndarray, eps: float, min_pts: int,
     stats["t_assign"] = t5 - t4
     stats["t_total"] = t5 - t0
     stats["num_clusters"] = int(grid_label.max() + 1) if (grid_label >= 0).any() else 0
-    return DBSCANResult(labels=labels, core=core, stats=stats)
+    return DBSCANResult(labels=labels, core=core, stats=stats, grid=gi)

@@ -150,13 +150,17 @@ class GritCaps:
 class DeviceDBSCANResult:
     labels: jnp.ndarray        # [n] int32, original order; -1 noise
     core: jnp.ndarray          # [n] bool, original order
+    point_grid: jnp.ndarray    # [n] int32 grid row of each point, original
+                               # order (rows of the device grid table; f32
+                               # identifiers -- provenance, not the float64
+                               # host partition)
     num_clusters: jnp.ndarray  # [] int32
     overflow: jnp.ndarray      # [] bool -- any static cap exceeded
     report: OverflowReport     # which cap(s) overflowed
 
     def tree_flatten(self):
-        return (self.labels, self.core, self.num_clusters, self.overflow,
-                self.report), None
+        return (self.labels, self.core, self.point_grid, self.num_clusters,
+                self.overflow, self.report), None
 
     @classmethod
     def tree_unflatten(cls, aux, ch):
@@ -368,10 +372,12 @@ def device_dbscan(points: jnp.ndarray, eps, min_pts: int, caps: GritCaps,
 
     labels = jnp.zeros((n,), jnp.int32).at[dg.order].set(lab_sorted)
     core = jnp.zeros((n,), bool).at[dg.order].set(core_sorted)
+    point_grid = jnp.zeros((n,), jnp.int32).at[dg.order].set(dg.point_grid)
     report = OverflowReport(
         grid=dg.overflow, frontier=ovf_frontier, neighbors=ovf_k,
         candidates=ovf_candidates, core_set=ovf_core_set, pairs=ovf_pairs,
         halo=jnp.zeros((), bool))
     return DeviceDBSCANResult(labels=labels, core=core,
+                              point_grid=point_grid,
                               num_clusters=num_clusters,
                               overflow=report.any(), report=report)

@@ -110,6 +110,15 @@ class GridTree:
         Returns CSR ``(indptr[nq+1], nbr_grid[idx], nbr_offset[idx])`` with
         neighbors of each query sorted by offset ascending (paper line 16).
         ``nbr_offset`` is the integer squared grid distance in side^2 units.
+
+        Queries need not be identifiers *of* the tree: the serving path
+        (``GritIndex.predict``) queries with the cells of arbitrary new
+        points, including empty cells and cells outside the fitted
+        range (negative components are fine -- the per-level searches
+        are value-based against the stored keys, which are >= 0).
+        ``include_self=False`` drops only the *exact* identifier match;
+        distinct grids at grid-distance 0 (adjacent cells, offset 0)
+        are kept.
         """
         queries = np.asarray(queries, dtype=np.int64)
         nq, d = queries.shape
@@ -167,12 +176,11 @@ class GridTree:
         grid = self.level_starts[d - 1][node] if d > 1 else self.level_starts[0][node]
         # NOTE: at j == d-1 each node is a unique full identifier -> one grid
         if not include_self:
-            keep = off > 0
             # offset 0 also matches *distinct* grids at grid-distance 0
             # (adjacent cells); only drop the exact self match.
             self_match = np.all(self.ids[grid] == queries[q_of], axis=1)
-            keep = ~self_match
-            grid, q_of, off = grid[keep], q_of[keep], off[keep]
+            grid, q_of, off = (grid[~self_match], q_of[~self_match],
+                               off[~self_match])
 
         # sort per query by offset ascending (paper: counting sort)
         perm = np.lexsort((grid, off, q_of))

@@ -54,6 +54,28 @@ def identifiers(points: np.ndarray, eps: float) -> Tuple[np.ndarray, np.ndarray,
     return ids, mins, side
 
 
+def group_rows(ids: np.ndarray):
+    """Lex-sort integer id rows and read off the run (grid) structure.
+
+    The shared core of Algorithm 1, also used by the fitted index's
+    insert splice and the kernel predict's query grouping.  Returns
+    ``(order, sorted_ids, starts, counts, group_of_sorted)``: a stable
+    lexicographic permutation, the sorted rows, CSR boundaries of each
+    run of equal rows, and each sorted row's run index.
+    """
+    ids = np.asarray(ids)
+    n, d = ids.shape
+    order = np.lexsort(tuple(ids[:, j] for j in range(d - 1, -1, -1)))
+    sids = ids[order]
+    new = np.ones(n, dtype=bool)
+    if n:
+        new[1:] = np.any(sids[1:] != sids[:-1], axis=1)
+    starts = np.flatnonzero(new).astype(np.int64)
+    counts = np.diff(np.append(starts, n)).astype(np.int64)
+    group_of = np.cumsum(new) - 1
+    return order, sids, starts, counts, group_of
+
+
 def build_grids(points: np.ndarray, eps: float) -> GridIndex:
     """Algorithm 1 (host). O(n log n) via lexsort (radix-family, stable)."""
     pts = np.asarray(points, dtype=np.float64)
@@ -64,16 +86,7 @@ def build_grids(points: np.ndarray, eps: float) -> GridIndex:
     if n == 0:
         raise ValueError("empty point set")
     ids, mins, side = identifiers(pts, eps)
-    # np.lexsort sorts by last key first -> feed dims reversed for lexicographic.
-    order = np.lexsort(tuple(ids[:, j] for j in range(d - 1, -1, -1)))
-    sids = ids[order]
-    # boundary flags: first point of each grid
-    new = np.empty(n, dtype=bool)
-    new[0] = True
-    new[1:] = np.any(sids[1:] != sids[:-1], axis=1)
-    starts = np.flatnonzero(new)
-    counts = np.diff(np.append(starts, n))
-    grid_of_sorted = np.cumsum(new) - 1
+    order, sids, starts, counts, grid_of_sorted = group_rows(ids)
     point_grid = np.empty(n, dtype=np.int64)
     point_grid[order] = grid_of_sorted
     gids = sids[starts]

@@ -24,6 +24,12 @@ discontinuous at exact equality; testing *at* the knife edge tests the
 rounding mode, not the algorithm.
 
 Domain is [0, DOMAIN]^d (the paper's normalized integer domain).
+
+Serving workloads (:class:`ServingScenario`, ``serving_scenarios()``)
+layer fit-once / serve-many traffic on top of the catalogue: a base fit
+set plus held-out query batches (near-cluster, empty-grid,
+outside-the-fitted-box, and exact-eps-boundary queries) and streaming
+micro-batch inserts that drift outside the fitted bounding box.
 """
 
 from __future__ import annotations
@@ -275,6 +281,138 @@ def default_scenarios() -> List[Scenario]:
         gen=_seed_spreader("simden", restarts=4)))
 
     return s
+
+
+# --------------------------------------------------------------------------
+# serving scenarios: base fit set + held-out query / insert traffic
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ServingScenario:
+    """A fit-once / serve-many workload over a base :class:`Scenario`.
+
+    ``query_batch`` produces held-out point queries against the fitted
+    index (the predict plane); ``insert_batches`` produces a stream of
+    micro-batches (the insert plane).  Both are deterministic in the
+    seed, like the base catalogue.
+    """
+
+    name: str
+    base: Scenario
+    n_query: int
+    n_insert: int                   # points per insert batch
+    query_gen: Callable[[np.random.Generator, np.ndarray, "Scenario", int],
+                        np.ndarray]
+    insert_gen: Callable[[np.random.Generator, np.ndarray, "Scenario",
+                          int, int, int], np.ndarray]
+    insert_steps: int = 3
+    tags: Tuple[str, ...] = ("serving",)
+
+    def fit_points(self, seed: int = 0) -> np.ndarray:
+        return self.base.points(seed)
+
+    def query_batch(self, seed: int = 0, n: Optional[int] = None
+                    ) -> np.ndarray:
+        rng = np.random.default_rng(10_000 + seed)
+        q = self.query_gen(rng, self.fit_points(seed), self.base,
+                           n or self.n_query)
+        assert q.shape == (n or self.n_query, self.base.d)
+        return np.asarray(q, np.float64)
+
+    def insert_batches(self, seed: int = 0,
+                       steps: Optional[int] = None) -> List[np.ndarray]:
+        rng = np.random.default_rng(20_000 + seed)
+        base = self.fit_points(seed)
+        k = steps or self.insert_steps
+        return [np.asarray(
+            self.insert_gen(rng, base, self.base, self.n_insert, t, k),
+            np.float64) for t in range(k)]
+
+
+def _queries_mixed(rng: np.random.Generator, base: np.ndarray,
+                   sc: Scenario, n: int) -> np.ndarray:
+    """Held-out predict traffic covering every assignment regime:
+
+    * near-duplicates of fitted points (deep inside clusters),
+    * uniform points over an *extended* box -- many land in empty grids
+      or outside the fitted bounding box (negative identifiers),
+    * a ring at 0.5..2 eps from fitted points (the border/noise band,
+      kept a relative margin away from eps itself),
+    * queries placed *exactly* on the eps boundary of a fitted point
+      (one axis-aligned eps step: distance == eps up to one rounding of
+      the f64 sum, landing as close to the <=-vs-> knife edge as f64
+      allows -- predict and oracle must still agree bit-for-bit because
+      both evaluate the identical f64 expression).
+    """
+    d = sc.d
+    n_near = int(0.4 * n)
+    n_far = int(0.25 * n)
+    n_ring = int(0.2 * n)
+    n_edge = n - n_near - n_far - n_ring
+    near = base[rng.integers(0, len(base), n_near)] + rng.normal(
+        scale=0.1 * sc.eps, size=(n_near, d))
+    far = rng.uniform(-0.15 * DOMAIN, 1.15 * DOMAIN, size=(n_far, d))
+    anchors = base[rng.integers(0, len(base), n_ring)]
+    dirs = rng.normal(size=(n_ring, d))
+    dirs /= np.linalg.norm(dirs, axis=1, keepdims=True)
+    radii = rng.uniform(0.5, 2.0, size=(n_ring, 1)) * sc.eps
+    # stay a relative margin off eps so f32 predict modes agree too
+    radii = np.where(np.abs(radii - sc.eps) < 1e-3 * sc.eps,
+                     sc.eps * (1 + 2e-3), radii)
+    ring = anchors + dirs * radii
+    edge_anchor = base[rng.integers(0, len(base), n_edge)]
+    axis = rng.integers(0, d, n_edge)
+    edge = edge_anchor.copy()
+    edge[np.arange(n_edge), axis] += sc.eps
+    return np.concatenate([near, far, ring, edge])
+
+
+def _insert_drift(rng: np.random.Generator, base: np.ndarray,
+                  sc: Scenario, n: int, step: int, steps: int
+                  ) -> np.ndarray:
+    """Streaming drift: each micro-batch is a blob whose center walks
+    from inside the fitted region off past the corner of the domain
+    (later batches fall *outside* the fitted bounding box, exercising
+    the identifier-origin shift), plus a sprinkle of points landing on
+    the fitted clusters (growing/merging existing structure)."""
+    d = sc.d
+    t = (step + 1) / steps
+    center = ((1 - t) * 0.5 * DOMAIN
+              + t * 1.12 * DOMAIN) * np.ones(d)
+    n_blob = int(0.7 * n)
+    blob = center + rng.normal(scale=1.5 * sc.eps, size=(n_blob, d))
+    onto = base[rng.integers(0, len(base), n - n_blob)] + rng.normal(
+        scale=0.4 * sc.eps, size=(n - n_blob, d))
+    return np.concatenate([blob, onto])
+
+
+def serving_scenarios() -> List[ServingScenario]:
+    """Fit/query/insert workloads for the index + serving tests."""
+    base = scenario_map()
+    return [
+        ServingScenario(
+            name="query-heavy-3d", base=base["blobs-3d"],
+            n_query=200, n_insert=48,
+            query_gen=_queries_mixed, insert_gen=_insert_drift,
+            tags=("serving", "query")),
+        ServingScenario(
+            name="drift-2d", base=base["blobs-2d"],
+            n_query=120, n_insert=64, insert_steps=3,
+            query_gen=_queries_mixed, insert_gen=_insert_drift,
+            tags=("serving", "drift")),
+    ]
+
+
+def serving_scenario_map() -> Dict[str, ServingScenario]:
+    return {sc.name: sc for sc in serving_scenarios()}
+
+
+def get_serving_scenario(name: str) -> ServingScenario:
+    m = serving_scenario_map()
+    if name not in m:
+        raise KeyError(
+            f"unknown serving scenario {name!r}; known: {sorted(m)}")
+    return m[name]
 
 
 def scenario_map() -> Dict[str, Scenario]:

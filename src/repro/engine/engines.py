@@ -60,7 +60,8 @@ def _brute_engine(points, eps, min_pts, *, chunk: int = 2048,
 def _host_grit(points, eps, min_pts, variant: str, name: str,
                **opts) -> ClusterResult:
     r = grit_dbscan(points, eps, min_pts, variant=variant, **opts)
-    return ClusterResult.build(r.labels, name, core=r.core, stats=r.stats)
+    return ClusterResult.build(r.labels, name, core=r.core, grid=r.grid,
+                               stats=r.stats)
 
 
 @register_engine("grit", "host GriT-DBSCAN (paper Algorithm 6)")

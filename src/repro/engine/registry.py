@@ -109,14 +109,52 @@ def resolve_auto() -> str:
     return "grit"
 
 
+def _attach_index(result: ClusterResult, pts: np.ndarray, eps: float,
+                  min_pts: int) -> ClusterResult:
+    """Build the fitted :class:`~repro.index.GritIndex` from an engine
+    result (the ``return_index=True`` path).
+
+    Host engines already carry the float64 ``GridIndex`` and core flags,
+    so this is pure reshuffling; device/distributed results trigger a
+    host partition rebuild (and, for engines that report no core flags,
+    a grid-based core identification) inside ``from_fit``.  The caps of
+    the final adaptive attempt ride along so a device-fitted index can
+    reuse the same jit key when serving.
+    """
+    from repro.index import GritIndex
+    from repro.core.device_dbscan import GritCaps
+
+    caps = None
+    if result.attempts:
+        try:
+            caps = GritCaps(**result.attempts[-1]["caps"])
+        except TypeError:
+            caps = None          # e.g. distributed: halo_cap is not a GritCap
+    index = GritIndex.from_fit(pts, eps, min_pts, labels=result.labels,
+                               core=result.core, grid=result.grid,
+                               caps=caps)
+    result.index = index
+    if result.grid is None:
+        result.grid = index.fit_grid
+    if result.core is None:
+        result.core = index.core_arrival()
+        result.core_idx = np.flatnonzero(result.core)
+    return result
+
+
 def cluster(points, eps: float, min_pts: int, *,
-            engine: str = "auto", **opts) -> ClusterResult:
+            engine: str = "auto", return_index: bool = False,
+            **opts) -> ClusterResult:
     """Exact DBSCAN via the named engine (the production entry point).
 
     Args:
       points: [n, d] array-like.
       eps, min_pts: DBSCAN parameters (paper's eps / MinPts).
       engine: registry name, or "auto" (see :func:`resolve_auto`).
+      return_index: also build a fitted :class:`~repro.index.GritIndex`
+        (grid partition + core flags + labels, ready for ``predict`` /
+        ``insert`` / ``snapshot``) and attach it as ``result.index`` --
+        the fit-once / serve-many path, available for every engine.
       **opts: engine-specific options (e.g. ``caps=``, ``mesh=``,
         ``variant=`` -- see each engine's docstring).
 
@@ -144,4 +182,7 @@ def cluster(points, eps: float, min_pts: int, *,
     result = spec.fn(pts, float(eps), int(min_pts), **opts)
     assert result.labels.shape == (pts.shape[0],), \
         f"engine {name}: labels shape {result.labels.shape}"
+    if return_index:
+        result = _attach_index(result, np.asarray(pts, np.float64),
+                               float(eps), int(min_pts))
     return result

@@ -1,0 +1,24 @@
+"""index: the fitted ``GritIndex`` (fit once, serve point queries and
+micro-batch inserts without refitting).
+
+    from repro.engine import cluster
+    res = cluster(points, eps=3000.0, min_pts=10, return_index=True)
+    labels = res.index.predict(new_points)       # exact, no refit
+    res.index.insert(micro_batch)                # incremental splice
+    snap = res.index.snapshot()                  # flat arrays, savez-able
+
+See DESIGN.md §7 for the state layout and exactness arguments.
+"""
+
+from .grit_index import GritIndex, PredictCaps
+from .insert import insert_batch
+
+__all__ = ["GritIndex", "PredictCaps", "insert_batch", "fit_index"]
+
+
+def fit_index(points, eps: float, min_pts: int, *, engine: str = "auto",
+              **opts) -> GritIndex:
+    """Fit-and-index in one call: ``cluster(..., return_index=True).index``."""
+    from repro.engine import cluster
+    return cluster(points, eps, min_pts, engine=engine, return_index=True,
+                   **opts).index

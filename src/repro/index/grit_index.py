@@ -1,0 +1,470 @@
+"""Fitted GriT index: the persistent artifact of one clustering run.
+
+``cluster()`` engines historically burned the grid tree, core flags and
+merge structure they built and returned bare labels, so serving a second
+query cost a full refit.  ``GritIndex`` captures that fitted state --
+the lex-sorted grid identifier arrays (level tree rebuilt lazily),
+per-grid point ranges, core flags, canonical labels, eps/MinPts and the
+device caps of the fit -- and serves it (DESIGN.md §7):
+
+* :meth:`predict` labels new points *exactly* under the DBSCAN
+  assignment rule: a query is noise unless some core point lies within
+  eps, else it takes the label of the nearest core point.  Candidates
+  come from the grid tree (every core point within eps of a query lies
+  in a grid at integer offset < d from the query's cell -- the paper's
+  stencil bound -- so the tree query is a complete candidate
+  enumeration, including for queries landing in empty cells or outside
+  the fitted bounding box).  Two execution modes: ``host`` (float64
+  numpy, bit-identical to the brute oracle's distance formula) and
+  ``kernel`` (slot-batched ``row_min_batch`` -- jitted, static-shaped,
+  grown through :class:`PredictCaps` like the adaptive driver's caps).
+* :meth:`insert` splices a micro-batch into the fitted state,
+  recomputing core status and merges only in the offset-stencil of the
+  touched grids (``repro.index.insert``).
+* :meth:`snapshot` / :meth:`restore` serialize the whole fitted state
+  as a dict of flat numpy arrays (``np.savez``-able), so a fitted index
+  ships between processes without refitting.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import numpy as np
+
+from repro.core.grids import GridIndex, build_grids, group_rows
+from repro.core.grid_tree import GridTree
+from repro.core.device_dbscan import GritCaps
+from repro.engine.adaptive import _pow2_at_least
+
+_SNAPSHOT_VERSION = 1
+
+
+@dataclasses.dataclass
+class PredictCaps:
+    """Static shapes of the batched kernel predict path.
+
+    Mirrors the adaptive driver's cap discipline: power-of-two
+    quantization so similarly-shaped query batches share one jit cache
+    entry, and never silent truncation -- the host packs the slots, so
+    an overflow is *detected before* the kernel runs.  Each call packs
+    at its own batch's pow2 bucket (one historical mega-batch must not
+    inflate every later small predict); the index keeps a monotone
+    *record* of the largest shapes seen, whose growth marks fresh jit
+    keys for the serving telemetry.
+    """
+
+    group_cap: int = 0      # distinct query grids per call
+    query_cap: int = 0      # queries per grid slot
+    cand_cap: int = 0       # candidate core points per grid slot
+
+    @classmethod
+    def for_batch(cls, groups: int, queries: int, cands: int
+                  ) -> "PredictCaps":
+        return cls(group_cap=_pow2_at_least(groups, lo=8),
+                   query_cap=_pow2_at_least(queries, lo=8),
+                   cand_cap=_pow2_at_least(cands, lo=32))
+
+    def grown_to(self, other: "PredictCaps") -> Tuple["PredictCaps", bool]:
+        new = PredictCaps(
+            group_cap=max(self.group_cap, other.group_cap),
+            query_cap=max(self.query_cap, other.query_cap),
+            cand_cap=max(self.cand_cap, other.cand_cap))
+        return new, new != self
+
+
+@dataclasses.dataclass
+class GritIndex:
+    """Fitted state of one GriT-DBSCAN run, in grid-sorted order.
+
+    All per-point arrays are in *sorted* (lexicographic grid) order;
+    ``arrival`` maps a sorted row back to its arrival index (fit points
+    keep their original order 0..n_fit-1, inserted batches append).
+    Stored identifiers satisfy ``ids >= 0``; ``id_shift`` records the
+    integer translation applied when inserts extend the bounding box
+    below the fitted origin, so the identifier of any coordinate is
+    always ``floor((x - mins) / side) + id_shift`` -- the fit-time
+    formula, never re-derived from a moved origin (which could re-cell
+    points through float rounding).
+    """
+
+    points: np.ndarray        # [n, d] float64, sorted by grid id
+    arrival: np.ndarray       # [n] int64 arrival index of each sorted row
+    ids: np.ndarray           # [G, d] int64 lex-sorted non-empty grid ids
+    starts: np.ndarray        # [G] int64 first sorted row of each grid
+    counts: np.ndarray        # [G] int64 points per grid
+    core: np.ndarray          # [n] bool (sorted order)
+    labels: np.ndarray        # [n] int64 (sorted order; -1 noise)
+    eps: float
+    min_pts: int
+    side: float               # eps / sqrt(d), exactly as fit
+    mins: np.ndarray          # [d] float64 fit-time identifier origin
+    id_shift: np.ndarray      # [d] int64 (see class docstring)
+    next_label: int           # smallest unused cluster id
+    caps: Optional[GritCaps] = None   # device-fit caps (jit key reuse)
+    predict_caps: PredictCaps = dataclasses.field(default_factory=PredictCaps)
+    _tree: Optional[GridTree] = dataclasses.field(
+        default=None, repr=False, compare=False)
+    _core_csr: Optional[tuple] = dataclasses.field(
+        default=None, repr=False, compare=False)
+
+    # ------------------------------------------------------------------
+    # construction
+    # ------------------------------------------------------------------
+
+    @classmethod
+    def from_fit(cls, points, eps: float, min_pts: int, labels,
+                 core=None, grid: Optional[GridIndex] = None,
+                 caps: Optional[GritCaps] = None) -> "GritIndex":
+        """Build the index from one finished fit (arrival-order arrays).
+
+        ``grid`` reuses an engine's float64 host partition when it
+        carried one (``ClusterResult.grid``); ``core=None`` (e.g. the
+        distributed engine) triggers a grid-based core identification --
+        still O(n * stencil), never the O(n^2) oracle.
+        """
+        pts = np.asarray(points, np.float64)
+        n, d = pts.shape
+        labels = np.asarray(labels, np.int64)
+        assert labels.shape == (n,), labels.shape
+        gi = grid if isinstance(grid, GridIndex) else build_grids(pts, eps)
+        if core is None:
+            from repro.core.dbscan import _identify_cores
+            tree = GridTree.build(gi.ids)
+            indptr, nbr, _ = tree.query(gi.ids, include_self=False)
+            core = _identify_cores(pts, gi, indptr, nbr, eps, min_pts, {})
+        core = np.asarray(core, bool)
+        order = np.asarray(gi.order, np.int64)
+        return cls(
+            points=pts[order], arrival=order,
+            ids=np.asarray(gi.ids, np.int64).copy(),
+            starts=np.asarray(gi.starts, np.int64).copy(),
+            counts=np.asarray(gi.counts, np.int64).copy(),
+            core=core[order], labels=labels[order],
+            eps=float(eps), min_pts=int(min_pts), side=float(gi.side),
+            mins=np.asarray(gi.mins, np.float64).copy(),
+            id_shift=np.zeros(d, np.int64),
+            next_label=int(labels.max(initial=-1)) + 1, caps=caps)
+
+    # ------------------------------------------------------------------
+    # views
+    # ------------------------------------------------------------------
+
+    @property
+    def n(self) -> int:
+        return int(self.points.shape[0])
+
+    @property
+    def d(self) -> int:
+        return int(self.points.shape[1])
+
+    @property
+    def num_grids(self) -> int:
+        return int(self.ids.shape[0])
+
+    @property
+    def tree(self) -> GridTree:
+        if self._tree is None:
+            self._tree = GridTree.build(self.ids)
+        return self._tree
+
+    @property
+    def fit_grid(self) -> GridIndex:
+        """The current partition as a host ``GridIndex`` (arrival order).
+
+        Identifiers are returned in the canonical origin (``id_shift``
+        subtracted), so the ``GridIndex`` invariant
+        ``ids == floor((x - mins) / side)`` holds even after inserts
+        extended the bounding box; a uniform integer shift preserves
+        the lexicographic order, so the CSR layout is unchanged.
+        """
+        point_grid = np.empty(self.n, np.int64)
+        point_grid[self.arrival] = np.repeat(
+            np.arange(self.num_grids, dtype=np.int64), self.counts)
+        ids = self.ids - self.id_shift[None, :]
+        return GridIndex(order=self.arrival.copy(), ids=ids,
+                         starts=self.starts.copy(), counts=self.counts.copy(),
+                         point_grid=point_grid, side=self.side,
+                         mins=self.mins.copy(),
+                         eta=int(ids.max(initial=0)))
+
+    def labels_arrival(self) -> np.ndarray:
+        """Labels in arrival order (fit points first, inserts appended)."""
+        out = np.empty(self.n, np.int64)
+        out[self.arrival] = self.labels
+        return out
+
+    def core_arrival(self) -> np.ndarray:
+        out = np.empty(self.n, bool)
+        out[self.arrival] = self.core
+        return out
+
+    def invalidate(self) -> None:
+        """Drop derived caches after a structural mutation (insert)."""
+        self._tree = None
+        self._core_csr = None
+
+    # ------------------------------------------------------------------
+    # identifiers + candidate enumeration
+    # ------------------------------------------------------------------
+
+    def query_ids(self, points: np.ndarray) -> np.ndarray:
+        """Grid identifiers of arbitrary coordinates (may be negative or
+        beyond the fitted range -- the tree query handles both)."""
+        q = np.asarray(points, np.float64)
+        return (np.floor((q - self.mins[None, :]) / self.side)
+                .astype(np.int64) + self.id_shift[None, :])
+
+    def _core_ranges(self):
+        """Per-grid core-point rows: (core_rows [k], cstarts [G],
+        ccounts [G]) -- core rows are ascending, hence grouped by grid."""
+        if self._core_csr is None:
+            core_rows = np.flatnonzero(self.core)
+            cstarts = np.searchsorted(core_rows, self.starts)
+            cends = np.searchsorted(core_rows, self.starts + self.counts)
+            self._core_csr = (core_rows, cstarts, cends - cstarts)
+        return self._core_csr
+
+    def grid_core_rows(self, g: int) -> np.ndarray:
+        """Sorted-order rows of grid ``g``'s core points."""
+        core_rows, cstarts, ccounts = self._core_ranges()
+        return core_rows[cstarts[g]:cstarts[g] + ccounts[g]]
+
+    def _candidate_cores(self, q_ids: np.ndarray):
+        """Core-point candidates for each query identifier.
+
+        Returns ``(rows, q_of)``: candidate sorted-order rows and the
+        query each belongs to.  Complete by the stencil bound (module
+        docstring); queries in empty cells simply contribute the cores
+        of their non-empty stencil neighbors (possibly none).
+        """
+        indptr, grids, _ = self.tree.query(q_ids, include_self=True)
+        core_rows, cstarts, ccounts = self._core_ranges()
+        per = ccounts[grids]                                   # [E]
+        total = int(per.sum())
+        base = np.repeat(np.cumsum(per) - per, per)            # [T]
+        pos = np.arange(total, dtype=np.int64) - base
+        rows = core_rows[np.repeat(cstarts[grids], per) + pos]
+        q_of_entry = np.repeat(np.arange(len(q_ids), dtype=np.int64),
+                               np.diff(indptr))
+        q_of = np.repeat(q_of_entry, per)
+        return rows, q_of
+
+    # ------------------------------------------------------------------
+    # predict
+    # ------------------------------------------------------------------
+
+    def predict(self, queries, *, mode: str = "auto", chunk: int = 2048,
+                stats: Optional[dict] = None) -> np.ndarray:
+        """Label new points under the DBSCAN assignment rule (exact).
+
+        Args:
+          queries: [m, d] array-like; any coordinates (empty cells,
+            outside the fitted bounding box, ... all fine).
+          mode: "host" (float64 numpy -- bit-identical to the brute
+            oracle), "kernel" (slot-batched jitted ``row_min_batch``,
+            float32 with per-grid re-centering), or "auto" (kernel on
+            accelerators, host on CPU).
+          chunk: host-mode query chunk (memory bound).
+          stats: optional dict filled with execution counters
+            (mode, candidate totals, kernel cap growth).
+
+        Returns [m] int64 labels; -1 noise.  Never mutates the fitted
+        state; kernel mode may grow ``predict_caps`` (monotone -- the
+        jit-shape memory), so concurrent kernel predicts on one shared
+        index need external serialization.
+        """
+        q = np.asarray(queries, np.float64)
+        if q.ndim != 2 or q.shape[1] != self.d:
+            raise ValueError(
+                f"queries must be [m, {self.d}], got {q.shape}")
+        if q.shape[0] == 0:
+            return np.empty(0, np.int64)
+        if not np.isfinite(q).all():
+            raise ValueError("queries contain non-finite coordinates")
+        if mode == "auto":
+            import jax
+            mode = "host" if jax.default_backend() == "cpu" else "kernel"
+        if stats is not None:
+            stats["mode"] = mode
+            stats["n_queries"] = int(q.shape[0])
+        if mode == "host":
+            return self._predict_host(q, chunk, stats)
+        if mode == "kernel":
+            return self._predict_kernel(q, stats)
+        raise ValueError(f"unknown predict mode {mode!r}")
+
+    def _predict_host(self, q: np.ndarray, chunk: int,
+                      stats: Optional[dict]) -> np.ndarray:
+        eps2 = self.eps * self.eps
+        m = q.shape[0]
+        out = np.full(m, -1, np.int64)
+        q_ids = self.query_ids(q)
+        n_cand = 0
+        for s in range(0, m, chunk):
+            nq = min(chunk, m - s)
+            rows, q_of = self._candidate_cores(q_ids[s:s + chunk])
+            n_cand += len(rows)
+            if len(rows) == 0:
+                continue
+            d2 = ((self.points[rows] - q[s + q_of]) ** 2).sum(axis=1)
+            # nearest candidate per query; ``q_of`` is nondecreasing by
+            # construction, so a segmented reduce beats a global sort
+            cnt = np.bincount(q_of, minlength=nq)
+            ne = cnt > 0
+            seg = (np.cumsum(cnt) - cnt)[ne]
+            dmin = np.minimum.reduceat(d2, seg)
+            # argmin = first candidate matching its segment's minimum
+            is_min = d2 == np.repeat(dmin, cnt[ne])
+            pos = np.flatnonzero(is_min)
+            qpos, first = np.unique(q_of[pos], return_index=True)
+            best = pos[first]
+            hit = d2[best] <= eps2
+            out[s + qpos[hit]] = self.labels[rows[best[hit]]]
+        if stats is not None:
+            stats["candidates"] = n_cand
+        return out
+
+    def _predict_kernel(self, q: np.ndarray,
+                        stats: Optional[dict]) -> np.ndarray:
+        """Slot-batched predict: queries grouped by grid cell, one
+        ``row_min_batch`` call per (group_cap, query_cap, cand_cap) jit
+        key.  Both operands are re-centered on the group's cell origin
+        so the float32 contraction runs on stencil-scale coordinates
+        (same policy as the device pipeline's kernel plane)."""
+        import jax.numpy as jnp
+        from repro.kernels import ops as kernel_ops
+
+        eps2 = np.float32(self.eps) ** 2
+        m = q.shape[0]
+        q_ids = self.query_ids(q)
+        # group queries sharing a cell: they share the candidate set
+        qorder, sq, gstart, gcount, _ = group_rows(q_ids)
+        B = len(gstart)
+        rep_ids = sq[gstart]
+        rows, g_of = self._candidate_cores(rep_ids)
+        cand_per = np.zeros(B, np.int64)
+        np.add.at(cand_per, g_of, 1)
+        pc = PredictCaps.for_batch(B, int(gcount.max()),
+                                   int(cand_per.max(initial=1)))
+        self.predict_caps, grew = self.predict_caps.grown_to(pc)
+        if stats is not None:
+            stats.update(groups=B, candidates=int(len(rows)),
+                         caps=dataclasses.asdict(pc), caps_grew=grew)
+
+        a = np.zeros((pc.group_cap, pc.query_cap, self.d), np.float64)
+        b = np.zeros((pc.group_cap, pc.cand_cap, self.d), np.float64)
+        vb = np.zeros((pc.group_cap, pc.cand_cap), bool)
+        brow = np.zeros((pc.group_cap, pc.cand_cap), np.int64)
+        # scatter queries into their group's slot row (same flat-offset
+        # pattern as the candidate scatter below)
+        qgroup = np.repeat(np.arange(B, dtype=np.int64), gcount)
+        qslot = np.arange(m, dtype=np.int64) - np.repeat(gstart, gcount)
+        a[qgroup, qslot] = q[qorder]
+        qslot_of = np.empty(m, np.int64)      # flat slot of each query
+        qslot_of[qorder] = qgroup * pc.query_cap + qslot
+        cbase = np.cumsum(cand_per) - cand_per
+        slot = np.arange(len(rows)) - np.repeat(cbase, cand_per)
+        b[g_of, slot] = self.points[rows]
+        vb[g_of, slot] = True
+        brow[g_of, slot] = rows
+        # re-center on each group's cell origin (float64 subtract, then
+        # cast -- stencil-scale coordinates for the f32 kernel)
+        anchor = (self.mins[None, :]
+                  + (rep_ids - self.id_shift[None, :]) * self.side)
+        anchor = np.concatenate(
+            [anchor, np.zeros((pc.group_cap - B, self.d))])[:, None, :]
+        dmin, argi = kernel_ops.row_min_batch(
+            jnp.asarray(a - anchor, jnp.float32),
+            jnp.asarray(b - anchor, jnp.float32),
+            valid_b=jnp.asarray(vb))
+        dmin = np.asarray(dmin).reshape(-1)
+        argi = np.asarray(argi).reshape(-1)
+        out = np.full(m, -1, np.int64)
+        dq = dmin[qslot_of]
+        aq = argi[qslot_of]
+        hit = (dq <= eps2) & (aq >= 0)
+        gq = qslot_of // pc.query_cap
+        out[hit] = self.labels[brow[gq[hit], aq[hit]]]
+        return out
+
+    # ------------------------------------------------------------------
+    # insert
+    # ------------------------------------------------------------------
+
+    def insert(self, points) -> Dict[str, Any]:
+        """Micro-batch incremental update (``repro.index.insert``)."""
+        from .insert import insert_batch
+        return insert_batch(self, points)
+
+    # ------------------------------------------------------------------
+    # snapshot / restore
+    # ------------------------------------------------------------------
+
+    def snapshot(self) -> Dict[str, np.ndarray]:
+        """Flat-array serialization of the whole fitted state.
+
+        Every value is a numpy array (``np.savez(path, **snap)`` works
+        directly); scalars are packed into small arrays.  Derived
+        structures (level tree, core CSR, predict caps) are rebuilt on
+        :meth:`restore`, not shipped.
+        """
+        caps = np.zeros(0, np.int64)
+        if self.caps is not None:
+            f = dataclasses.asdict(self.caps)
+            caps = np.asarray(
+                [f["grid_cap"], f["frontier_cap"], f["k_cap"], f["c_cap"],
+                 f["m_cap"], f["pair_cap"], f["grid_block"],
+                 f["pair_block"], f["merge_iters"],
+                 int(f["use_kernels"])], np.int64)
+        return {
+            "version": np.asarray([_SNAPSHOT_VERSION], np.int64),
+            "points": self.points, "arrival": self.arrival,
+            "ids": self.ids, "starts": self.starts, "counts": self.counts,
+            "core": self.core, "labels": self.labels,
+            "mins": self.mins, "id_shift": self.id_shift,
+            "scalars_f": np.asarray([self.eps, self.side], np.float64),
+            "scalars_i": np.asarray([self.min_pts, self.next_label],
+                                    np.int64),
+            "caps": caps,
+        }
+
+    @classmethod
+    def restore(cls, snap: Dict[str, np.ndarray]) -> "GritIndex":
+        """Rebuild a fitted index from :meth:`snapshot` output (accepts
+        an ``np.load`` mapping of a saved ``.npz`` as well)."""
+        version = int(np.asarray(snap["version"])[0])
+        if version != _SNAPSHOT_VERSION:
+            raise ValueError(
+                f"snapshot version {version} != {_SNAPSHOT_VERSION}")
+        caps_arr = np.asarray(snap["caps"])
+        caps = None
+        if caps_arr.size:
+            v = [int(x) for x in caps_arr]
+            caps = GritCaps(grid_cap=v[0], frontier_cap=v[1], k_cap=v[2],
+                            c_cap=v[3], m_cap=v[4], pair_cap=v[5],
+                            grid_block=v[6], pair_block=v[7],
+                            merge_iters=v[8], use_kernels=bool(v[9]))
+        sf = np.asarray(snap["scalars_f"], np.float64)
+        si = np.asarray(snap["scalars_i"], np.int64)
+        return cls(
+            points=np.asarray(snap["points"], np.float64),
+            arrival=np.asarray(snap["arrival"], np.int64),
+            ids=np.asarray(snap["ids"], np.int64),
+            starts=np.asarray(snap["starts"], np.int64),
+            counts=np.asarray(snap["counts"], np.int64),
+            core=np.asarray(snap["core"], bool),
+            labels=np.asarray(snap["labels"], np.int64),
+            eps=float(sf[0]), min_pts=int(si[0]), side=float(sf[1]),
+            mins=np.asarray(snap["mins"], np.float64),
+            id_shift=np.asarray(snap["id_shift"], np.int64),
+            next_label=int(si[1]), caps=caps)
+
+    def save(self, path) -> None:
+        np.savez(path, **self.snapshot())
+
+    @classmethod
+    def load(cls, path) -> "GritIndex":
+        with np.load(path) as data:
+            return cls.restore({k: data[k] for k in data.files})

@@ -1,0 +1,15 @@
+"""serve: online clustering traffic against a fitted ``GritIndex``.
+
+    from repro.serve import ClusterServer
+    srv = ClusterServer(index, slots=8)
+    rid = srv.submit(query_points)          # ragged request
+    done = srv.step()                       # one batched predict step
+    print(srv.summary())
+
+See ``repro.serve.driver`` for the continuous-batching loop and
+``python -m repro.serve.driver --smoke`` for a miniature server run.
+"""
+
+from .driver import ClusterRequest, ClusterServer
+
+__all__ = ["ClusterRequest", "ClusterServer"]

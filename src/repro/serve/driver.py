@@ -1,0 +1,215 @@
+"""Serving driver: continuous batching for clustering traffic.
+
+The LM serving loop (``repro.launch.serve``) left-pads ragged prompts
+into batch slots, runs one jitted program per step, and swaps finished
+sequences out; this driver applies the same discipline to point-query
+traffic against a fitted :class:`~repro.index.GritIndex`:
+
+* requests arrive as *ragged* [m_i, d] query batches and are admitted
+  into ``slots`` request slots of ``query_cap`` queries each -- the
+  step's admission budget (slot occupancy is reported per step);
+* each step concatenates the admitted requests and runs one batched
+  :meth:`GritIndex.predict` over them, then retires every slot (point
+  queries finish in one step, so continuous batching reduces to
+  refilling all slots from the queue).  The *jit-facing* fixed shapes
+  live inside the index (`PredictCaps` slot packing), not here;
+* caps grow, never shrink: an oversized request bumps the admission
+  shape ``query_cap`` to the next power of two (the adaptive driver's
+  quantization, shared via ``_pow2_at_least``), and the kernel path's
+  :class:`PredictCaps` grow the same way inside the index.  Every
+  growth event is recorded; the ``predict_caps`` events are the ones
+  that correspond to re-jits (the jit key is the PredictCaps shape),
+  while ``query_cap`` events record when traffic outgrew the admission
+  tensor;
+* per-request latency (submit -> labels) and per-step occupancy are
+  recorded for the summary (p50/p95 latency, throughput).
+
+``python -m repro.serve.driver --smoke`` runs a miniature server on a
+catalogue scenario: fit, then serve a stream of ragged query batches.
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+from collections import deque
+from typing import Any, Deque, Dict, List, Optional
+
+import numpy as np
+
+from repro.engine.adaptive import _pow2_at_least
+
+
+@dataclasses.dataclass
+class ClusterRequest:
+    """One in-flight query batch."""
+
+    rid: int
+    points: np.ndarray                    # [m, d] ragged
+    t_submit: float
+    labels: Optional[np.ndarray] = None   # [m] int64 once served
+    t_done: float = 0.0
+
+    @property
+    def latency_ms(self) -> float:
+        return (self.t_done - self.t_submit) * 1e3
+
+
+class ClusterServer:
+    """Continuous-batching predict server over a fitted index."""
+
+    def __init__(self, index, *, slots: int = 4, query_cap: int = 64,
+                 mode: str = "auto"):
+        self.index = index
+        self.slots = int(slots)
+        self.query_cap = _pow2_at_least(query_cap, lo=8)
+        self.mode = mode
+        self.pending: Deque[ClusterRequest] = deque()
+        self.done: List[ClusterRequest] = []
+        self.growth_events: List[Dict[str, Any]] = []
+        self.step_log: List[Dict[str, Any]] = []
+        self._next_rid = 0
+
+    # ------------------------------------------------------------------
+
+    def submit(self, points) -> int:
+        """Enqueue one ragged query batch; returns its request id.
+
+        Validation happens *here*, at admission: a malformed request is
+        rejected before it can join a batch, so it can never poison the
+        co-batched requests of a serving step.
+        """
+        pts = np.asarray(points, np.float64)
+        if pts.ndim != 2 or pts.shape[1] != self.index.d:
+            raise ValueError(
+                f"request must be [m, {self.index.d}], got {pts.shape}")
+        if not np.isfinite(pts).all():
+            raise ValueError("request contains non-finite coordinates")
+        req = ClusterRequest(rid=self._next_rid, points=pts,
+                             t_submit=time.perf_counter())
+        self._next_rid += 1
+        self.pending.append(req)
+        return req.rid
+
+    def step(self) -> List[ClusterRequest]:
+        """Serve one batch: fill up to ``slots`` slots, one predict call.
+
+        Returns the requests finished this step (empty when idle).
+        """
+        active: List[ClusterRequest] = []
+        while self.pending and len(active) < self.slots:
+            active.append(self.pending.popleft())
+        if not active:
+            return []
+        need = max(len(r.points) for r in active)
+        if need > self.query_cap:
+            grown = _pow2_at_least(need, lo=8)
+            self.growth_events.append(
+                {"step": len(self.step_log), "cap": "query_cap",
+                 "was": self.query_cap, "now": grown})
+            self.query_cap = grown
+
+        flat = np.concatenate([r.points for r in active])
+        pstats: Dict[str, Any] = {}
+        t0 = time.perf_counter()
+        flat_labels = self.index.predict(flat, mode=self.mode,
+                                         stats=pstats)
+        t_step = time.perf_counter() - t0
+        if pstats.get("caps_grew"):
+            self.growth_events.append(
+                {"step": len(self.step_log), "cap": "predict_caps",
+                 "now": pstats.get("caps")})
+
+        off = 0
+        now = time.perf_counter()
+        for r in active:
+            m = len(r.points)
+            r.labels = flat_labels[off:off + m]
+            off += m
+            r.t_done = now
+            self.done.append(r)
+        self.step_log.append(
+            {"requests": len(active), "queries": len(flat),
+             "slot_fill": len(flat) / (self.slots * self.query_cap),
+             "seconds": t_step, "predict": pstats})
+        return active
+
+    def run(self) -> List[ClusterRequest]:
+        """Drain the queue; returns every request served."""
+        out: List[ClusterRequest] = []
+        while self.pending:
+            out.extend(self.step())
+        return out
+
+    # ------------------------------------------------------------------
+
+    def summary(self) -> Dict[str, Any]:
+        lat = np.asarray([r.latency_ms for r in self.done], np.float64)
+        served_s = sum(s["seconds"] for s in self.step_log)
+        queries = sum(s["queries"] for s in self.step_log)
+        return {
+            "requests": len(self.done),
+            "queries": queries,
+            "steps": len(self.step_log),
+            "latency_ms_p50": float(np.percentile(lat, 50)) if len(lat) else 0.0,
+            "latency_ms_p95": float(np.percentile(lat, 95)) if len(lat) else 0.0,
+            "latency_ms_mean": float(lat.mean()) if len(lat) else 0.0,
+            "queries_per_s": queries / served_s if served_s else 0.0,
+            "mean_slot_fill": float(np.mean(
+                [s["slot_fill"] for s in self.step_log])) if self.step_log
+            else 0.0,
+            "query_cap": self.query_cap,
+            "growth_events": list(self.growth_events),
+        }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--scenario", default="blobs-2d")
+    ap.add_argument("--engine", default="grit")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny request stream (CI-scale)")
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--num-requests", type=int, default=24)
+    ap.add_argument("--max-queries", type=int, default=96)
+    ap.add_argument("--mode", default="auto",
+                    choices=("auto", "host", "kernel"))
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    from repro.data.scenarios import get_scenario
+    from repro.engine import cluster
+
+    sc = get_scenario(args.scenario)
+    pts = sc.points(seed=args.seed)
+    print(f"fitting {args.scenario} (n={len(pts)}, eps={sc.eps}, "
+          f"min_pts={sc.min_pts}) with engine={args.engine}...")
+    t0 = time.perf_counter()
+    res = cluster(pts, sc.eps, sc.min_pts, engine=args.engine,
+                  return_index=True)
+    print(f"  fit {time.perf_counter() - t0:.2f}s: "
+          f"{res.n_clusters} clusters, {res.index.num_grids} grids")
+
+    rng = np.random.default_rng(args.seed)
+    n_req = 6 if args.smoke else args.num_requests
+    srv = ClusterServer(res.index, slots=args.slots, mode=args.mode)
+    for _ in range(n_req):
+        m = int(rng.integers(4, args.max_queries + 1))
+        near = pts[rng.integers(0, len(pts), m)] + rng.normal(
+            scale=sc.eps * 0.25, size=(m, sc.d))
+        srv.submit(near)
+    srv.run()
+    s = srv.summary()
+    print(f"served {s['requests']} requests / {s['queries']} queries in "
+          f"{s['steps']} steps ({s['queries_per_s']:.0f} q/s)")
+    print(f"  latency p50 {s['latency_ms_p50']:.2f}ms  "
+          f"p95 {s['latency_ms_p95']:.2f}ms  "
+          f"slot fill {s['mean_slot_fill']:.2f}  "
+          f"cap growth events: {len(s['growth_events'])}")
+    noise = sum(int((r.labels < 0).sum()) for r in srv.done)
+    print(f"  noise rate {noise / max(s['queries'], 1):.2f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -134,6 +134,36 @@ def test_auto_resolves_to_registered_engine():
     assert r.engine in available_engines()
 
 
+def test_auto_dispatch_per_platform(monkeypatch):
+    """resolve_auto's full decision table, platform-monkeypatched:
+    multi-device -> distributed, TPU -> device-kernels, other
+    accelerator -> device, CPU -> grit (DESIGN.md §3)."""
+    from repro.engine import resolve_auto
+
+    monkeypatch.setattr(jax, "device_count", lambda: 4)
+    monkeypatch.setattr(jax, "default_backend", lambda: "tpu")
+    assert resolve_auto() == "distributed"
+
+    monkeypatch.setattr(jax, "device_count", lambda: 1)
+    assert resolve_auto() == "device-kernels"
+
+    monkeypatch.setattr(jax, "default_backend", lambda: "gpu")
+    assert resolve_auto() == "device"
+
+    monkeypatch.setattr(jax, "default_backend", lambda: "cpu")
+    assert resolve_auto() == "grit"
+
+
+def test_auto_dispatch_reaches_the_engine(monkeypatch):
+    """The resolved name must be the engine that actually runs (and its
+    result must carry that engine's name)."""
+    monkeypatch.setattr(jax, "device_count", lambda: 1)
+    monkeypatch.setattr(jax, "default_backend", lambda: "cpu")
+    r = cluster(np.random.default_rng(0).uniform(0, 100, (32, 2)), 5.0, 3,
+                engine="auto")
+    assert r.engine == "grit"
+
+
 # --------------------------------------------------------------------------
 # host engines: full scenario matrix
 # --------------------------------------------------------------------------
@@ -170,6 +200,28 @@ def test_device_engine_conformance_quick(name, engine, oracle_cache):
 @pytest.mark.parametrize("name", NOT_QUICK)
 def test_device_engine_conformance_full(name, engine, oracle_cache):
     _conform(name, engine, oracle_cache)
+
+
+def test_device_result_point_grid_is_consistent(oracle_cache):
+    """The device result's original-order ``point_grid`` provenance:
+    every group of points mapped to one grid row must lie within the
+    grid diagonal (side * sqrt(d) == eps), rows must be in range, and
+    the partition must cover all n points."""
+    pts, _, _ = _oracle("blobs-2d", oracle_cache)
+    sc = SCENARIOS["blobs-2d"]
+    from repro.engine import estimate_caps
+    caps = estimate_caps(pts, sc.eps, sc.min_pts)
+    res = device_dbscan(jnp.asarray(pts, jnp.float32), sc.eps,
+                        sc.min_pts, caps)
+    pg = np.asarray(res.point_grid)
+    assert pg.shape == (len(pts),)
+    assert (pg >= 0).all() and (pg < caps.grid_cap).all()
+    for g in np.unique(pg):
+        own = pts[pg == g]
+        if len(own) > 1:
+            d2 = ((own[:, None, :] - own[None, :, :]) ** 2).sum(-1)
+            assert d2.max() <= (sc.eps * (1 + 1e-5)) ** 2, \
+                f"grid {g} spans more than the grid diagonal"
 
 
 def test_kernelized_caps_share_overflow_machinery(oracle_cache):

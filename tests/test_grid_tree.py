@@ -122,6 +122,57 @@ def test_device_table_matches_host_seeded(seed, make_rng):
     _check_device_table_matches_host(ids)
 
 
+# ---- include_self semantics (serving predict path) ------------------------
+
+def test_include_self_drops_only_exact_match():
+    """include_self=False removes the query's own grid and nothing
+    else: distinct grids at grid-distance 0 (adjacent cells, offset 0)
+    stay in the result."""
+    ids = np.array([[0, 0], [0, 1], [1, 1], [5, 5]], np.int64)
+    tree = GridTree.build(ids)
+    ip_t, nb_t, off_t = tree.query(ids, include_self=True)
+    ip_f, nb_f, off_f = tree.query(ids, include_self=False)
+    sets_t = _csr_to_sets(ip_t, nb_t)
+    sets_f = _csr_to_sets(ip_f, nb_f)
+    for g in range(len(ids)):
+        assert g in sets_t[g], "include_self=True must return the query"
+        assert g not in sets_f[g]
+        assert sets_t[g] - {g} == sets_f[g]
+    # adjacent cells (0,0)-(0,1) are offset 0 yet distinct: kept
+    assert 1 in sets_f[0] and 0 in sets_f[1]
+    # offsets of the self matches are 0 and must not drag neighbors out
+    assert all((off_f >= 0).tolist())
+
+
+@pytest.mark.parametrize("seed", range(6))
+def test_include_self_matches_stencil_both_ways(seed, make_rng):
+    ids = _random_ids(make_rng(300 + seed))
+    tree = GridTree.build(ids)
+    for include_self in (True, False):
+        ip_t, nb_t, _ = tree.query(ids, include_self=include_self)
+        ip_s, nb_s, _ = stencil_neighbors(ids, ids,
+                                          include_self=include_self)
+        assert _csr_to_sets(ip_t, nb_t) == _csr_to_sets(ip_s, nb_s)
+
+
+@pytest.mark.parametrize("seed", range(4))
+def test_external_queries_match_stencil(seed, make_rng):
+    """Queries that are not grids of the tree -- empty cells, cells
+    outside the stored range, negative components (the predict path for
+    new points) -- must return exactly the stencil baseline's answer."""
+    rng = make_rng(400 + seed)
+    ids = _random_ids(rng)
+    d = ids.shape[1]
+    queries = np.concatenate([
+        rng.integers(-3, 15, size=(24, d)),          # arbitrary cells
+        ids[:4] + rng.integers(-1, 2, size=(min(4, len(ids)), d))[:4],
+    ])
+    tree = GridTree.build(ids)
+    ip_t, nb_t, _ = tree.query(queries, include_self=True)
+    ip_s, nb_s, _ = stencil_neighbors(ids, queries, include_self=True)
+    assert _csr_to_sets(ip_t, nb_t) == _csr_to_sets(ip_s, nb_s)
+
+
 # ---- non-property tests ---------------------------------------------------
 
 def test_stencil_size_matches_paper_bound():

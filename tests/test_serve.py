@@ -1,0 +1,120 @@
+"""Serving-plane tests: the continuous-batching driver must return
+exactly what a direct ``GritIndex.predict`` returns for every ragged
+request, record per-request latency, and grow its caps (never truncate)
+when traffic exceeds them.
+"""
+
+import numpy as np
+import pytest
+
+from repro.data.scenarios import get_serving_scenario
+from repro.engine import cluster
+from repro.serve import ClusterServer
+
+
+@pytest.fixture(scope="module")
+def served_index():
+    ss = get_serving_scenario("query-heavy-3d")
+    pts = ss.fit_points()
+    res = cluster(pts, ss.base.eps, ss.base.min_pts, engine="grit",
+                  return_index=True)
+    return ss, res.index
+
+
+def _ragged_requests(ss, seed, sizes):
+    rng = np.random.default_rng(seed)
+    q = ss.query_batch(seed=seed, n=int(sum(sizes)))
+    out, off = [], 0
+    for m in sizes:
+        out.append(q[off:off + m])
+        off += m
+    return out
+
+
+def test_server_labels_match_direct_predict(served_index):
+    ss, idx = served_index
+    reqs = _ragged_requests(ss, 0, [7, 31, 2, 18, 25, 13])
+    srv = ClusterServer(idx, slots=4, mode="host")
+    rids = [srv.submit(r) for r in reqs]
+    done = srv.run()
+    assert sorted(r.rid for r in done) == rids
+    for r, pts in zip(sorted(done, key=lambda r: r.rid), reqs):
+        np.testing.assert_array_equal(r.labels,
+                                      idx.predict(pts, mode="host"))
+        assert r.latency_ms >= 0.0
+
+
+def test_server_batches_into_slots(served_index):
+    ss, idx = served_index
+    srv = ClusterServer(idx, slots=3, mode="host")
+    for r in _ragged_requests(ss, 1, [5] * 7):
+        srv.submit(r)
+    srv.run()
+    # 7 requests over 3 slots -> ceil(7/3) = 3 steps
+    assert len(srv.step_log) == 3
+    assert [s["requests"] for s in srv.step_log] == [3, 3, 1]
+    assert all(s["queries"] == s["requests"] * 5 for s in srv.step_log)
+
+
+def test_server_grows_query_cap_on_oversized_request(served_index):
+    ss, idx = served_index
+    srv = ClusterServer(idx, slots=2, query_cap=8, mode="host")
+    big = _ragged_requests(ss, 2, [50])[0]
+    srv.submit(big)
+    (done,) = srv.step()
+    assert len(done.labels) == 50
+    assert srv.query_cap >= 50
+    growth = [e for e in srv.growth_events if e["cap"] == "query_cap"]
+    assert growth and growth[0]["was"] == 8
+    # caps never shrink: a later small request keeps the grown cap
+    srv.submit(_ragged_requests(ss, 3, [4])[0])
+    srv.step()
+    assert srv.query_cap == growth[0]["now"]
+
+
+def test_server_kernel_mode_records_predict_caps(served_index):
+    ss, idx = served_index
+    srv = ClusterServer(idx, slots=2, mode="kernel")
+    for r in _ragged_requests(ss, 4, [12, 20]):
+        srv.submit(r)
+    srv.run()
+    assert all(s["predict"]["mode"] == "kernel" for s in srv.step_log)
+
+
+def test_server_summary_stats(served_index):
+    ss, idx = served_index
+    srv = ClusterServer(idx, slots=4, mode="host")
+    for r in _ragged_requests(ss, 5, [10, 10, 10, 10]):
+        srv.submit(r)
+    srv.run()
+    s = srv.summary()
+    assert s["requests"] == 4 and s["queries"] == 40
+    assert s["steps"] == 1
+    assert s["latency_ms_p95"] >= s["latency_ms_p50"] > 0
+    assert s["queries_per_s"] > 0
+    assert 0 < s["mean_slot_fill"] <= 1
+
+
+def test_server_rejects_bad_request_at_admission(served_index):
+    """Malformed requests must be rejected in submit(), before they can
+    join a batch -- a NaN request must never poison co-batched ones."""
+    ss, idx = served_index
+    srv = ClusterServer(idx, mode="host")
+    with pytest.raises(ValueError, match="request must be"):
+        srv.submit(np.zeros((4, idx.d + 1)))
+    good = _ragged_requests(ss, 6, [9])[0]
+    srv.submit(good)
+    bad = np.zeros((4, idx.d))
+    bad[2, 0] = np.nan
+    with pytest.raises(ValueError, match="non-finite"):
+        srv.submit(bad)
+    (done,) = srv.run()              # the good request still serves
+    np.testing.assert_array_equal(done.labels,
+                                  idx.predict(good, mode="host"))
+
+
+def test_server_idle_step_is_noop(served_index):
+    _, idx = served_index
+    srv = ClusterServer(idx)
+    assert srv.step() == []
+    assert srv.step_log == []
