@@ -1,0 +1,134 @@
+"""Distributed serving-plane benchmark: sharded predict/insert vs the
+distributed-refit baseline (the BENCH_4.json perf-trajectory artifact).
+
+The sharded index exists so that serving a query batch against a
+*distributed* fit does NOT cost a mesh-wide refit; this bench
+quantifies exactly that:
+
+* ``fit``            -- one distributed SPMD fit (adaptive caps) +
+                        the host-side shard build (``fit_sharded``).
+* ``predict_batch``  -- warm latency of one slab-routed batched
+                        predict against the sharded index (the
+                        distributed serving hot path; queries bucketed
+                        by owning slab, cut-band queries consulting
+                        both neighbors).
+* ``refit_baseline`` -- what the same query batch costs without the
+                        index: a full distributed ``cluster()`` over
+                        fit ∪ batch (the only exact alternative).
+* ``insert_batch``   -- micro-batch incremental insert latency
+                        (touched shards + edge re-reconciliation).
+* ``snapshot``       -- serialized size of the whole sharded state.
+
+The headline check -- sharded predict >= 10x faster than a distributed
+refit per query batch -- gates the run.  Needs a multi-device mesh
+(``benchmarks/run.py --distributed`` forces host devices before jax
+imports when the platform has only one).
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+import numpy as np
+
+
+def _query_mix(rng: np.random.Generator, base: np.ndarray, eps: float,
+               cuts: np.ndarray, n: int) -> np.ndarray:
+    """Serving-shaped queries: mostly on-cluster, some far-field, and a
+    slab-band slice pinned to the cut coordinates (the routing path a
+    single-host bench never exercises)."""
+    d = base.shape[1]
+    n_near = int(0.6 * n)
+    n_band = int(0.25 * n) if len(cuts) else 0
+    n_far = n - n_near - n_band
+    near = base[rng.integers(0, len(base), n_near)] + rng.normal(
+        scale=0.3 * eps, size=(n_near, d))
+    far = rng.uniform(base.min() - 5 * eps, base.max() + 5 * eps,
+                      size=(n_far, d))
+    parts = [near, far]
+    if n_band:
+        band = base[rng.integers(0, len(base), n_band)].copy()
+        band[:, 0] = (cuts[rng.integers(0, len(cuts), n_band)]
+                      + rng.uniform(-2.0, 2.0, n_band) * eps)
+        parts.append(band)
+    return np.concatenate(parts)
+
+
+def bench_dist_serve(n: int = 50_000, scenario: str = "blobs-2d",
+                     q_batch: int = 2048, insert_m: int = 256,
+                     insert_steps: int = 3, reps: int = 3,
+                     seed: int = 0) -> List[Dict]:
+    """Rows for the distributed serve bench (see module docstring)."""
+    import jax
+    from repro.data.scenarios import get_scenario
+    from repro.engine import cluster
+    from repro.index import ShardedGritIndex, fit_sharded
+
+    mesh = jax.make_mesh((jax.device_count(),), ("shard",))
+    n_shards = int(mesh.devices.size)
+    sc = get_scenario(scenario)
+    # same occupancy-preserving eps rescale as bench_distance_plane
+    eps = sc.eps * (sc.n / n) ** (1.0 / sc.d)
+    pts = sc.points(n=n)
+    rng = np.random.default_rng(seed)
+    rows: List[Dict] = []
+
+    t0 = time.perf_counter()
+    sidx = fit_sharded(pts, eps, sc.min_pts, mesh=mesh)
+    t_fit = time.perf_counter() - t0
+    rows.append(dict(bench="dist_serve", op="fit", scenario=scenario,
+                     n=n, d=sc.d, n_shards=n_shards,
+                     seconds=round(t_fit, 4),
+                     shards=sidx.num_shards, grids=sidx.num_grids))
+
+    q = _query_mix(rng, pts, eps, sidx.cuts, q_batch)
+    stats: Dict = {}
+    sidx.predict(q, mode="host", stats=stats)          # warm
+    t_pred = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        labels = sidx.predict(q, mode="host")
+        t_pred = min(t_pred, time.perf_counter() - t0)
+
+    # baseline: serving the same batch without the index is a full
+    # distributed cluster() over fit ∪ batch
+    union = np.concatenate([pts, q])
+    t0 = time.perf_counter()
+    base_res = cluster(union, eps, sc.min_pts, engine="distributed",
+                       mesh=mesh)
+    t_refit = time.perf_counter() - t0
+    agree = float(np.mean((labels >= 0) == (base_res.labels[n:] >= 0)))
+    rows.append(dict(bench="dist_serve", op="predict_batch",
+                     scenario=scenario, n=n, d=sc.d, n_shards=n_shards,
+                     q=q_batch, seconds=round(t_pred, 5),
+                     queries_per_s=round(q_batch / t_pred, 1),
+                     multi_routed=int(stats.get("multi_routed", 0)),
+                     noise=int((labels < 0).sum()),
+                     border_noise_agreement_vs_refit=round(agree, 4),
+                     speedup_vs_refit=round(t_refit / t_pred, 1)))
+    rows.append(dict(bench="dist_serve", op="refit_baseline",
+                     scenario=scenario, n=n + q_batch, d=sc.d,
+                     n_shards=n_shards, seconds=round(t_refit, 4)))
+
+    ins_times, unions = [], 0
+    for _ in range(insert_steps):
+        batch = _query_mix(rng, pts, eps, sidx.cuts, insert_m)
+        t0 = time.perf_counter()
+        st = sidx.insert(batch)
+        ins_times.append(time.perf_counter() - t0)
+        unions += st["reconcile_unions"]
+    rows.append(dict(bench="dist_serve", op="insert_batch",
+                     scenario=scenario, n=n, d=sc.d, n_shards=n_shards,
+                     m=insert_m, batches=insert_steps,
+                     seconds_mean=round(float(np.mean(ins_times)), 5),
+                     seconds_max=round(float(np.max(ins_times)), 5),
+                     reconcile_unions=unions))
+
+    snap = sidx.snapshot()
+    rows.append(dict(bench="dist_serve", op="snapshot",
+                     scenario=scenario, n=sidx.n, d=sc.d,
+                     n_shards=n_shards,
+                     bytes=int(sum(v.nbytes for v in snap.values()))))
+    assert ShardedGritIndex.restore(snap).num_shards == sidx.num_shards
+    return rows

@@ -21,6 +21,14 @@ CI scale (seconds, not minutes).
 predict throughput + insert latency vs a full refit per query batch,
 n = 1e5 blobs) and writes ``BENCH_3.json``; the >= 10x
 predict-vs-refit check gates the run.
+
+``--distributed`` runs the *sharded* serving-plane benchmark
+(``ShardedGritIndex`` slab-routed predict/insert vs a distributed refit
+per query batch, on a mesh over every visible device) and writes
+``BENCH_4.json``; the >= 10x sharded-predict-vs-distributed-refit
+check gates the run.  On single-device hosts it forces a 4-way host
+mesh via XLA_FLAGS (set before jax is first imported, which is why the
+flag must be handled before any benchmark module loads).
 """
 
 from __future__ import annotations
@@ -29,6 +37,7 @@ import argparse
 import csv
 import io
 import json
+import os
 import sys
 
 
@@ -58,6 +67,33 @@ def _write_bench3(path: str, rows) -> bool:
         "backend": jax.default_backend(),
         "rows": rows,
         "checks": {"predict_10x_faster_than_refit_per_batch": verdict},
+    }
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2)
+        f.write("\n")
+    print(f"wrote {path} ({len(rows)} rows)")
+    return verdict
+
+
+def _write_bench4(path: str, rows) -> bool:
+    """Dump the distributed serve rows + verdict as BENCH_4.json.
+
+    Verdict: slab-routed sharded predict is >= 10x faster than a full
+    distributed refit per query batch (the sharded-index acceptance
+    bar)."""
+    import jax
+
+    pred = [r for r in rows if r.get("op") == "predict_batch"]
+    verdict = bool(pred) and all(
+        r["speedup_vs_refit"] >= 10.0 for r in pred)
+    payload = {
+        "bench": "BENCH_4",
+        "backend": jax.default_backend(),
+        "devices": jax.device_count(),
+        "rows": rows,
+        "checks": {
+            "sharded_predict_10x_faster_than_distributed_refit": verdict,
+        },
     }
     with open(path, "w") as f:
         json.dump(payload, f, indent=2)
@@ -110,13 +146,49 @@ def main() -> int:
                          "BENCH_3.json")
     ap.add_argument("--serve-n", type=int, default=100_000,
                     help="fit-set size for --serve")
+    ap.add_argument("--distributed", action="store_true",
+                    help="sharded serving-plane bench only "
+                         "(ShardedGritIndex predict/insert vs a "
+                         "distributed refit per batch, multi-device "
+                         "mesh); writes BENCH_4.json")
+    ap.add_argument("--dist-n", type=int, default=50_000,
+                    help="fit-set size for --distributed")
+    ap.add_argument("--dist-shards", type=int, default=4,
+                    help="host devices to force for --distributed when "
+                         "the platform has only one")
     ap.add_argument("--out", default=None)
     ap.add_argument("--json-out", default=None,
                     help="where to write the JSON artifact (default "
-                         "BENCH_2.json, or BENCH_3.json under --serve)")
+                         "BENCH_2.json, BENCH_3.json under --serve, or "
+                         "BENCH_4.json under --distributed)")
     args = ap.parse_args()
     if args.json_out is None:
-        args.json_out = "BENCH_3.json" if args.serve else "BENCH_2.json"
+        args.json_out = ("BENCH_4.json" if args.distributed
+                         else "BENCH_3.json" if args.serve
+                         else "BENCH_2.json")
+
+    if args.distributed:
+        # must run before anything imports jax: device-count flags are
+        # read at first import
+        if "xla_force_host_platform_device_count" not in \
+                os.environ.get("XLA_FLAGS", ""):
+            os.environ["XLA_FLAGS"] = (
+                os.environ.get("XLA_FLAGS", "") +
+                f" --xla_force_host_platform_device_count="
+                f"{args.dist_shards}").strip()
+        assert "jax" not in sys.modules, \
+            "--distributed must configure XLA before jax is imported"
+        from benchmarks import dist_bench as DS
+        rows = DS.bench_dist_serve(n=args.dist_n)
+        csv_text = _print_csv(rows)
+        if args.out:
+            with open(args.out, "w") as f:
+                f.write(csv_text)
+        ok = _write_bench4(args.json_out, rows)
+        print(f"[{'PASS' if ok else 'FAIL'}] sharded predict >= 10x "
+              f"faster than a distributed refit per query batch "
+              f"(n={args.dist_n})")
+        return 0 if ok else 1
 
     from benchmarks import paper_figs as F
     from benchmarks import device_bench as D

@@ -1,269 +1,22 @@
-"""Distributed GriT-DBSCAN: spatial sharding + halo exchange + global merge.
+"""Compatibility shim: the distributed plane moved to ``repro.dist``.
 
-Scale-out story for the paper's "very large databases" claim: points are
-slab-sharded along the leading grid coordinate (grid side eps/sqrt(d), so
-slab boundaries align with grid lines), every shard runs the exact local
-GriT pipeline (grids -> grid tree -> FastMerging -> components), and
-cross-shard cluster identity is resolved by label reconciliation over
-*shared* halo points:
-
-  1. each shard ppermutes the points within 2*eps of its slab boundary to
-     the adjacent shard (ghost points); 2*eps guarantees the ghost's own
-     eps-neighborhood is complete, so its core status and merges computed
-     remotely are exact;
-  2. the local run clusters [own + ghosts] together (ghosts are ordinary
-     points to the grid tree / FastMerging);
-  3. the ghosts' locally-assigned labels are ppermuted *back*: a shared
-     core point seen by both shards yields an edge
-     (home_label, remote_label) between the two label spaces;
-  4. edges are all-gathered and a replicated pointer-jumping pass maps
-     every (shard, local label) to its global component.
-
-Exactness follows from the paper's Theorem 4 plus the halo width
-argument: any merge edge between grids in adjacent slabs is witnessed by
-a core point within eps of the boundary, which is a shared point.
-
-The SPMD program (``make_cluster_step``) is a single ``shard_map`` over
-the flattened device axis -- the same artifact the multi-pod dry-run
-lowers on the production mesh.
+What used to live here as one file is now a package with one module per
+concern -- host slab sharding (``repro.dist.sharding``), device halo
+compaction (``repro.dist.halo``), cross-shard label reconciliation
+(``repro.dist.reconcile``), the shard_map SPMD step + caps
+(``repro.dist.step``) and the host-facing entry points
+(``repro.dist.api``).  Import from ``repro.dist`` in new code; this
+module keeps the historical names importable.
 """
 
-from __future__ import annotations
+from repro.dist import (ClusterCaps, DistributedFitResult,  # noqa: F401
+                        distributed_dbscan, distributed_fit,
+                        make_cluster_step, shard_points_by_slab)
+from repro.dist.halo import halo_buffer as _halo_buffer  # noqa: F401
+from repro.dist.step import (_STEP_CACHE,  # noqa: F401
+                             cached_cluster_step as _cached_cluster_step)
 
-import dataclasses
-from functools import partial
-from typing import Optional, Tuple
-
-import numpy as np
-import jax
-import jax.numpy as jnp
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
-
-from .device_dbscan import (device_dbscan, GritCaps, OverflowReport,
-                            PAD_COORD)
-from .labels import label_propagation
-
-
-@dataclasses.dataclass(frozen=True)
-class ClusterCaps:
-    grit: GritCaps = GritCaps()
-    halo_cap: int = 512          # max points shipped per boundary side
-    edge_cap: int = 1024         # max reconciliation edges per shard
-
-
-def shard_points_by_slab(points: np.ndarray, eps: float, n_shards: int,
-                         pad_to: Optional[int] = None):
-    """Host-side spatial pre-sharding.
-
-    Sorts by the dim-0 grid coordinate and cuts into ``n_shards`` slabs at
-    grid-line boundaries (equal point counts up to grid granularity).
-    Returns (padded [n_shards, cap, d] f32, valid [n_shards, cap] bool,
-    perm with original indices [n_shards, cap]).
-    """
-    pts = np.asarray(points, np.float64)
-    n, d = pts.shape
-    side = eps / np.sqrt(d)
-    key = np.floor((pts[:, 0] - pts[:, 0].min()) / side).astype(np.int64)
-    order = np.argsort(key, kind="stable")
-    cuts = [0]
-    for s in range(1, n_shards):
-        tgt = s * n // n_shards
-        # move the cut forward to the next grid-line boundary
-        while tgt < n and tgt > cuts[-1] and \
-                key[order[tgt]] == key[order[tgt - 1]]:
-            tgt += 1
-        cuts.append(min(tgt, n))
-    cuts.append(n)
-    counts = [cuts[i + 1] - cuts[i] for i in range(n_shards)]
-    need = int(max(max(counts), 1))
-    if pad_to is not None and pad_to < need:
-        raise ValueError(
-            f"pad_to={pad_to} is smaller than the largest slab ({need} "
-            f"points); slab cuts land on grid lines, so per-shard counts "
-            f"cannot be reduced below that")
-    cap = pad_to or need
-    out = np.full((n_shards, cap, d), PAD_COORD, np.float32)
-    valid = np.zeros((n_shards, cap), bool)
-    perm = np.full((n_shards, cap), -1, np.int64)
-    for i in range(n_shards):
-        idx = order[cuts[i]:cuts[i + 1]]
-        out[i, :len(idx)] = pts[idx]
-        valid[i, :len(idx)] = True
-        perm[i, :len(idx)] = idx
-    return out, valid, perm
-
-
-def _halo_buffer(pts, valid, eps, side: str, cap: int):
-    """Points within 2*eps of the slab's min/max dim-0 edge (fixed cap)."""
-    x0 = pts[:, 0]
-    lo = jnp.min(jnp.where(valid, x0, jnp.inf))
-    hi = jnp.max(jnp.where(valid, x0, -jnp.inf))
-    near = valid & ((x0 <= lo + 2 * eps) if side == "lo"
-                    else (x0 >= hi - 2 * eps))
-    # compact the selected points into a fixed-size buffer front
-    n = pts.shape[0]
-    order = jnp.argsort(~near, stable=True)
-    if n < cap:
-        order = jnp.concatenate(
-            [order, jnp.zeros((cap - n,), order.dtype)])
-        sel = jnp.concatenate([near[order[:n]],
-                               jnp.zeros((cap - n,), bool)])
-    else:
-        order = order[:cap]
-        sel = near[order]
-    buf = jnp.where(sel[:, None], pts[order], PAD_COORD)
-    idx = jnp.where(sel, order, -1)
-    overflow = jnp.sum(near) > cap
-    return buf.astype(jnp.float32), idx.astype(jnp.int32), overflow
-
-
-def make_cluster_step(mesh: Mesh, eps, min_pts: int, caps: ClusterCaps,
-                      n_points_shard: int, d: int):
-    """Build the SPMD cluster step for ``mesh`` (all axes flattened).
-
-    Returns a jit-able fn: (points [N, d] f32, valid [N] bool) ->
-    (labels [N] int32 global cluster ids (-1 noise),
-     overflow ``OverflowReport`` with per-cap flags OR-ed over shards),
-    with N = n_shards * n_points_shard sharded over all mesh axes.
-    """
-    axes = tuple(mesh.axis_names)
-    n_shards = int(np.prod([mesh.shape[a] for a in axes]))
-    L = caps.grit.grid_cap          # per-shard label space
-    H = caps.halo_cap
-
-    def local_step(pts, valid):
-        # shard_map hands us the local block: [n_points_shard, d]
-        me = jax.lax.axis_index(axes)
-        # --- 1. halo exchange (both directions, ring) ---
-        lo_buf, lo_idx, ov1 = _halo_buffer(pts, valid, eps, "lo", H)
-        hi_buf, hi_idx, ov2 = _halo_buffer(pts, valid, eps, "hi", H)
-        right = [(i, (i + 1) % n_shards) for i in range(n_shards)]
-        left = [((i + 1) % n_shards, i) for i in range(n_shards)]
-        # my hi-edge points go to the right neighbor; lo-edge to the left
-        ghosts_from_left = jax.lax.ppermute(hi_buf, axes, right)
-        ghosts_from_right = jax.lax.ppermute(lo_buf, axes, left)
-        # ring wrap: shard 0 has no left neighbor in a slab decomposition
-        first = me == 0
-        last = me == n_shards - 1
-        ghosts_from_left = jnp.where(first, PAD_COORD, ghosts_from_left)
-        ghosts_from_right = jnp.where(last, PAD_COORD, ghosts_from_right)
-
-        # --- 2. local exact GriT-DBSCAN on own + ghosts ---
-        all_pts = jnp.concatenate([pts, ghosts_from_left, ghosts_from_right])
-        all_valid = jnp.concatenate([
-            valid,
-            jnp.any(ghosts_from_left < PAD_COORD / 2, axis=1),
-            jnp.any(ghosts_from_right < PAD_COORD / 2, axis=1)])
-        res = device_dbscan(all_pts.astype(jnp.float32), eps, min_pts,
-                            caps.grit, point_valid=all_valid)
-        n_own = pts.shape[0]
-        own_labels = res.labels[:n_own]
-        own_core = res.core[:n_own]
-        ghost_l_labels = res.labels[n_own:n_own + H]
-        ghost_l_core = res.core[n_own:n_own + H]
-        ghost_r_labels = res.labels[n_own + H:]
-        ghost_r_core = res.core[n_own + H:]
-
-        # --- 3. reconcile: my labels of the ghosts go back to their home
-        back_to_left = jnp.where(ghost_l_core, ghost_l_labels, -1)
-        back_to_right = jnp.where(ghost_r_core, ghost_r_labels, -1)
-        # label the ghosts got at the neighbor, aligned with my halo idx
-        hi_remote = jax.lax.ppermute(back_to_left, axes, left)
-        lo_remote = jax.lax.ppermute(back_to_right, axes, right)
-
-        def edges_for(local_idx, remote_labels, remote_shard):
-            ok = (local_idx >= 0) & (remote_labels >= 0)
-            safe = jnp.maximum(local_idx, 0)
-            mine = own_labels[safe]
-            ok = ok & (mine >= 0) & own_core[safe]
-            a = me * L + mine
-            b = remote_shard * L + remote_labels
-            return jnp.where(ok[:, None],
-                             jnp.stack([a, b], axis=1), -1), ok
-
-        e_hi, ok_hi = edges_for(hi_idx, hi_remote,
-                                jnp.minimum(me + 1, n_shards - 1))
-        e_lo, ok_lo = edges_for(lo_idx, lo_remote, jnp.maximum(me - 1, 0))
-        ok_hi = ok_hi & ~last
-        ok_lo = ok_lo & ~first
-        edges = jnp.concatenate([e_hi, e_lo])              # [2H, 2]
-        edge_valid = jnp.concatenate([ok_hi, ok_lo])
-
-        # --- 4. global components over (shard, label) space ---
-        all_edges = jax.lax.all_gather(edges, axes).reshape(-1, 2)
-        all_ok = jax.lax.all_gather(edge_valid, axes).reshape(-1)
-        node_valid = jnp.ones((n_shards * L,), bool)
-        gmap = label_propagation(n_shards * L,
-                                 jnp.maximum(all_edges, 0).astype(jnp.int32),
-                                 all_ok, node_valid)
-        glab = jnp.where(own_labels >= 0,
-                         gmap[me * L + jnp.maximum(own_labels, 0)],
-                         -1)
-        report = res.report
-        report.halo = report.halo | ov1 | ov2
-        return glab, report.as_vector()[None, :]
-
-    from jax.experimental.shard_map import shard_map
-    spec = P(axes)
-    fn = shard_map(local_step, mesh=mesh,
-                   in_specs=(P(axes, None), spec),
-                   out_specs=(spec, P(axes, None)),
-                   check_rep=False)
-
-    def cluster_step(points, valid):
-        labels, flags = fn(points, valid)           # flags [n_shards, F]
-        return labels, OverflowReport.from_vector(jnp.any(flags, axis=0))
-
-    return cluster_step
-
-
-# jitted SPMD steps keyed by everything that shapes the program; reused
-# across distributed_dbscan calls so the adaptive driver's quantized cap
-# retries (and repeated runs on similarly-sized data) don't recompile
-_STEP_CACHE: dict = {}
-_STEP_CACHE_MAX = 32
-
-
-def _cached_cluster_step(mesh: Mesh, eps: float, min_pts: int,
-                         caps: ClusterCaps, n_points_shard: int, d: int):
-    key = (mesh, float(eps), int(min_pts), caps, int(n_points_shard),
-           int(d))
-    if key not in _STEP_CACHE:
-        if len(_STEP_CACHE) >= _STEP_CACHE_MAX:
-            _STEP_CACHE.clear()
-        step = make_cluster_step(mesh, eps, min_pts, caps,
-                                 n_points_shard, d)
-        _STEP_CACHE[key] = jax.jit(step)
-    return _STEP_CACHE[key]
-
-
-def distributed_dbscan(points: np.ndarray, eps: float, min_pts: int,
-                       mesh: Mesh, caps: Optional[ClusterCaps] = None,
-                       pad_to: Optional[int] = None
-                       ) -> Tuple[np.ndarray, OverflowReport]:
-    """Host-facing wrapper: pre-shard, run the SPMD step, unpermute.
-
-    Returns (labels in original point order [n], ``OverflowReport``).
-    The report is truthy iff any static cap overflowed on any shard
-    (``bool(report)`` keeps the legacy overflow-flag contract).
-    """
-    caps = caps or ClusterCaps()
-    axes = tuple(mesh.axis_names)
-    n_shards = int(np.prod([mesh.shape[a] for a in axes]))
-    pts_sh, valid_sh, perm = shard_points_by_slab(points, eps, n_shards,
-                                                  pad_to=pad_to)
-    cap = pts_sh.shape[1]
-    step = _cached_cluster_step(mesh, eps, min_pts, caps, cap,
-                                points.shape[1])
-    flat_pts = jnp.asarray(pts_sh.reshape(n_shards * cap, -1))
-    flat_valid = jnp.asarray(valid_sh.reshape(-1))
-    sharding = NamedSharding(mesh, P(axes))
-    flat_pts = jax.device_put(flat_pts, NamedSharding(mesh, P(axes, None)))
-    flat_valid = jax.device_put(flat_valid, sharding)
-    labels, report = step(flat_pts, flat_valid)
-    labels = np.asarray(labels).reshape(n_shards, cap)
-    out = np.full(len(points), -1, np.int64)
-    for i in range(n_shards):
-        m = perm[i] >= 0
-        out[perm[i][m]] = labels[i][m]
-    return out, jax.device_get(report)
+__all__ = [
+    "ClusterCaps", "DistributedFitResult", "distributed_dbscan",
+    "distributed_fit", "make_cluster_step", "shard_points_by_slab",
+]

@@ -30,6 +30,10 @@ layer fit-once / serve-many traffic on top of the catalogue: a base fit
 set plus held-out query batches (near-cluster, empty-grid,
 outside-the-fitted-box, and exact-eps-boundary queries) and streaming
 micro-batch inserts that drift outside the fitted bounding box.
+``dist_serving_scenarios()`` are the sharded-serving variants: traffic
+engineered at the slab cut bands (queries that must consult two shards,
+inserts whose blobs straddle a cut and whose merges need cross-shard
+re-reconciliation).
 """
 
 from __future__ import annotations
@@ -386,6 +390,58 @@ def _insert_drift(rng: np.random.Generator, base: np.ndarray,
     return np.concatenate([blob, onto])
 
 
+def _quantile_cuts(base: np.ndarray, k: int = 3) -> np.ndarray:
+    """Approximate slab-cut dim-0 coordinates: the equal-count cut
+    policy puts them near the interior count quantiles."""
+    x0 = np.sort(base[:, 0])
+    return x0[[(i * len(x0)) // (k + 1) for i in range(1, k + 1)]]
+
+
+def _queries_slab_band(rng: np.random.Generator, base: np.ndarray,
+                       sc: Scenario, n: int) -> np.ndarray:
+    """Distributed-serving predict traffic: half the mixed catalogue
+    regimes (near / far / eps-ring / exact-eps), half aimed at the slab
+    *cut bands* -- dim-0 coordinates within ~2.5 eps of the equal-count
+    quantile lines, where the sharded router must consult both
+    neighboring shards and still match the brute rule bit-for-bit."""
+    n_mix = n // 2
+    mix = _queries_mixed(rng, base, sc, n_mix)
+    cuts = _quantile_cuts(base)
+    band = base[rng.integers(0, len(base), n - n_mix)].copy()
+    which = rng.integers(0, len(cuts), n - n_mix)
+    band[:, 0] = cuts[which] + rng.uniform(-2.5, 2.5,
+                                           n - n_mix) * sc.eps
+    return np.concatenate([mix, band])
+
+
+def _insert_slab_drift(rng: np.random.Generator, base: np.ndarray,
+                       sc: Scenario, n: int, step: int, steps: int
+                       ) -> np.ndarray:
+    """Distributed-serving insert traffic: blobs centered ON a cut line
+    (cross-shard structure: new cores on both sides, merges witnessed
+    by shared points), bridges between random fitted pairs (label
+    splices that may span slabs), plus a dim-0 drift component walking
+    past the domain edge (identifier-origin shifts inside end slabs)."""
+    d = sc.d
+    cuts = _quantile_cuts(base)
+    cut = cuts[step % len(cuts)]
+    n_cut = int(0.4 * n)
+    n_bridge = int(0.3 * n)
+    n_drift = n - n_cut - n_bridge
+    center = np.full(d, 0.5 * DOMAIN)
+    center[0] = cut
+    if d > 1:
+        center[1:] = base[rng.integers(0, len(base)), 1:]
+    blob = center + rng.normal(scale=1.2 * sc.eps, size=(n_cut, d))
+    a, b = base[rng.integers(0, len(base), (2, n_bridge))]
+    bridge = a + rng.uniform(0, 1, size=(n_bridge, 1)) * (b - a)
+    t = (step + 1) / steps
+    dcen = np.full(d, 0.5 * DOMAIN)
+    dcen[0] = (1 - t) * 0.5 * DOMAIN + t * 1.15 * DOMAIN
+    drift = dcen + rng.normal(scale=1.5 * sc.eps, size=(n_drift, d))
+    return np.concatenate([blob, bridge, drift])
+
+
 def serving_scenarios() -> List[ServingScenario]:
     """Fit/query/insert workloads for the index + serving tests."""
     base = scenario_map()
@@ -401,6 +457,43 @@ def serving_scenarios() -> List[ServingScenario]:
             query_gen=_queries_mixed, insert_gen=_insert_drift,
             tags=("serving", "drift")),
     ]
+
+
+def dist_serving_scenarios() -> List[ServingScenario]:
+    """Distributed-serving workloads: slab-spanning fit sets with
+    query/insert traffic engineered at the cut bands (the sharded
+    index's routing and re-reconciliation paths)."""
+    base = scenario_map()
+    return [
+        ServingScenario(
+            name="slab-serve-2d", base=base["cross-slab-2d"],
+            n_query=160, n_insert=40,
+            query_gen=_queries_slab_band, insert_gen=_insert_slab_drift,
+            tags=("serving", "dist-serving")),
+        ServingScenario(
+            name="slab-serve-3d", base=base["cross-slab-3d"],
+            n_query=140, n_insert=36,
+            query_gen=_queries_slab_band, insert_gen=_insert_slab_drift,
+            tags=("serving", "dist-serving")),
+        ServingScenario(
+            name="slab-blobs-2d", base=base["blobs-2d"],
+            n_query=120, n_insert=40, insert_steps=3,
+            query_gen=_queries_slab_band, insert_gen=_insert_slab_drift,
+            tags=("serving", "dist-serving")),
+    ]
+
+
+def dist_serving_scenario_map() -> Dict[str, ServingScenario]:
+    return {sc.name: sc for sc in dist_serving_scenarios()}
+
+
+def get_dist_serving_scenario(name: str) -> ServingScenario:
+    m = dist_serving_scenario_map()
+    if name not in m:
+        raise KeyError(
+            f"unknown distributed serving scenario {name!r}; "
+            f"known: {sorted(m)}")
+    return m[name]
 
 
 def serving_scenario_map() -> Dict[str, ServingScenario]:

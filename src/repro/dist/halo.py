@@ -1,0 +1,56 @@
+"""Device-side halo compaction for the slab exchange.
+
+Each shard ships the points within 2*eps of its slab boundary to the
+adjacent shard (via ``jax.lax.ppermute``).  The 2*eps width guarantees a
+shipped point's own eps-neighborhood is complete on the receiving side
+for any point within eps of the boundary -- the width the reconciliation
+exactness argument needs (DESIGN.md §5).
+
+The buffers are fixed-cap (``ClusterCaps.halo_cap``) so the exchange is
+a static-shape collective; selection overflow is reported, never
+silently truncated (the adaptive driver grows the cap and retries).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.device_dbscan import PAD_COORD
+
+
+def halo_buffer(pts, valid, eps, side: str, cap: int):
+    """Compact the points within 2*eps of the slab's dim-0 edge into a
+    fixed-cap buffer.
+
+    Args:
+      pts: [n, d] shard-local points (padding rows at ``PAD_COORD``).
+      valid: [n] bool.
+      side: "lo" (points near the slab's min edge) or "hi" (max edge).
+      cap: static buffer size.  ``cap > n`` is legal: the buffer's tail
+        beyond the ``n`` selectable points is explicit padding
+        (``PAD_COORD`` coordinates, index -1), and overflow can then
+        never fire (at most ``n`` points are selectable).
+
+    Returns ``(buf [cap, d] f32, idx [cap] int32 rows into pts or -1,
+    overflow [] bool)``.
+    """
+    x0 = pts[:, 0]
+    lo = jnp.min(jnp.where(valid, x0, jnp.inf))
+    hi = jnp.max(jnp.where(valid, x0, -jnp.inf))
+    near = valid & ((x0 <= lo + 2 * eps) if side == "lo"
+                    else (x0 >= hi - 2 * eps))
+    # compact the selected points into a fixed-size buffer front
+    n = pts.shape[0]
+    order = jnp.argsort(~near, stable=True)
+    if n < cap:
+        order = jnp.concatenate(
+            [order, jnp.zeros((cap - n,), order.dtype)])
+        sel = jnp.concatenate([near[order[:n]],
+                               jnp.zeros((cap - n,), bool)])
+    else:
+        order = order[:cap]
+        sel = near[order]
+    buf = jnp.where(sel[:, None], pts[order], PAD_COORD)
+    idx = jnp.where(sel, order, -1)
+    overflow = jnp.sum(near) > cap
+    return buf.astype(jnp.float32), idx.astype(jnp.int32), overflow

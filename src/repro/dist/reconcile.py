@@ -1,0 +1,63 @@
+"""Cross-shard label reconciliation (device side).
+
+After every shard clusters its own + ghost points locally, cluster
+identity must be stitched across slab boundaries.  The mechanism is the
+paper's Theorem 4 plus the halo-width argument: any merge edge between
+grids in adjacent slabs is witnessed by a core point within eps of the
+boundary -- which is a *shared* point, clustered independently by both
+shards.  Each shared core point therefore yields one edge
+``(home shard label, remote shard label)`` between the two per-shard
+label spaces; the edges are all-gathered and a replicated
+pointer-jumping pass maps every ``(shard, local label)`` pair to its
+global component.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.labels import label_propagation
+
+
+def shared_point_edges(own_labels, own_core, local_idx, remote_labels,
+                       me, remote_shard, label_space: int):
+    """Edges between my label space and a neighbor's, one per shared
+    core point.
+
+    Args:
+      own_labels / own_core: my shard-local labels and core flags.
+      local_idx: [H] my row of each shipped halo point (-1 padding).
+      remote_labels: [H] the label my shipped point received at the
+        neighbor (-1 where it was not a labeled core there), aligned
+        with ``local_idx``.
+      me / remote_shard: shard indices (device scalars).
+      label_space: per-shard label capacity L; global node id of
+        (shard s, label l) is ``s * L + l``.
+
+    Returns ``(edges [H, 2] int32 (-1 padding), valid [H] bool)``.  An
+    edge requires the shared point to be a labeled core on *both*
+    sides: border labels are order-dependent and must never stitch
+    components together.
+    """
+    ok = (local_idx >= 0) & (remote_labels >= 0)
+    safe = jnp.maximum(local_idx, 0)
+    mine = own_labels[safe]
+    ok = ok & (mine >= 0) & own_core[safe]
+    a = me * label_space + mine
+    b = remote_shard * label_space + remote_labels
+    edges = jnp.where(ok[:, None], jnp.stack([a, b], axis=1), -1)
+    return edges, ok
+
+
+def global_component_map(edges, edge_valid, n_shards: int,
+                         label_space: int, axes):
+    """All-gather the per-shard edge lists and pointer-jump them into a
+    replicated map ``(shard * L + local label) -> global component``."""
+    all_edges = jax.lax.all_gather(edges, axes).reshape(-1, 2)
+    all_ok = jax.lax.all_gather(edge_valid, axes).reshape(-1)
+    n_nodes = n_shards * label_space
+    node_valid = jnp.ones((n_nodes,), bool)
+    return label_propagation(n_nodes,
+                             jnp.maximum(all_edges, 0).astype(jnp.int32),
+                             all_ok, node_valid)

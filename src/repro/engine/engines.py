@@ -21,6 +21,11 @@ device-kernels
 distributed spatial slab sharding + halo exchange + global label
            reconciliation over a jax mesh (shard_map), with the same
            adaptive cap loop wrapped around the whole SPMD program.
+           The shard-local pipeline honors ``use_kernels`` (threaded
+           through ``ClusterCaps.grit``; defaults to the Pallas kernel
+           plane on TPU meshes) and reports per-point core flags plus
+           slab/grid provenance -- the inputs of the sharded serving
+           index (``repro.index.ShardedGritIndex``).
 ========== =============================================================
 
 All engines take host numpy points and return
@@ -161,18 +166,11 @@ def _device_kernels_engine(points, eps, min_pts, **opts) -> ClusterResult:
     return _device_impl(points, eps, min_pts, "device-kernels", **opts)
 
 
-def _halo_bound(points: np.ndarray, eps: float) -> int:
-    """Max number of points any 2*eps-wide dim-0 window can contain --
-    an upper bound on one shard's halo shipment."""
-    x = np.sort(np.asarray(points, np.float64)[:, 0])
-    hi = np.searchsorted(x, x + 2.0 * eps, side="right")
-    return int((hi - np.arange(len(x))).max())
-
-
 @register_engine("distributed",
                  "slab-sharded shard_map pipeline (halo exchange + "
                  "global label reconciliation), adaptive caps")
 def _distributed_engine(points, eps, min_pts, *, mesh=None, caps=None,
+                        use_kernels: Optional[bool] = None,
                         max_retries: int = 8,
                         growth: float = 2.0) -> ClusterResult:
     """Multi-device SPMD engine.
@@ -182,9 +180,16 @@ def _distributed_engine(points, eps, min_pts, *, mesh=None, caps=None,
     with grid lines, so any per-shard grid count / occupancy / pair
     count is bounded by its global counterpart, and the halo cap by the
     densest 2*eps-wide slab window.
+
+    ``use_kernels`` selects the shard-local distance plane (it rides on
+    ``ClusterCaps.grit`` -- the same static jit key as the caps): None
+    defaults to the Pallas kernel plane on TPU meshes (where the MXU
+    kernels are the point -- the choice ``engine="auto"`` inherits) and
+    the naive broadcast plane elsewhere; an explicit flag always wins,
+    including over the plane carried by a caller-provided ``caps``.
     """
     import jax
-    from repro.core.distributed import ClusterCaps, distributed_dbscan
+    from repro.dist import ClusterCaps, distributed_fit, halo_bound
 
     t0 = time.perf_counter()
     pts = np.asarray(points, np.float64)
@@ -193,15 +198,20 @@ def _distributed_engine(points, eps, min_pts, *, mesh=None, caps=None,
     if mesh is None:
         mesh = jax.make_mesh((jax.device_count(),), ("shard",))
     if caps is None:
-        grit = estimate_caps(pts, eps, min_pts)
-        halo = _pow2_at_least(min(_halo_bound(pts, eps), n), lo=32)
-        caps = ClusterCaps(grit=grit, halo_cap=halo,
-                           edge_cap=2 * halo)
+        uk = (jax.default_backend() == "tpu") if use_kernels is None \
+            else bool(use_kernels)
+        grit = estimate_caps(pts, eps, min_pts, use_kernels=uk)
+        halo = _pow2_at_least(min(halo_bound(pts, eps), n), lo=32)
+        caps = ClusterCaps(grit=grit, halo_cap=halo)
+    elif use_kernels is not None and \
+            caps.grit.use_kernels != bool(use_kernels):
+        caps = dataclasses.replace(
+            caps, grit=dataclasses.replace(caps.grit,
+                                           use_kernels=bool(use_kernels)))
 
     def run(c):
-        labels, report = distributed_dbscan(pts, eps, min_pts, mesh,
-                                            caps=c)
-        return labels, report
+        fit = distributed_fit(pts, eps, min_pts, mesh, caps=c)
+        return fit, fit.report
 
     def grow(c, overflowed):
         # halo is measured from the raw points, so its flag stays
@@ -213,15 +223,16 @@ def _distributed_engine(points, eps, min_pts, *, mesh=None, caps=None,
         halo = c.halo_cap
         if "halo" in overflowed:
             halo = _pow2_at_least(min(int(halo * growth), n))
-        return ClusterCaps(grit=grit, halo_cap=halo, edge_cap=2 * halo)
+        return ClusterCaps(grit=grit, halo_cap=halo)
 
-    labels, attempts = adaptive_loop(
+    fit, attempts = adaptive_loop(
         run, grow,
         lambda c: {**dataclasses.asdict(c.grit), "halo_cap": c.halo_cap},
         caps, max_retries)
     return ClusterResult.build(
-        labels, "distributed", core=None, attempts=attempts,
+        fit.labels, "distributed", core=fit.core, attempts=attempts,
         overflow=attempts[-1]["overflow"],
         stats={"n": n, "n_shards": mesh.devices.size,
                "retries": len(attempts) - 1,
+               "use_kernels": caps.grit.use_kernels,
                "t_total": time.perf_counter() - t0})

@@ -86,7 +86,10 @@ def engine_descriptions() -> Dict[str, str]:
 def resolve_auto() -> str:
     """Pick a backend for ``engine="auto"`` from the runtime.
 
-    * >1 jax devices        -> "distributed" (spatial sharding + halo)
+    * >1 jax devices        -> "distributed" (spatial sharding + halo;
+                               on a TPU mesh the shard-local pipeline
+                               defaults to the Pallas kernel distance
+                               plane -- see the engine's ``use_kernels``)
     * TPU backend           -> "device-kernels" (single jitted XLA
                                program, adaptive caps, MXU Pallas
                                distance plane -- on TPU the kernels are
@@ -126,10 +129,15 @@ def _attach_index(result: ClusterResult, pts: np.ndarray, eps: float,
 
     caps = None
     if result.attempts:
+        # the distributed attempt dicts carry extra caps (halo_cap) on
+        # top of the GritCaps fields; keep the GritCaps subset
+        names = {f.name for f in dataclasses.fields(GritCaps)}
+        kw = {k: v for k, v in result.attempts[-1]["caps"].items()
+              if k in names}
         try:
-            caps = GritCaps(**result.attempts[-1]["caps"])
+            caps = GritCaps(**kw) if kw else None
         except TypeError:
-            caps = None          # e.g. distributed: halo_cap is not a GritCap
+            caps = None
     index = GritIndex.from_fit(pts, eps, min_pts, labels=result.labels,
                                core=result.core, grid=result.grid,
                                caps=caps)

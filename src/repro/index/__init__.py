@@ -1,5 +1,6 @@
 """index: the fitted ``GritIndex`` (fit once, serve point queries and
-micro-batch inserts without refitting).
+micro-batch inserts without refitting) and its multi-shard sibling
+``ShardedGritIndex`` (the serving artifact of a distributed fit).
 
     from repro.engine import cluster
     res = cluster(points, eps=3000.0, min_pts=10, return_index=True)
@@ -7,13 +8,19 @@ micro-batch inserts without refitting).
     res.index.insert(micro_batch)                # incremental splice
     snap = res.index.snapshot()                  # flat arrays, savez-able
 
-See DESIGN.md §7 for the state layout and exactness arguments.
+    from repro.index import fit_sharded
+    sidx = fit_sharded(points, eps, min_pts, mesh=mesh)  # per-slab shards
+    labels = sidx.predict(new_points)            # slab-routed, exact
+
+See DESIGN.md §7 for the state layouts and exactness arguments.
 """
 
 from .grit_index import GritIndex, PredictCaps
 from .insert import insert_batch
+from .sharded import LabelMap, ShardedGritIndex, fit_sharded
 
-__all__ = ["GritIndex", "PredictCaps", "insert_batch", "fit_index"]
+__all__ = ["GritIndex", "LabelMap", "PredictCaps", "ShardedGritIndex",
+           "fit_index", "fit_sharded", "insert_batch"]
 
 
 def fit_index(points, eps: float, min_pts: int, *, engine: str = "auto",

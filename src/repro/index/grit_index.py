@@ -256,7 +256,7 @@ class GritIndex:
     # ------------------------------------------------------------------
 
     def predict(self, queries, *, mode: str = "auto", chunk: int = 2048,
-                stats: Optional[dict] = None) -> np.ndarray:
+                stats: Optional[dict] = None, return_d2: bool = False):
         """Label new points under the DBSCAN assignment rule (exact).
 
         Args:
@@ -269,18 +269,23 @@ class GritIndex:
           chunk: host-mode query chunk (memory bound).
           stats: optional dict filled with execution counters
             (mode, candidate totals, kernel cap growth).
+          return_d2: also return [m] float64 squared distances to the
+            nearest core candidate (inf where none) -- what a sharded
+            router needs to combine answers from several slabs.
 
-        Returns [m] int64 labels; -1 noise.  Never mutates the fitted
-        state; kernel mode may grow ``predict_caps`` (monotone -- the
-        jit-shape memory), so concurrent kernel predicts on one shared
-        index need external serialization.
+        Returns [m] int64 labels; -1 noise (``(labels, d2)`` under
+        ``return_d2``).  Never mutates the fitted state; kernel mode may
+        grow ``predict_caps`` (monotone -- the jit-shape memory), so
+        concurrent kernel predicts on one shared index need external
+        serialization.
         """
         q = np.asarray(queries, np.float64)
         if q.ndim != 2 or q.shape[1] != self.d:
             raise ValueError(
                 f"queries must be [m, {self.d}], got {q.shape}")
         if q.shape[0] == 0:
-            return np.empty(0, np.int64)
+            out = np.empty(0, np.int64)
+            return (out, np.empty(0, np.float64)) if return_d2 else out
         if not np.isfinite(q).all():
             raise ValueError("queries contain non-finite coordinates")
         if mode == "auto":
@@ -290,16 +295,19 @@ class GritIndex:
             stats["mode"] = mode
             stats["n_queries"] = int(q.shape[0])
         if mode == "host":
-            return self._predict_host(q, chunk, stats)
-        if mode == "kernel":
-            return self._predict_kernel(q, stats)
-        raise ValueError(f"unknown predict mode {mode!r}")
+            out, d2 = self._predict_host(q, chunk, stats)
+        elif mode == "kernel":
+            out, d2 = self._predict_kernel(q, stats)
+        else:
+            raise ValueError(f"unknown predict mode {mode!r}")
+        return (out, d2) if return_d2 else out
 
     def _predict_host(self, q: np.ndarray, chunk: int,
-                      stats: Optional[dict]) -> np.ndarray:
+                      stats: Optional[dict]):
         eps2 = self.eps * self.eps
         m = q.shape[0]
         out = np.full(m, -1, np.int64)
+        out_d2 = np.full(m, np.inf, np.float64)
         q_ids = self.query_ids(q)
         n_cand = 0
         for s in range(0, m, chunk):
@@ -320,14 +328,15 @@ class GritIndex:
             pos = np.flatnonzero(is_min)
             qpos, first = np.unique(q_of[pos], return_index=True)
             best = pos[first]
+            out_d2[s + qpos] = d2[best]
             hit = d2[best] <= eps2
             out[s + qpos[hit]] = self.labels[rows[best[hit]]]
         if stats is not None:
             stats["candidates"] = n_cand
-        return out
+        return out, out_d2
 
     def _predict_kernel(self, q: np.ndarray,
-                        stats: Optional[dict]) -> np.ndarray:
+                        stats: Optional[dict]):
         """Slot-batched predict: queries grouped by grid cell, one
         ``row_min_batch`` call per (group_cap, query_cap, cand_cap) jit
         key.  Both operands are re-centered on the group's cell origin
@@ -387,7 +396,8 @@ class GritIndex:
         hit = (dq <= eps2) & (aq >= 0)
         gq = qslot_of // pc.query_cap
         out[hit] = self.labels[brow[gq[hit], aq[hit]]]
-        return out
+        out_d2 = np.where(aq >= 0, dq.astype(np.float64), np.inf)
+        return out, out_d2
 
     # ------------------------------------------------------------------
     # insert

@@ -60,6 +60,7 @@ def insert_batch(index, batch) -> Dict[str, Any]:
     if m == 0:
         return {"inserted": 0, "n": index.n, "touched_grids": 0,
                 "affected_grids": 0, "changed_grids": 0, "newly_core": 0,
+                "newly_core_arrival": np.empty(0, np.int64),
                 "merge_checks": 0, "dist_evals": 0, "id_shifted": False,
                 "t_total": time.perf_counter() - t0}
     if not np.isfinite(B).all():
@@ -214,6 +215,9 @@ def insert_batch(index, batch) -> Dict[str, Any]:
         "affected_grids": int(len(affected)),
         "changed_grids": int(len(changed)),
         "newly_core": int(len(newly_core)),
+        # arrival ids of the newly-core rows: lets a multi-shard caller
+        # attribute promotions to owned vs ghost copies
+        "newly_core_arrival": index.arrival[newly_core],
         "merge_checks": merge_checks, "dist_evals": dist_evals,
         "id_shifted": shifted,
         "t_total": time.perf_counter() - t0,

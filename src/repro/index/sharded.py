@@ -1,0 +1,552 @@
+"""Sharded fitted index: the serving artifact of a *distributed* fit.
+
+One host's :class:`GritIndex` stops fitting exactly in the regime the
+paper targets ("very large databases"), so the sharded index keeps the
+fitted state *per slab*: one ``GritIndex`` per dim-0 slab (the same
+slab partition the distributed fit used -- Wang/Gu/Shun's observation
+that the fitted spatial structure is the artifact worth keeping across
+machines), plus a global label map stitching the slabs' cluster ids
+together.  de Berg et al.'s grid argument makes the routing cheap:
+locating a query's owning slab is one binary search over the cut
+coordinates.
+
+**Ghost bands.**  Each shard stores its own slab's points *plus* ghost
+copies of every foreign point within ``2 * eps`` of its slab range --
+the same halo width as the distributed fit.  The width argument
+(DESIGN.md §5) carries over verbatim: any point of slab k has its whole
+eps-neighborhood inside [slab - eps, slab + eps) ⊂ shard k's coverage,
+so every *own*-point decision (core status, merges, border assignment)
+a shard makes is exact using only its local state -- at fit time and
+under every later :meth:`insert`.
+
+**Routing exactness** (predict).  A query owned by slab k can only have
+core points within eps inside shard k's coverage, and every such core
+carries an exact flag there (its neighborhood is complete in shard k),
+so the owner's answer is already the brute-oracle assignment rule.
+Queries within ``2 * eps`` of a cut additionally consult the adjacent
+shard(s); answers combine by smallest squared distance with owner
+priority on exact ties -- the neighbor can only confirm (its candidate
+set is a subset of the true core set), so the combined answer stays
+pinned bit-identical to the oracle rule (host mode: same float64
+expression).
+
+**Insert + re-reconciliation.**  A micro-batch is bucketed by owning
+slab; each new point is spliced into its owner shard and, when it lies
+in a neighbor's ghost band, into that neighbor too -- so every shard's
+local state stays self-consistently exact (the fit-time invariant).
+Label arenas never collide: each touched shard allocates fresh cluster
+ids from the shared ``next_label`` sequence.  What *can* diverge is
+cluster identity across shards (a merge deep inside one slab is
+invisible to its neighbor), and exactly as in the distributed fit every
+such divergence is witnessed by a shared core point near a cut: the
+re-reconciliation pass walks the shared copies adjacent to the touched
+shards and unions their label pairs into the global label map (edges
+only at genuinely core shared points -- border labels are
+order-dependent and must never stitch clusters).  Read-outs and
+predictions resolve raw per-shard labels through the map.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Dict, List, Optional
+
+import numpy as np
+
+from repro.dist.sharding import owner_of_slab, slab_cuts
+
+from .grit_index import GritIndex
+
+_SHARDED_SNAPSHOT_VERSION = 1
+
+
+class LabelMap:
+    """Union-find over global cluster ids (root = smallest id).
+
+    The global label map of the sharded index: per-shard labels stay
+    raw; merges discovered by cross-shard reconciliation only touch
+    this map, so re-reconciliation never rewrites per-shard arrays.
+    """
+
+    def __init__(self, n: int, parent: Optional[np.ndarray] = None):
+        self.parent = (np.arange(n, dtype=np.int64) if parent is None
+                       else np.asarray(parent, np.int64).copy())
+
+    def __len__(self) -> int:
+        return len(self.parent)
+
+    def grow(self, n: int) -> None:
+        if n > len(self.parent):
+            self.parent = np.concatenate(
+                [self.parent,
+                 np.arange(len(self.parent), n, dtype=np.int64)])
+
+    def find(self, x: int) -> int:
+        p = self.parent
+        root = x
+        while p[root] != root:
+            root = p[root]
+        while p[x] != root:            # path compression
+            p[x], x = root, p[x]
+        return int(root)
+
+    def union(self, a: int, b: int) -> bool:
+        ra, rb = self.find(a), self.find(b)
+        if ra == rb:
+            return False
+        if rb < ra:                    # smallest id wins: deterministic
+            ra, rb = rb, ra
+        self.parent[rb] = ra
+        return True
+
+    def resolve(self, labels: np.ndarray) -> np.ndarray:
+        """Map raw labels to canonical roots (vectorized; -1 passes)."""
+        lab = np.asarray(labels, np.int64)
+        out = lab.copy()
+        m = lab >= 0
+        cur = out[m]
+        while True:
+            nxt = self.parent[cur]
+            if np.array_equal(nxt, cur):
+                break
+            cur = nxt
+        out[m] = cur
+        return out
+
+
+@dataclasses.dataclass
+class ShardedGritIndex:
+    """Per-slab ``GritIndex`` shards + the global label map.
+
+    Bookkeeping (all arrival-order):
+
+    * ``own_rows[k]`` / ``own_gids[k]`` -- shard k's rows that are
+      *owned* points, and the global arrival index of each (the
+      original point order of the fit, inserts appended);
+    * ``ghost_rows[k]`` / ``ghost_gids[k]`` -- shard k's ghost copies
+      and the global ids they duplicate (the shared-point registry the
+      re-reconciliation walks);
+    * ``owner_shard`` / ``owner_row`` -- for every global id, where its
+      authoritative (owner) copy lives.
+    """
+
+    shards: List[GritIndex]
+    cuts: np.ndarray               # [K-1] float64 dim-0 slab boundaries
+    eps: float
+    min_pts: int
+    next_label: int                # shared fresh-cluster-id sequence
+    label_map: LabelMap
+    own_rows: List[np.ndarray]
+    own_gids: List[np.ndarray]
+    ghost_rows: List[np.ndarray]
+    ghost_gids: List[np.ndarray]
+    owner_shard: np.ndarray        # [n] int64
+    owner_row: np.ndarray          # [n] int64
+
+    # ------------------------------------------------------------------
+    # construction
+    # ------------------------------------------------------------------
+
+    @classmethod
+    def from_global_fit(cls, points, eps: float, min_pts: int, labels,
+                        core=None, n_shards: int = 4
+                        ) -> "ShardedGritIndex":
+        """Shard one finished global fit (arrival-order labels/core).
+
+        ``labels`` must be globally reconciled cluster ids (what the
+        distributed engine returns); ``core`` the exact global core
+        flags (``None`` falls back to per-shard grid-based
+        identification -- exact for owned points, whose neighborhoods
+        are complete per shard).  Slabs are cut on grid lines along
+        dim 0 (the distributed fit's partition); empty slabs are
+        coalesced into their neighbor, so every shard is non-empty.
+        """
+        pts = np.asarray(points, np.float64)
+        n, _ = pts.shape
+        labels = np.asarray(labels, np.int64)
+        core = None if core is None else np.asarray(core, bool)
+        _, _, cut_coords = slab_cuts(pts, eps, max(int(n_shards), 1))
+        cuts = np.asarray(cut_coords, np.float64)
+        cuts = np.unique(cuts[np.isfinite(cuts)])
+        owner = owner_of_slab(pts[:, 0], cuts)
+        present = np.unique(owner)
+        if len(present) < len(cuts) + 1:
+            # drop cuts bounding empty slabs: the boundary between two
+            # consecutive *present* slabs is the left edge of the later
+            cuts = np.asarray([cuts[b - 1] for b in present[1:]],
+                              np.float64)
+            owner = owner_of_slab(pts[:, 0], cuts)
+        K = len(cuts) + 1
+        band = 2.0 * float(eps)
+        x0 = pts[:, 0]
+        shards, own_rows, own_gids = [], [], []
+        ghost_rows, ghost_gids = [], []
+        owner_row = np.empty(n, np.int64)
+        for k in range(K):
+            lo = cuts[k - 1] if k > 0 else -np.inf
+            hi = cuts[k] if k < K - 1 else np.inf
+            own_sel = owner == k
+            ghost_sel = (~own_sel) & (x0 >= lo - band) & (x0 < hi + band)
+            oidx = np.flatnonzero(own_sel)
+            gidx = np.flatnonzero(ghost_sel)
+            sel = np.concatenate([oidx, gidx])
+            shards.append(GritIndex.from_fit(
+                pts[sel], eps, min_pts, labels=labels[sel],
+                core=None if core is None else core[sel]))
+            own_rows.append(np.arange(len(oidx), dtype=np.int64))
+            own_gids.append(oidx)
+            ghost_rows.append(len(oidx) + np.arange(len(gidx),
+                                                    dtype=np.int64))
+            ghost_gids.append(gidx)
+            owner_row[oidx] = np.arange(len(oidx), dtype=np.int64)
+        next_label = int(labels.max(initial=-1)) + 1
+        return cls(shards=shards, cuts=cuts, eps=float(eps),
+                   min_pts=int(min_pts), next_label=next_label,
+                   label_map=LabelMap(next_label), own_rows=own_rows,
+                   own_gids=own_gids, ghost_rows=ghost_rows,
+                   ghost_gids=ghost_gids,
+                   owner_shard=owner.astype(np.int64),
+                   owner_row=owner_row)
+
+    # ------------------------------------------------------------------
+    # views
+    # ------------------------------------------------------------------
+
+    @property
+    def n(self) -> int:
+        """Owned points (each physical point counted once)."""
+        return int(len(self.owner_shard))
+
+    @property
+    def d(self) -> int:
+        return self.shards[0].d
+
+    @property
+    def num_shards(self) -> int:
+        return len(self.shards)
+
+    @property
+    def num_grids(self) -> int:
+        """Total non-empty grids over all shards (ghost bands double-
+        count boundary grids -- a capacity figure, not a partition)."""
+        return int(sum(s.num_grids for s in self.shards))
+
+    def _slab_bounds(self, k: int):
+        lo = self.cuts[k - 1] if k > 0 else -np.inf
+        hi = self.cuts[k] if k < self.num_shards - 1 else np.inf
+        return lo, hi
+
+    def labels_arrival(self) -> np.ndarray:
+        """Canonical labels in global arrival order (fit order, inserts
+        appended) -- per-shard raw labels resolved through the map."""
+        out = np.empty(self.n, np.int64)
+        for k, idx in enumerate(self.shards):
+            la = idx.labels_arrival()
+            out[self.own_gids[k]] = la[self.own_rows[k]]
+        return self.label_map.resolve(out)
+
+    def core_arrival(self) -> np.ndarray:
+        """Core flags in global arrival order (owner copies: exact)."""
+        out = np.empty(self.n, bool)
+        for k, idx in enumerate(self.shards):
+            ca = idx.core_arrival()
+            out[self.own_gids[k]] = ca[self.own_rows[k]]
+        return out
+
+    # ------------------------------------------------------------------
+    # predict
+    # ------------------------------------------------------------------
+
+    def predict(self, queries, *, mode: str = "auto", chunk: int = 2048,
+                stats: Optional[dict] = None) -> np.ndarray:
+        """Slab-routed exact predict (see module docstring).
+
+        Buckets queries by owning slab, consults the adjacent shard(s)
+        for queries within ``2 * eps`` of a cut, runs *one* batched
+        per-shard predict per consulted shard, and combines by nearest
+        core (owner priority on exact ties).  Returns [m] int64
+        canonical labels; -1 noise.
+        """
+        q = np.asarray(queries, np.float64)
+        if q.ndim != 2 or q.shape[1] != self.d:
+            raise ValueError(
+                f"queries must be [m, {self.d}], got {q.shape}")
+        if q.shape[0] == 0:
+            return np.empty(0, np.int64)
+        if not np.isfinite(q).all():
+            raise ValueError("queries contain non-finite coordinates")
+        m = q.shape[0]
+        x0 = q[:, 0]
+        owner = owner_of_slab(x0, self.cuts)
+        band = 2.0 * self.eps
+        out = np.full(m, -1, np.int64)
+        best_d2 = np.full(m, np.inf, np.float64)
+        per_shard: List[int] = []
+        consulted = 0
+        shard_mode = None
+        for k in range(self.num_shards):
+            lo, hi = self._slab_bounds(k)
+            sel = np.flatnonzero((x0 >= lo - band) & (x0 < hi + band))
+            per_shard.append(int(len(sel)))
+            if len(sel) == 0:
+                continue
+            pstats: Dict[str, Any] = {}
+            lab_k, d2_k = self.shards[k].predict(
+                q[sel], mode=mode, chunk=chunk, stats=pstats,
+                return_d2=True)
+            shard_mode = pstats.get("mode", shard_mode)
+            consulted += len(sel)
+            is_owner = owner[sel] == k
+            # the owner's answer is exact; a neighbor may only confirm
+            # (strict improvement is impossible -- defensively allowed)
+            take = is_owner | (d2_k < best_d2[sel])
+            rows = sel[take]
+            out[rows] = lab_k[take]
+            best_d2[rows] = d2_k[take]
+        if stats is not None:
+            owned = np.bincount(owner, minlength=self.num_shards)
+            stats.update(
+                mode=shard_mode, n_queries=m,
+                shards=self.num_shards, consulted=consulted,
+                multi_routed=int(consulted - m),
+                per_shard=per_shard,
+                owned_per_shard=[int(c) for c in owned])
+        return self.label_map.resolve(out)
+
+    # ------------------------------------------------------------------
+    # insert
+    # ------------------------------------------------------------------
+
+    def insert(self, batch) -> Dict[str, Any]:
+        """Micro-batch insert confined to the touched shards.
+
+        Buckets by owning slab, splices each sub-batch into its owner
+        shard (plus ghost copies into neighbors whose band contains the
+        point), then re-reconciles cluster identity over the shared
+        points adjacent to the touched shards (module docstring).
+        """
+        t0 = time.perf_counter()
+        B = np.asarray(batch, np.float64)
+        if B.ndim != 2 or B.shape[1] != self.d:
+            raise ValueError(f"insert batch must be [m, {self.d}], "
+                             f"got {B.shape}")
+        m = B.shape[0]
+        if m == 0:
+            return {"inserted": 0, "n": self.n, "shards_touched": [],
+                    "newly_core": 0, "reconcile_unions": 0,
+                    "per_shard": [],
+                    "t_total": time.perf_counter() - t0}
+        if not np.isfinite(B).all():
+            raise ValueError("insert batch contains non-finite "
+                             "coordinates")
+        x0 = B[:, 0]
+        owner = owner_of_slab(x0, self.cuts)
+        gid0 = self.n
+        band = 2.0 * self.eps
+        owner_row_new = np.empty(m, np.int64)
+        touched: List[int] = []
+        per_shard: List[Dict[str, Any]] = []
+        for k in range(self.num_shards):
+            lo, hi = self._slab_bounds(k)
+            own_sel = owner == k
+            ghost_sel = (~own_sel) & (x0 >= lo - band) & (x0 < hi + band)
+            if not (own_sel.any() or ghost_sel.any()):
+                continue
+            oidx = np.flatnonzero(own_sel)
+            gidx = np.flatnonzero(ghost_sel)
+            shard = self.shards[k]
+            n_before = shard.n
+            # fresh cluster ids come from the shared global sequence,
+            # so two shards can never mint the same id
+            shard.next_label = self.next_label
+            st = shard.insert(B[np.concatenate([oidx, gidx])])
+            self.next_label = shard.next_label
+            rows = n_before + np.arange(len(oidx) + len(gidx),
+                                        dtype=np.int64)
+            self.own_rows[k] = np.concatenate(
+                [self.own_rows[k], rows[:len(oidx)]])
+            self.own_gids[k] = np.concatenate(
+                [self.own_gids[k], gid0 + oidx])
+            self.ghost_rows[k] = np.concatenate(
+                [self.ghost_rows[k], rows[len(oidx):]])
+            self.ghost_gids[k] = np.concatenate(
+                [self.ghost_gids[k], gid0 + gidx])
+            owner_row_new[oidx] = rows[:len(oidx)]
+            touched.append(k)
+            # count promotions on owned copies only -- a shared (ghost)
+            # copy is promoted in every shard that holds it, and summing
+            # raw per-shard counts would double-count those points
+            nc_own = int((~np.isin(st["newly_core_arrival"],
+                                   self.ghost_rows[k])).sum())
+            per_shard.append({
+                "shard": k, "own": int(len(oidx)),
+                "ghost": int(len(gidx)), "newly_core_own": nc_own,
+                **{f: st[f] for f in ("touched_grids", "affected_grids",
+                                      "changed_grids", "newly_core",
+                                      "merge_checks", "dist_evals")}})
+        self.owner_shard = np.concatenate([self.owner_shard, owner])
+        self.owner_row = np.concatenate([self.owner_row, owner_row_new])
+        self.label_map.grow(self.next_label)
+        unions = self._reconcile(touched)
+        return {"inserted": m, "n": self.n, "shards_touched": touched,
+                "newly_core": int(sum(s["newly_core_own"]
+                                      for s in per_shard)),
+                "reconcile_unions": unions, "per_shard": per_shard,
+                "t_total": time.perf_counter() - t0}
+
+    def _reconcile(self, touched: List[int]) -> int:
+        """Incremental edge re-reconciliation over shared points.
+
+        For every ghost copy in (or owned by) a touched shard whose
+        authoritative copy is core, union the two copies' raw labels in
+        the global map.  Core witnesses only: a non-core shared point's
+        border labels are legitimately order-dependent and must never
+        merge clusters.
+        """
+        touched_set = set(touched)
+        if not touched_set:
+            return 0
+        lab_cache: Dict[int, np.ndarray] = {}
+        core_cache: Dict[int, np.ndarray] = {}
+
+        def lab_of(k: int) -> np.ndarray:
+            if k not in lab_cache:
+                lab_cache[k] = self.shards[k].labels_arrival()
+            return lab_cache[k]
+
+        def core_of(k: int) -> np.ndarray:
+            if k not in core_cache:
+                core_cache[k] = self.shards[k].core_arrival()
+            return core_cache[k]
+
+        unions = 0
+        for k in range(self.num_shards):
+            gg = self.ghost_gids[k]
+            if len(gg) == 0:
+                continue
+            own_s = self.owner_shard[gg]
+            if k in touched_set:
+                mask = np.ones(len(gg), bool)
+            else:
+                mask = np.isin(own_s, np.asarray(sorted(touched_set)))
+            if not mask.any():
+                continue
+            gr = self.ghost_rows[k][mask]
+            gid = gg[mask]
+            own_s = own_s[mask]
+            glab = lab_of(k)[gr]
+            for o in np.unique(own_s):
+                sel = own_s == o
+                orow = self.owner_row[gid[sel]]
+                olab = lab_of(int(o))[orow]
+                ocore = core_of(int(o))[orow]
+                ok = ocore & (olab >= 0) & (glab[sel] >= 0) \
+                    & (olab != glab[sel])
+                for a, b in zip(olab[ok], glab[sel][ok]):
+                    unions += self.label_map.union(int(a), int(b))
+        return int(unions)
+
+    # ------------------------------------------------------------------
+    # snapshot / restore
+    # ------------------------------------------------------------------
+
+    def snapshot(self) -> Dict[str, np.ndarray]:
+        """Flat-array serialization: per-shard ``GritIndex`` snapshots
+        (key-prefixed) + the routing/reconciliation state.  Directly
+        ``np.savez``-able, like the single-shard snapshot."""
+        snap: Dict[str, np.ndarray] = {
+            "sharded_version": np.asarray([_SHARDED_SNAPSHOT_VERSION],
+                                          np.int64),
+            "cuts": np.asarray(self.cuts, np.float64),
+            "scalars_f": np.asarray([self.eps], np.float64),
+            "scalars_i": np.asarray(
+                [self.min_pts, self.next_label, self.num_shards],
+                np.int64),
+            "label_parent": self.label_map.parent.copy(),
+            "owner_shard": self.owner_shard.copy(),
+            "owner_row": self.owner_row.copy(),
+        }
+        for k, idx in enumerate(self.shards):
+            for key, v in idx.snapshot().items():
+                snap[f"shard{k}.{key}"] = v
+            snap[f"shard{k}.own_rows"] = self.own_rows[k].copy()
+            snap[f"shard{k}.own_gids"] = self.own_gids[k].copy()
+            snap[f"shard{k}.ghost_rows"] = self.ghost_rows[k].copy()
+            snap[f"shard{k}.ghost_gids"] = self.ghost_gids[k].copy()
+        return snap
+
+    _EXTRA = ("own_rows", "own_gids", "ghost_rows", "ghost_gids")
+
+    @classmethod
+    def restore(cls, snap: Dict[str, np.ndarray]) -> "ShardedGritIndex":
+        version = int(np.asarray(snap["sharded_version"])[0])
+        if version != _SHARDED_SNAPSHOT_VERSION:
+            raise ValueError(f"sharded snapshot version {version} != "
+                             f"{_SHARDED_SNAPSHOT_VERSION}")
+        sf = np.asarray(snap["scalars_f"], np.float64)
+        si = np.asarray(snap["scalars_i"], np.int64)
+        K = int(si[2])
+        shards, own_rows, own_gids, ghost_rows, ghost_gids = \
+            [], [], [], [], []
+        for k in range(K):
+            prefix = f"shard{k}."
+            sub = {key[len(prefix):]: v for key, v in snap.items()
+                   if key.startswith(prefix)
+                   and key[len(prefix):] not in cls._EXTRA}
+            shards.append(GritIndex.restore(sub))
+            own_rows.append(np.asarray(snap[f"shard{k}.own_rows"],
+                                       np.int64))
+            own_gids.append(np.asarray(snap[f"shard{k}.own_gids"],
+                                       np.int64))
+            ghost_rows.append(np.asarray(snap[f"shard{k}.ghost_rows"],
+                                         np.int64))
+            ghost_gids.append(np.asarray(snap[f"shard{k}.ghost_gids"],
+                                         np.int64))
+        return cls(shards=shards,
+                   cuts=np.asarray(snap["cuts"], np.float64),
+                   eps=float(sf[0]), min_pts=int(si[0]),
+                   next_label=int(si[1]),
+                   label_map=LabelMap(int(si[1]),
+                                      parent=snap["label_parent"]),
+                   own_rows=own_rows, own_gids=own_gids,
+                   ghost_rows=ghost_rows, ghost_gids=ghost_gids,
+                   owner_shard=np.asarray(snap["owner_shard"], np.int64),
+                   owner_row=np.asarray(snap["owner_row"], np.int64))
+
+    def save(self, path) -> None:
+        np.savez(path, **self.snapshot())
+
+    @classmethod
+    def load(cls, path) -> "ShardedGritIndex":
+        with np.load(path) as data:
+            return cls.restore({k: data[k] for k in data.files})
+
+
+def fit_sharded(points, eps: float, min_pts: int, *,
+                n_shards: Optional[int] = None, mesh=None,
+                engine: Optional[str] = None,
+                **opts) -> ShardedGritIndex:
+    """Fit and shard in one call: distributed fit -> ShardedGritIndex.
+
+    With ``mesh``, the fit runs the distributed SPMD engine on it (the
+    adaptive-cap loop included) and the slab count follows the mesh
+    size; otherwise a single-process fit (``engine``, default the host
+    ``grit`` pipeline) is sharded host-side into ``n_shards`` slabs --
+    the same serving structure without multi-device hardware.
+    """
+    from repro.engine import cluster
+
+    pts = np.asarray(points, np.float64)
+    if mesh is not None:
+        res = cluster(pts, eps, min_pts, engine="distributed", mesh=mesh,
+                      **opts)
+        if n_shards is None:
+            n_shards = int(mesh.devices.size)
+    else:
+        res = cluster(pts, eps, min_pts, engine=engine or "grit", **opts)
+        if n_shards is None:
+            n_shards = 4
+    return ShardedGritIndex.from_global_fit(
+        pts, eps, min_pts, labels=res.labels, core=res.core,
+        n_shards=n_shards)

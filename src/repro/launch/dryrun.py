@@ -37,7 +37,7 @@ def run_cluster_cell(multi_pod: bool, *, n_points_shard: int = 4096,
     import jax.numpy as jnp
     from jax.sharding import NamedSharding, PartitionSpec as P
     from repro.launch.mesh import make_production_mesh
-    from repro.core.distributed import make_cluster_step, ClusterCaps
+    from repro.dist import make_cluster_step, ClusterCaps
     from repro.core.device_dbscan import GritCaps
     from repro.launch import hlo_analysis as H
     from repro.launch import hlo_costs

@@ -22,10 +22,18 @@ traffic against a fitted :class:`~repro.index.GritIndex`:
   while ``query_cap`` events record when traffic outgrew the admission
   tensor;
 * per-request latency (submit -> labels) and per-step occupancy are
-  recorded for the summary (p50/p95 latency, throughput).
+  recorded for the summary (p50/p95 latency, throughput);
+* the driver is index-agnostic: a :class:`~repro.index.ShardedGritIndex`
+  drops in as the backend unchanged -- its ``predict`` buckets the
+  step's batch by owning slab internally (one batched per-shard call)
+  and reports the routing counters (queries per slab, multi-routed
+  cut-band queries) through the same per-step ``stats`` channel, so the
+  step log shows slab occupancy next to slot occupancy.
 
 ``python -m repro.serve.driver --smoke`` runs a miniature server on a
-catalogue scenario: fit, then serve a stream of ragged query batches.
+catalogue scenario: fit, then serve a stream of ragged query batches;
+``--sharded N`` serves from an N-slab ``ShardedGritIndex`` instead of
+the single-host index (the distributed-serving backend).
 """
 
 from __future__ import annotations
@@ -175,6 +183,10 @@ def main() -> None:
     ap.add_argument("--max-queries", type=int, default=96)
     ap.add_argument("--mode", default="auto",
                     choices=("auto", "host", "kernel"))
+    ap.add_argument("--sharded", type=int, default=0, metavar="N",
+                    help="serve from an N-slab ShardedGritIndex "
+                         "(slab-routed predict) instead of the "
+                         "single-host index")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -186,14 +198,24 @@ def main() -> None:
     print(f"fitting {args.scenario} (n={len(pts)}, eps={sc.eps}, "
           f"min_pts={sc.min_pts}) with engine={args.engine}...")
     t0 = time.perf_counter()
-    res = cluster(pts, sc.eps, sc.min_pts, engine=args.engine,
-                  return_index=True)
-    print(f"  fit {time.perf_counter() - t0:.2f}s: "
-          f"{res.n_clusters} clusters, {res.index.num_grids} grids")
+    if args.sharded:
+        from repro.index import fit_sharded
+        index = fit_sharded(pts, sc.eps, sc.min_pts,
+                            n_shards=args.sharded, engine=args.engine)
+        print(f"  fit {time.perf_counter() - t0:.2f}s: "
+              f"{index.num_shards} slab shards "
+              f"(cuts at {np.round(index.cuts, 1).tolist()}), "
+              f"{index.num_grids} grids total")
+    else:
+        res = cluster(pts, sc.eps, sc.min_pts, engine=args.engine,
+                      return_index=True)
+        index = res.index
+        print(f"  fit {time.perf_counter() - t0:.2f}s: "
+              f"{res.n_clusters} clusters, {index.num_grids} grids")
 
     rng = np.random.default_rng(args.seed)
     n_req = 6 if args.smoke else args.num_requests
-    srv = ClusterServer(res.index, slots=args.slots, mode=args.mode)
+    srv = ClusterServer(index, slots=args.slots, mode=args.mode)
     for _ in range(n_req):
         m = int(rng.integers(4, args.max_queries + 1))
         near = pts[rng.integers(0, len(pts), m)] + rng.normal(
@@ -209,6 +231,13 @@ def main() -> None:
           f"cap growth events: {len(s['growth_events'])}")
     noise = sum(int((r.labels < 0).sum()) for r in srv.done)
     print(f"  noise rate {noise / max(s['queries'], 1):.2f}")
+    if args.sharded:
+        routed = sum(st["predict"].get("multi_routed", 0)
+                     for st in srv.step_log)
+        per_slab = np.sum([st["predict"].get("owned_per_shard", [])
+                           for st in srv.step_log], axis=0)
+        print(f"  slab routing: {per_slab.tolist()} owned/slab, "
+              f"{routed} cut-band queries consulted both neighbors")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,181 @@
+"""Distributed serving conformance on a real (>= 4-way) mesh.
+
+The acceptance bar of the sharded serving plane, exercised through the
+actual SPMD fit: ``fit_sharded(mesh=...)`` runs the distributed engine
+(shard_map + halo exchange + reconciliation) and shards the fitted
+state; then ``predict`` must equal the brute-oracle assignment rule and
+``insert`` + read-out must be label-conformant with a from-scratch
+``cluster()`` on the union set, on every distributed-serving scenario.
+
+Multi-device means subprocesses with
+``--xla_force_host_platform_device_count`` (the main pytest process
+must keep seeing exactly 1 device); all slow / nightly, like
+``tests/test_distributed.py``.  The single-process (host-sharded)
+equivalents run in tier-1 via ``tests/test_sharded_index.py``.
+"""
+
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+pytestmark = pytest.mark.slow
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def _run(snippet: str, devices: int = 4) -> str:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    env["PYTHONPATH"] = SRC
+    out = subprocess.run([sys.executable, "-c", textwrap.dedent(snippet)],
+                         env=env, capture_output=True, text=True,
+                         timeout=540)
+    assert out.returncode == 0, f"stderr:\n{out.stderr[-3000:]}"
+    return out.stdout
+
+
+def test_spmd_fit_returns_exact_core_flags_and_provenance():
+    """The SPMD step's per-shard core flags (unpermuted) must equal the
+    O(n^2) oracle, and the grid provenance must cover every point."""
+    out = _run("""
+        import numpy as np, jax
+        from repro.data.scenarios import get_scenario
+        from repro.dist import distributed_fit, ClusterCaps
+        from repro.engine import estimate_caps
+        from repro.core.validate import core_flags
+
+        mesh = jax.make_mesh((4,), ("shard",))
+        for name in ("cross-slab-2d", "cross-slab-3d"):
+            sc = get_scenario(name)
+            pts = sc.points()
+            caps = ClusterCaps(grit=estimate_caps(pts, sc.eps, sc.min_pts),
+                               halo_cap=512)
+            r = distributed_fit(pts, sc.eps, sc.min_pts, mesh, caps)
+            assert not r.report
+            np.testing.assert_array_equal(
+                r.core, core_flags(pts, sc.eps, sc.min_pts))
+            assert (r.point_grid >= 0).all()
+            assert set(np.unique(r.shard_of)) <= set(range(4))
+            assert len(r.cut_coords) == 3
+            print(name, "CORE OK")
+    """)
+    assert out.count("CORE OK") == 2
+
+
+def test_mesh_fit_sharded_predict_matches_oracle_rule():
+    """Acceptance: ShardedGritIndex.predict ≡ the brute-oracle
+    assignment rule on every distributed-serving scenario, fitted on a
+    4-way mesh."""
+    out = _run("""
+        import numpy as np, jax
+        from repro.data.scenarios import dist_serving_scenarios
+        from repro.index import fit_sharded
+        from repro.core.validate import core_flags
+
+        mesh = jax.make_mesh((4,), ("shard",))
+        for ss in dist_serving_scenarios():
+            pts = ss.fit_points()
+            eps, mp = ss.base.eps, ss.base.min_pts
+            sidx = fit_sharded(pts, eps, mp, mesh=mesh)
+            assert sidx.num_shards >= 2
+            q = ss.query_batch()
+            got = sidx.predict(q, mode="host")
+            core = core_flags(pts, eps, mp)
+            cpts = pts[core]
+            clab = sidx.labels_arrival()[core]
+            eps2 = eps * eps
+            for i, qq in enumerate(q):
+                d2 = ((cpts - qq) ** 2).sum(1)
+                j = d2.argmin()
+                if d2[j] <= eps2:
+                    valid = set(clab[d2 == d2[j]].tolist())
+                    assert got[i] in valid, (ss.name, i, got[i], valid)
+                else:
+                    assert got[i] == -1, (ss.name, i, got[i])
+            print(ss.name, "PREDICT OK")
+    """)
+    assert out.count("PREDICT OK") == 3
+
+
+def test_mesh_fit_sharded_insert_matches_recluster():
+    """Acceptance: insert + read-out ≡ from-scratch cluster() on the
+    union set (canonicalized, contested borders excepted) after every
+    micro-batch, fitted on a 4-way mesh."""
+    out = _run("""
+        import numpy as np, jax
+        from repro.data.scenarios import dist_serving_scenarios
+        from repro.index import fit_sharded
+        from repro.core.dbscan import brute_dbscan
+        from repro.core.validate import assert_labels_conformant, core_flags
+
+        mesh = jax.make_mesh((4,), ("shard",))
+        for ss in dist_serving_scenarios():
+            pts = ss.fit_points()
+            eps, mp = ss.base.eps, ss.base.min_pts
+            sidx = fit_sharded(pts, eps, mp, mesh=mesh)
+            done = []
+            for b in ss.insert_batches():
+                sidx.insert(b)
+                done.append(b)
+                union = np.concatenate([pts] + done)
+                ref = brute_dbscan(union, eps, mp)
+                assert_labels_conformant(union, eps, mp, ref,
+                                         sidx.labels_arrival())
+                np.testing.assert_array_equal(
+                    sidx.core_arrival(), core_flags(union, eps, mp))
+            print(ss.name, "INSERT OK")
+    """)
+    assert out.count("INSERT OK") == 3
+
+
+def test_mesh_fit_snapshot_serves_in_fresh_process_shape():
+    """Distributed fit -> snapshot -> restore -> serve: the restored
+    index must answer exactly like the fitted one and keep accepting
+    inserts (the ship-between-processes story)."""
+    out = _run("""
+        import io
+        import numpy as np, jax
+        from repro.data.scenarios import get_dist_serving_scenario
+        from repro.index import ShardedGritIndex, fit_sharded
+
+        mesh = jax.make_mesh((4,), ("shard",))
+        ss = get_dist_serving_scenario("slab-serve-2d")
+        pts = ss.fit_points()
+        sidx = fit_sharded(pts, ss.base.eps, ss.base.min_pts, mesh=mesh)
+        buf = io.BytesIO()
+        sidx.save(buf)
+        buf.seek(0)
+        sidx2 = ShardedGritIndex.load(buf)
+        q = ss.query_batch()
+        np.testing.assert_array_equal(sidx.predict(q, mode="host"),
+                                      sidx2.predict(q, mode="host"))
+        sidx2.insert(ss.insert_batches()[0])
+        print("SNAPSHOT OK")
+    """)
+    assert "SNAPSHOT OK" in out
+
+
+def test_distributed_engine_kernel_plane_on_mesh():
+    """use_kernels=True threads through ClusterCaps into every shard's
+    local pipeline (the tiled non-TPU fast path here) and stays exact."""
+    out = _run("""
+        import numpy as np, jax
+        from repro.data.scenarios import get_scenario
+        from repro.engine import cluster
+        from repro.core.dbscan import brute_dbscan
+        from repro.core.validate import assert_dbscan_equivalent
+
+        sc = get_scenario("cross-slab-2d")
+        pts = sc.points()
+        res = cluster(pts, sc.eps, sc.min_pts, engine="distributed",
+                      use_kernels=True)
+        assert res.stats["use_kernels"] is True
+        assert res.stats["n_shards"] == 4
+        ref = brute_dbscan(pts, sc.eps, sc.min_pts)
+        assert_dbscan_equivalent(pts, sc.eps, sc.min_pts, ref, res.labels)
+        print("KERNEL PLANE OK")
+    """)
+    assert "KERNEL PLANE OK" in out

@@ -1,0 +1,173 @@
+"""Unit tests for the dist package plumbing (single device, fast).
+
+The SPMD program itself needs >1 device and lives in
+``tests/test_distributed.py`` / ``tests/test_dist_serve.py`` (slow);
+everything here is host logic or per-shard device code that runs fine
+on one CPU device: slab cuts / vectorized pack+unpack, the halo buffer
+(including ``halo_cap > n_points_shard``), and the step cache's
+oldest-entry eviction.
+"""
+
+import numpy as np
+import pytest
+
+import repro.dist.step as dist_step
+from repro.dist import (halo_bound, halo_buffer, owner_of_slab,
+                        shard_points_by_slab, slab_cuts)
+from repro.dist.sharding import unshard_by_perm
+
+
+# --------------------------------------------------------------------------
+# slab cuts + pack/unpack
+# --------------------------------------------------------------------------
+
+def _reference_cuts(points, eps, n_shards):
+    """The original per-shard loop (pre-vectorization), as the oracle."""
+    pts = np.asarray(points, np.float64)
+    n, d = pts.shape
+    side = eps / np.sqrt(d)
+    key = np.floor((pts[:, 0] - pts[:, 0].min()) / side).astype(np.int64)
+    order = np.argsort(key, kind="stable")
+    cuts = [0]
+    for s in range(1, n_shards):
+        tgt = s * n // n_shards
+        while tgt < n and tgt > cuts[-1] and \
+                key[order[tgt]] == key[order[tgt - 1]]:
+            tgt += 1
+        cuts.append(min(tgt, n))
+    return order, cuts[1:]
+
+
+@pytest.mark.parametrize("n_shards", [2, 3, 4, 7])
+@pytest.mark.parametrize("seed", [0, 1])
+def test_slab_cuts_match_loop_reference(n_shards, seed):
+    rng = np.random.default_rng(seed)
+    pts = rng.uniform(0, 1000, size=(257, 3))
+    eps = 40.0
+    order, cut_idx, cut_coords = slab_cuts(pts, eps, n_shards)
+    ref_order, ref_cuts = _reference_cuts(pts, eps, n_shards)
+    np.testing.assert_array_equal(order, ref_order)
+    np.testing.assert_array_equal(cut_idx, ref_cuts)
+    # coordinate routing agrees with index-based slab membership
+    owner = owner_of_slab(pts[:, 0], cut_coords[np.isfinite(cut_coords)])
+    starts = np.concatenate([[0], cut_idx])
+    ends = np.concatenate([cut_idx, [len(pts)]])
+    ref_owner = np.empty(len(pts), np.int64)
+    for s in range(n_shards):
+        ref_owner[order[starts[s]:ends[s]]] = s
+    np.testing.assert_array_equal(owner, ref_owner)
+
+
+def test_slab_cuts_duplicate_keys_stay_on_grid_lines():
+    """Many points sharing one grid column: a cut may never split a
+    column, even when that forces unbalanced (or empty) slabs."""
+    pts = np.zeros((60, 2))
+    pts[:30, 0] = 10.0       # one dense column
+    pts[30:, 0] = 500.0      # another
+    _, cut_idx, _ = slab_cuts(pts, 20.0, 4)
+    assert set(cut_idx.tolist()) <= {0, 30, 60}
+
+
+def test_shard_points_roundtrip():
+    rng = np.random.default_rng(3)
+    pts = rng.uniform(0, 500, size=(123, 2))
+    sh, valid, perm = shard_points_by_slab(pts, 25.0, 4)
+    assert sh.shape[0] == 4 and valid.shape == sh.shape[:2]
+    # every point appears exactly once, at its permuted slot
+    got = unshard_by_perm(sh.astype(np.float64), perm, len(pts))
+    np.testing.assert_allclose(got, pts, rtol=1e-6)
+    assert valid.sum() == len(pts)
+    # pad_to smaller than the largest slab must raise, larger must pad
+    with pytest.raises(ValueError, match="pad_to"):
+        shard_points_by_slab(pts, 25.0, 4, pad_to=2)
+    sh2, valid2, _ = shard_points_by_slab(pts, 25.0, 4, pad_to=64)
+    assert sh2.shape[1] == 64 and valid2.sum() == len(pts)
+
+
+def test_halo_bound_is_window_maximum():
+    pts = np.array([[0.0], [1.0], [1.5], [10.0], [10.4], [10.8], [30.0]])
+    # densest [x, x + 2*eps] window: {0.0, 1.0, 1.5} (and {10.0..10.8})
+    assert halo_bound(pts, 1.0) == 3
+    # 2*eps=10: [1.0, 11.0] spans {1.0, 1.5, 10.0, 10.4, 10.8}
+    assert halo_bound(pts, 5.0) == 5
+
+
+# --------------------------------------------------------------------------
+# halo buffer (device helper, runs on 1 CPU device)
+# --------------------------------------------------------------------------
+
+def _halo_case(n, cap, eps=1.0):
+    rng = np.random.default_rng(0)
+    pts = np.sort(rng.uniform(0, 10, size=(n, 1)), axis=0)
+    pts = np.concatenate([pts, np.full((n, 1), 5.0)], axis=1)
+    valid = np.ones(n, bool)
+    buf, idx, ovf = halo_buffer(np.asarray(pts, np.float32), valid, eps,
+                                "lo", cap)
+    want = np.flatnonzero(pts[:, 0] <= pts[:, 0].min() + 2 * eps)
+    return np.asarray(buf), np.asarray(idx), bool(ovf), want
+
+
+def test_halo_buffer_selects_boundary_points():
+    buf, idx, ovf, want = _halo_case(n=32, cap=16)
+    got = np.sort(idx[idx >= 0])
+    np.testing.assert_array_equal(got, want)
+    assert not ovf
+
+
+def test_halo_buffer_cap_exceeding_shard_size():
+    """Satellite: ``halo_cap > n_points_shard`` pads the tail instead
+    of reading out of bounds, and can never report overflow."""
+    from repro.core.device_dbscan import PAD_COORD
+
+    buf, idx, ovf, want = _halo_case(n=12, cap=64)
+    assert buf.shape == (64, 2) and idx.shape == (64,)
+    got = np.sort(idx[idx >= 0])
+    np.testing.assert_array_equal(got, want)
+    assert not ovf
+    # the tail beyond any selectable point is explicit padding
+    assert (idx[len(want):] == -1).all()
+    assert (buf[len(want):] >= PAD_COORD / 2).all()
+
+
+def test_halo_buffer_overflow_flag():
+    buf, idx, ovf, want = _halo_case(n=32, cap=2)
+    assert len(want) > 2
+    assert ovf
+    assert (idx >= 0).sum() == 2     # compacted front, fixed cap
+
+
+# --------------------------------------------------------------------------
+# step cache: oldest-entry eviction (satellite)
+# --------------------------------------------------------------------------
+
+def test_step_cache_evicts_oldest_not_everything(monkeypatch):
+    """An adaptive-cap retry alternates between at most two step keys;
+    eviction at capacity must drop the *oldest* entry (wholesale
+    clear() used to evict the step the retry was about to reuse)."""
+    built = []
+
+    monkeypatch.setattr(dist_step, "_STEP_CACHE", {})
+    monkeypatch.setattr(dist_step, "_STEP_CACHE_MAX", 4)
+    monkeypatch.setattr(
+        dist_step, "make_cluster_step",
+        lambda mesh, eps, min_pts, caps, n, d:
+        built.append((mesh, eps)) or (lambda *a: ("step", mesh, eps)))
+    monkeypatch.setattr(dist_step.jax, "jit", lambda fn: fn)
+
+    def get(i):
+        return dist_step.cached_cluster_step(f"mesh{i}", float(i), 5,
+                                             ("caps",), 128, 2)
+
+    for i in range(4):
+        get(i)
+    assert len(built) == 4
+    get(0)                       # touch the oldest: now newest again
+    get(4)                       # at capacity: evicts mesh1 (oldest)
+    assert len(built) == 5
+    get(0)                       # still cached (no rebuild)
+    get(4)                       # still cached
+    assert len(built) == 5
+    get(1)                       # evicted: rebuilds
+    assert len(built) == 6
+    # capacity is respected
+    assert len(dist_step._STEP_CACHE) <= 4

@@ -46,7 +46,7 @@ def test_distributed_dbscan_exact_vs_brute():
                                          k_cap=64, c_cap=2048, m_cap=1024,
                                          pair_cap=4096, grid_block=64,
                                          pair_block=256),
-                           halo_cap=512, edge_cap=2048)
+                           halo_cap=512)
         for d, seed in [(2, 0), (3, 1), (5, 2)]:
             pts = seed_spreader(800, d, variant="simden", restarts=5,
                                 seed=seed)
@@ -80,7 +80,7 @@ def test_cluster_spanning_all_shards():
                                          k_cap=64, c_cap=2048, m_cap=1024,
                                          pair_cap=4096, grid_block=64,
                                          pair_block=256),
-                           halo_cap=512, edge_cap=2048)
+                           halo_cap=512)
         eps, min_pts = 2500.0, 5
         labels, ovf = distributed_dbscan(pts, eps, min_pts, mesh, caps)
         assert not ovf

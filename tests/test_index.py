@@ -357,6 +357,24 @@ def test_fit_index_helper():
     assert isinstance(idx, GritIndex) and idx.n == len(pts)
 
 
+def test_return_index_distributed_engine_carries_core():
+    """The distributed engine now reports exact core flags (the SPMD
+    step returns them per shard), so return_index must consume them
+    directly instead of the grid-based fallback identification."""
+    sc = scenario_map()["cross-slab-2d"]
+    pts = sc.points()
+    res = cluster(pts, sc.eps, sc.min_pts, engine="distributed",
+                  return_index=True)
+    assert res.core is not None, \
+        "distributed result must carry core flags"
+    np.testing.assert_array_equal(res.core,
+                                  core_flags(pts, sc.eps, sc.min_pts))
+    idx = res.index
+    np.testing.assert_array_equal(idx.core_arrival(), res.core)
+    ci = int(np.flatnonzero(res.core)[0])
+    assert idx.predict(pts[ci:ci + 1], mode="host")[0] == res.labels[ci]
+
+
 def test_cluster_result_carries_provenance():
     """Satellite: core indices + grid provenance ride on ClusterResult
     so downstream tooling does not re-derive them."""

@@ -118,3 +118,47 @@ def test_server_idle_step_is_noop(served_index):
     srv = ClusterServer(idx)
     assert srv.step() == []
     assert srv.step_log == []
+
+
+# --------------------------------------------------------------------------
+# sharded backend: the driver is index-agnostic
+# --------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def sharded_index():
+    from repro.data.scenarios import get_dist_serving_scenario
+    from repro.index import fit_sharded
+
+    ss = get_dist_serving_scenario("slab-serve-2d")
+    pts = ss.fit_points()
+    sidx = fit_sharded(pts, ss.base.eps, ss.base.min_pts, n_shards=4,
+                       engine="grit")
+    return ss, sidx
+
+
+def test_server_sharded_backend_matches_direct_predict(sharded_index):
+    """A ShardedGritIndex drops into the driver unchanged: per-request
+    labels equal a direct slab-routed predict, and the step log carries
+    the slab-routing counters."""
+    ss, sidx = sharded_index
+    reqs = _ragged_requests(ss, 7, [11, 29, 4, 17])
+    srv = ClusterServer(sidx, slots=3, mode="host")
+    rids = [srv.submit(r) for r in reqs]
+    done = srv.run()
+    assert sorted(r.rid for r in done) == rids
+    for r, pts in zip(sorted(done, key=lambda r: r.rid), reqs):
+        np.testing.assert_array_equal(r.labels,
+                                      sidx.predict(pts, mode="host"))
+    for s in srv.step_log:
+        assert s["predict"]["shards"] == sidx.num_shards
+        assert sum(s["predict"]["owned_per_shard"]) == s["queries"]
+
+
+def test_server_sharded_routes_cut_band_queries(sharded_index):
+    """Slab-band traffic (the scenario's query mix) must show up as
+    multi-routed queries in the serve-step stats."""
+    ss, sidx = sharded_index
+    srv = ClusterServer(sidx, slots=2, mode="host")
+    srv.submit(ss.query_batch(seed=1))
+    srv.run()
+    assert sum(s["predict"]["multi_routed"] for s in srv.step_log) > 0

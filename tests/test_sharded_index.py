@@ -1,0 +1,391 @@
+"""Sharded serving-plane conformance (single process, host-sharded).
+
+The acceptance bar mirrors the single-shard index suite, on the
+distributed-serving scenarios: ``ShardedGritIndex.predict`` must equal
+the brute-oracle assignment rule (cut-band queries included -- the ones
+routed to two shards), ``insert`` + read-out must be label-conformant
+with a from-scratch ``cluster()`` on the union set (canonicalized,
+contested borders excepted), and snapshots must round-trip.  The
+true-mesh (>= 4 device) path of the same checks lives in
+``tests/test_dist_serve.py`` (slow / nightly).
+"""
+
+import io
+
+import numpy as np
+import pytest
+
+from repro.core.dbscan import brute_dbscan
+from repro.core.validate import assert_labels_conformant, core_flags
+from repro.data.scenarios import (dist_serving_scenarios,
+                                  get_dist_serving_scenario)
+from repro.index import GritIndex, ShardedGritIndex, fit_sharded
+
+DIST_SERVING = sorted(s.name for s in dist_serving_scenarios())
+
+
+@pytest.fixture(scope="module")
+def fitted():
+    """One sharded index + base fit per scenario (module memo)."""
+    cache = {}
+
+    def get(name, n_shards=4):
+        key = (name, n_shards)
+        if key not in cache:
+            ss = get_dist_serving_scenario(name)
+            pts = ss.fit_points()
+            sidx = fit_sharded(pts, ss.base.eps, ss.base.min_pts,
+                               n_shards=n_shards, engine="grit")
+            cache[key] = (ss, pts, sidx)
+        return cache[key]
+
+    return get
+
+
+def _oracle_assign(pts, core, labels, queries, eps):
+    """Reference assignment: (labels, set-of-valid-labels-per-query)."""
+    cpts = pts[core]
+    clab = np.asarray(labels)[core]
+    eps2 = float(eps) ** 2
+    out = np.full(len(queries), -1, np.int64)
+    valid = []
+    for i, q in enumerate(queries):
+        d2 = ((cpts - q) ** 2).sum(axis=1)
+        j = d2.argmin()
+        if d2[j] <= eps2:
+            out[i] = clab[j]
+            valid.append(set(clab[d2 == d2[j]].tolist()))
+        else:
+            valid.append({-1})
+    return out, valid
+
+
+# --------------------------------------------------------------------------
+# fit: sharded read-out == global fit
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", DIST_SERVING)
+def test_fit_readout_conformant(name, fitted):
+    ss, pts, sidx = fitted(name)
+    ref = brute_dbscan(pts, ss.base.eps, ss.base.min_pts)
+    assert_labels_conformant(pts, ss.base.eps, ss.base.min_pts, ref,
+                             sidx.labels_arrival())
+    np.testing.assert_array_equal(
+        sidx.core_arrival(),
+        core_flags(pts, ss.base.eps, ss.base.min_pts))
+
+
+def test_slabs_are_nonempty_and_ordered(fitted):
+    _, pts, sidx = fitted("slab-serve-2d")
+    assert sidx.num_shards >= 2
+    assert (np.diff(sidx.cuts) > 0).all()
+    for k in range(sidx.num_shards):
+        assert len(sidx.own_rows[k]) > 0
+    # every point owned exactly once
+    all_gids = np.concatenate(sidx.own_gids)
+    assert len(all_gids) == len(pts)
+    assert len(np.unique(all_gids)) == len(pts)
+
+
+# --------------------------------------------------------------------------
+# predict
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", DIST_SERVING)
+def test_predict_matches_oracle_rule(name, fitted):
+    """Acceptance: slab-routed predict == brute-oracle assignment for
+    the full query mix, cut-band queries included."""
+    ss, pts, sidx = fitted(name)
+    q = ss.query_batch()
+    stats = {}
+    got = sidx.predict(q, mode="host", stats=stats)
+    core = core_flags(pts, ss.base.eps, ss.base.min_pts)
+    ref, valid = _oracle_assign(pts, core, sidx.labels_arrival(), q,
+                                ss.base.eps)
+    for i in range(len(q)):
+        assert got[i] in valid[i], \
+            f"query {i}: predicted {got[i]}, oracle allows {valid[i]}"
+    np.testing.assert_array_equal(got == -1, ref == -1)
+    # the slab-band half of the mix must actually exercise the
+    # consult-both-neighbors routing
+    assert stats["multi_routed"] > 0
+    assert stats["consulted"] == sum(stats["per_shard"])
+
+
+def test_predict_owner_only_away_from_cuts(fitted):
+    """Queries far from every cut are served by exactly one shard."""
+    ss, pts, sidx = fitted("slab-serve-2d")
+    eps = ss.base.eps
+    mid = (np.concatenate([[pts[:, 0].min()], sidx.cuts])
+           + np.concatenate([sidx.cuts, [pts[:, 0].max()]])) / 2
+    ok = [m for m in mid
+          if (np.abs(sidx.cuts - m) > 2.5 * eps).all()]
+    assert ok, "slabs too narrow for this scenario's eps"
+    q = np.column_stack([np.repeat(ok, 3),
+                         np.tile(pts[:3, 1], len(ok))])
+    stats = {}
+    sidx.predict(q, mode="host", stats=stats)
+    assert stats["multi_routed"] == 0
+    assert stats["consulted"] == len(q)
+
+
+def test_predict_outside_slab_range(fitted):
+    """Queries beyond the first/last cut route to the end slabs; far
+    away they are noise, within eps of edge points they are labeled."""
+    ss, pts, sidx = fitted("slab-serve-2d")
+    rng = np.random.default_rng(5)
+    far = rng.uniform(-7e5, -5e5, size=(12, sidx.d))
+    np.testing.assert_array_equal(sidx.predict(far, mode="host"),
+                                  np.full(12, -1))
+    core = core_flags(pts, ss.base.eps, ss.base.min_pts)
+    ci = int(np.flatnonzero(core)[0])
+    assert sidx.predict(pts[ci:ci + 1], mode="host")[0] == \
+        sidx.labels_arrival()[ci]
+
+
+def test_predict_kernel_mode_matches_host(fitted):
+    """The kernel predict path routes per shard exactly like host mode
+    (f32 knife-edge queries excluded, as in the single-shard suite)."""
+    ss, pts, sidx = fitted("slab-serve-2d")
+    q = ss.query_batch()
+    host = sidx.predict(q, mode="host")
+    kern = sidx.predict(q, mode="kernel")
+    core = core_flags(pts, ss.base.eps, ss.base.min_pts)
+    cpts = pts[core]
+    eps = ss.base.eps
+    decidable = np.ones(len(q), bool)
+    for i, qq in enumerate(q):
+        dmin = np.sqrt(((cpts - qq) ** 2).sum(axis=1).min())
+        decidable[i] = abs(dmin - eps) > 1e-5 * eps
+    np.testing.assert_array_equal(host[decidable], kern[decidable])
+
+
+def test_predict_validates_inputs(fitted):
+    _, _, sidx = fitted("slab-serve-2d")
+    with pytest.raises(ValueError, match="queries must be"):
+        sidx.predict(np.zeros((3, sidx.d + 2)))
+    bad = np.zeros((2, sidx.d))
+    bad[1, 0] = np.nan
+    with pytest.raises(ValueError, match="non-finite"):
+        sidx.predict(bad)
+    assert sidx.predict(np.zeros((0, sidx.d))).shape == (0,)
+
+
+# --------------------------------------------------------------------------
+# insert + re-reconciliation
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", DIST_SERVING)
+def test_insert_matches_from_scratch_recluster(name, fitted):
+    """Acceptance: insert + read-out ≡ cluster() on the union set, with
+    batches engineered to straddle cuts (cross-shard merges)."""
+    ss, pts, _ = fitted(name)
+    sidx = fit_sharded(pts, ss.base.eps, ss.base.min_pts, n_shards=4,
+                       engine="grit")      # fresh: do not mutate fixture
+    batches = ss.insert_batches()
+    for b in batches:
+        st = sidx.insert(b)
+        assert st["inserted"] == len(b)
+    union = np.concatenate([pts] + batches)
+    assert sidx.n == len(union)
+    ref = brute_dbscan(union, ss.base.eps, ss.base.min_pts)
+    assert_labels_conformant(union, ss.base.eps, ss.base.min_pts, ref,
+                             sidx.labels_arrival())
+    np.testing.assert_array_equal(
+        sidx.core_arrival(),
+        core_flags(union, ss.base.eps, ss.base.min_pts))
+
+
+def test_insert_bridge_across_cut_merges_labels(fitted):
+    """A dense bridge laid across a cut must union the two sides'
+    cluster ids through the global label map (not per-shard arrays)."""
+    ss, pts, _ = fitted("slab-serve-2d")
+    eps, min_pts = ss.base.eps, ss.base.min_pts
+    sidx = fit_sharded(pts, eps, min_pts, n_shards=4, engine="grit")
+    cut = sidx.cuts[1]
+    # two dense blobs straddling the cut, linked by a chain across it
+    rng = np.random.default_rng(9)
+    y = float(pts[:, 1].mean())
+    left = np.column_stack([
+        rng.uniform(cut - 6 * eps, cut - 5 * eps, 4 * min_pts),
+        rng.uniform(y - 0.2 * eps, y + 0.2 * eps, 4 * min_pts)])
+    right = np.column_stack([
+        rng.uniform(cut + 5 * eps, cut + 6 * eps, 4 * min_pts),
+        rng.uniform(y - 0.2 * eps, y + 0.2 * eps, 4 * min_pts)])
+    xs = np.arange(cut - 5 * eps, cut + 5 * eps, 0.5 * eps)
+    chain = np.column_stack([xs, np.full(len(xs), y)])
+    chain = np.repeat(chain, min_pts, axis=0) + rng.normal(
+        scale=0.05 * eps, size=(len(xs) * min_pts, 2))
+    sidx.insert(np.concatenate([left, right]))
+    la = sidx.labels_arrival()
+    l_left = la[len(pts):len(pts) + len(left)]
+    l_right = la[len(pts) + len(left):]
+    assert (l_left >= 0).all() and (l_right >= 0).all()
+    st = sidx.insert(chain)
+    assert st["reconcile_unions"] >= 1
+    la = sidx.labels_arrival()
+    merged = set(la[len(pts):len(pts) + len(left) + len(right)].tolist())
+    assert len(merged) == 1, f"bridge left {merged} distinct labels"
+    # and the full state is still exactly a from-scratch clustering
+    union = np.concatenate([pts, left, right, chain])
+    ref = brute_dbscan(union, eps, min_pts)
+    assert_labels_conformant(union, eps, min_pts, ref,
+                             sidx.labels_arrival())
+
+
+def test_insert_confined_to_touched_shards(fitted):
+    """A batch deep inside one slab must touch only that shard."""
+    ss, pts, _ = fitted("slab-serve-2d")
+    eps = ss.base.eps
+    sidx = fit_sharded(pts, eps, ss.base.min_pts, n_shards=4,
+                       engine="grit")
+    lo = sidx.cuts[0] + 3 * eps
+    hi = sidx.cuts[1] - 3 * eps
+    assert hi > lo, "slab too narrow for a deep-interior batch"
+    rng = np.random.default_rng(3)
+    batch = np.column_stack([
+        rng.uniform(lo, hi, 12),
+        rng.uniform(pts[:, 1].min(), pts[:, 1].max(), 12)])
+    before = [s.n for s in sidx.shards]
+    st = sidx.insert(batch)
+    assert st["shards_touched"] == [1]
+    after = [s.n for s in sidx.shards]
+    assert after[1] == before[1] + 12
+    assert [a for i, a in enumerate(after) if i != 1] == \
+        [b for i, b in enumerate(before) if i != 1]
+
+
+def test_insert_outside_slab_range_extends_end_slabs(fitted):
+    ss, pts, _ = fitted("slab-serve-2d")
+    eps, min_pts = ss.base.eps, ss.base.min_pts
+    sidx = fit_sharded(pts, eps, min_pts, n_shards=3, engine="grit")
+    rng = np.random.default_rng(11)
+    below = pts.min(axis=0) - 8 * eps
+    above = pts.max(axis=0) + 8 * eps
+    batch = np.concatenate([
+        below[None, :] + rng.uniform(0, eps, size=(6, sidx.d)),
+        above[None, :] + rng.uniform(0, eps, size=(6, sidx.d))])
+    st = sidx.insert(batch)
+    assert set(st["shards_touched"]) == {0, sidx.num_shards - 1}
+    union = np.concatenate([pts, batch])
+    ref = brute_dbscan(union, eps, min_pts)
+    assert_labels_conformant(union, eps, min_pts, ref,
+                             sidx.labels_arrival())
+
+
+def test_insert_validates_inputs(fitted):
+    _, _, sidx0 = fitted("slab-serve-2d")
+    sidx = ShardedGritIndex.restore(sidx0.snapshot())
+    with pytest.raises(ValueError, match="insert batch"):
+        sidx.insert(np.zeros((3, sidx.d + 1)))
+    bad = np.zeros((2, sidx.d))
+    bad[0, 1] = np.inf
+    with pytest.raises(ValueError, match="non-finite"):
+        sidx.insert(bad)
+    st = sidx.insert(np.zeros((0, sidx.d)))
+    assert st["inserted"] == 0 and st["newly_core"] == 0
+    assert st["shards_touched"] == [] and "t_total" in st
+
+
+# --------------------------------------------------------------------------
+# snapshot / restore
+# --------------------------------------------------------------------------
+
+def test_snapshot_roundtrip(fitted):
+    ss, pts, sidx = fitted("slab-serve-3d")
+    snap = sidx.snapshot()
+    assert all(isinstance(v, np.ndarray) for v in snap.values()), \
+        "sharded snapshot must be flat numpy arrays (savez-able)"
+    buf = io.BytesIO()
+    sidx.save(buf)
+    buf.seek(0)
+    sidx2 = ShardedGritIndex.load(buf)
+    assert sidx2.num_shards == sidx.num_shards
+    np.testing.assert_array_equal(sidx2.cuts, sidx.cuts)
+    np.testing.assert_array_equal(sidx2.labels_arrival(),
+                                  sidx.labels_arrival())
+    q = ss.query_batch()
+    np.testing.assert_array_equal(sidx.predict(q, mode="host"),
+                                  sidx2.predict(q, mode="host"))
+    # a restored index must keep serving inserts exactly
+    b = ss.insert_batches()[0]
+    sidx2.insert(b)
+    union = np.concatenate([pts, b])
+    ref = brute_dbscan(union, ss.base.eps, ss.base.min_pts)
+    assert_labels_conformant(union, ss.base.eps, ss.base.min_pts, ref,
+                             sidx2.labels_arrival())
+
+
+def test_snapshot_version_checked(fitted):
+    _, _, sidx = fitted("slab-serve-2d")
+    snap = sidx.snapshot()
+    snap["sharded_version"] = np.asarray([99], np.int64)
+    with pytest.raises(ValueError, match="sharded snapshot version"):
+        ShardedGritIndex.restore(snap)
+
+
+# --------------------------------------------------------------------------
+# construction edge cases
+# --------------------------------------------------------------------------
+
+def test_single_shard_degenerates_to_plain_index_semantics():
+    rng = np.random.default_rng(0)
+    pts = rng.uniform(0, 100, size=(150, 2))
+    sidx = fit_sharded(pts, 5.0, 4, n_shards=1)
+    assert sidx.num_shards == 1 and len(sidx.cuts) == 0
+    ref = brute_dbscan(pts, 5.0, 4)
+    assert_labels_conformant(pts, 5.0, 4, ref, sidx.labels_arrival())
+
+
+def test_empty_slabs_coalesce():
+    """Data concentrated in a narrow dim-0 range cannot fill many
+    slabs; empty ones must coalesce rather than produce empty shards."""
+    rng = np.random.default_rng(2)
+    pts = np.column_stack([rng.uniform(50, 52, 120),
+                           rng.uniform(0, 100, 120)])
+    sidx = fit_sharded(pts, 8.0, 4, n_shards=6)
+    assert sidx.num_shards >= 1
+    for k in range(sidx.num_shards):
+        assert len(sidx.own_rows[k]) > 0
+    ref = brute_dbscan(pts, 8.0, 4)
+    assert_labels_conformant(pts, 8.0, 4, ref, sidx.labels_arrival())
+
+
+def test_fit_sharded_from_device_engine():
+    """The sharded build consumes any engine's global fit (core flags
+    ride on the result; the device engine exercises the non-host path)."""
+    rng = np.random.default_rng(4)
+    pts = rng.uniform(0, 100, size=(200, 2))
+    sidx = fit_sharded(pts, 6.0, 4, n_shards=3, engine="device")
+    ref = brute_dbscan(pts, 6.0, 4)
+    assert_labels_conformant(pts, 6.0, 4, ref, sidx.labels_arrival())
+
+
+# --------------------------------------------------------------------------
+# satellite: GritIndex fallback core identification (no core flags)
+# --------------------------------------------------------------------------
+
+def test_from_fit_without_core_flags_identifies_cores():
+    """A result arriving without core flags (core=None) triggers the
+    grid-based identification path; it must reproduce the O(n^2)
+    oracle's flags exactly and leave predict unchanged."""
+    rng = np.random.default_rng(7)
+    pts = np.concatenate([
+        rng.normal(50, 3.0, size=(120, 2)),
+        rng.uniform(0, 100, size=(40, 2))])
+    eps, min_pts = 4.0, 5
+    ref = brute_dbscan(pts, eps, min_pts)
+    idx = GritIndex.from_fit(pts, eps, min_pts, labels=ref, core=None)
+    np.testing.assert_array_equal(idx.core_arrival(),
+                                  core_flags(pts, eps, min_pts))
+    # and the sharded build accepts core=None the same way
+    sidx = ShardedGritIndex.from_global_fit(pts, eps, min_pts,
+                                            labels=ref, core=None,
+                                            n_shards=3)
+    np.testing.assert_array_equal(sidx.core_arrival(),
+                                  core_flags(pts, eps, min_pts))
+    q = pts[:16] + rng.normal(scale=0.1 * eps, size=(16, 2))
+    with_core = GritIndex.from_fit(pts, eps, min_pts, labels=ref,
+                                   core=core_flags(pts, eps, min_pts))
+    np.testing.assert_array_equal(idx.predict(q, mode="host"),
+                                  with_core.predict(q, mode="host"))
