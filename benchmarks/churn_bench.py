@@ -1,0 +1,119 @@
+"""Churn-plane benchmark: steady-state mixed predict/insert/delete
+traffic against the fitted index vs a refit per batch (the
+BENCH_5.json perf-trajectory artifact).
+
+The delta engine exists so that *mutating* traffic -- TTL expiry, GDPR
+erasure, sliding-window streams -- does not cost a refit; this bench
+quantifies that at paper scale (n = 1e5 blobs by default):
+
+* ``fit``            -- one ``cluster(..., return_index=True)`` run.
+* ``warm_graph``     -- the first mutation, which pays the one-time
+                        lazy merge-graph build (reported separately so
+                        the steady state is not polluted by it).
+* ``churn_step``     -- warm latency of one mixed traffic batch:
+                        70% predicts / 20% inserts / 10% deletes of a
+                        ``batch``-sized request budget, all applied to
+                        the live index (deletes draw from the live-id
+                        pool, so clusters shrink, split and demote).
+* ``refit_baseline`` -- what the same batch costs without the delta
+                        engine: a full ``cluster()`` over the final
+                        surviving set (the only exact alternative).
+
+The headline check -- steady-state churn step >= 10x faster than a
+refit per batch -- gates the run.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+import numpy as np
+
+
+def bench_churn(n: int = 100_000, scenario: str = "blobs-2d",
+                engine: str = "grit", batch: int = 2048,
+                steps: int = 6, seed: int = 0) -> List[Dict]:
+    """Rows for the churn bench (see module docstring)."""
+    from repro.data.scenarios import get_scenario
+    from repro.engine import cluster
+
+    sc = get_scenario(scenario)
+    # same occupancy-preserving eps rescale as bench_distance_plane
+    eps = sc.eps * (sc.n / n) ** (1.0 / sc.d)
+    pts = sc.points(n=n)
+    rng = np.random.default_rng(seed)
+    rows: List[Dict] = []
+
+    t0 = time.perf_counter()
+    res = cluster(pts, eps, sc.min_pts, engine=engine, return_index=True)
+    t_fit = time.perf_counter() - t0
+    idx = res.index
+    rows.append(dict(bench="churn", op="fit", scenario=scenario, n=n,
+                     d=sc.d, engine=engine, seconds=round(t_fit, 4),
+                     clusters=res.n_clusters, grids=idx.num_grids))
+
+    n_pred = int(0.7 * batch)
+    n_ins = int(0.2 * batch)
+    n_del = batch - n_pred - n_ins
+
+    def queries(m):
+        near = pts[rng.integers(0, n, int(0.8 * m))] + rng.normal(
+            scale=0.3 * eps, size=(int(0.8 * m), sc.d))
+        far = rng.uniform(pts.min() - 5 * eps, pts.max() + 5 * eps,
+                          size=(m - int(0.8 * m), sc.d))
+        return np.concatenate([near, far])
+
+    # the first mutation pays the lazy merge-graph build: isolate it
+    t0 = time.perf_counter()
+    idx.insert(queries(8))
+    t_warm = time.perf_counter() - t0
+    rows.append(dict(bench="churn", op="warm_graph", scenario=scenario,
+                     n=n, d=sc.d, engine=engine,
+                     seconds=round(t_warm, 4),
+                     merge_edges=int(len(idx.merge_edges))))
+    idx.predict(queries(n_pred))             # warm the predict plane too
+
+    alive = idx.arrival_live()
+    step_times = []
+    deleted_total = demoted_total = 0
+    for _ in range(steps):
+        q = queries(n_pred)
+        ins = queries(n_ins)
+        kill = rng.choice(alive, size=n_del, replace=False)
+        t0 = time.perf_counter()
+        idx.predict(q)
+        idx.insert(ins)
+        st = idx.delete(kill)
+        step_times.append(time.perf_counter() - t0)
+        deleted_total += st["deleted"]
+        demoted_total += st["demoted"]
+        alive = idx.arrival_live()
+    # steady state: drop the slowest step (stray compaction / cache
+    # effects), report the median of the rest
+    t_step = float(np.median(sorted(step_times)[:-1])) \
+        if len(step_times) > 1 else step_times[0]
+
+    # baseline: the same traffic without the delta engine is a full
+    # cluster() refit over the surviving set per batch
+    surv = idx.points_arrival()
+    t0 = time.perf_counter()
+    base_res = cluster(surv, eps, sc.min_pts, engine=engine)
+    t_refit = time.perf_counter() - t0
+    got = idx.labels_arrival()
+    agree = float(np.mean((got >= 0) == (base_res.labels >= 0)))
+    rows.append(dict(bench="churn", op="churn_step", scenario=scenario,
+                     n=n, n_live=idx.n_live, d=sc.d, engine=engine,
+                     batch=batch, predicts=n_pred, inserts=n_ins,
+                     deletes=n_del, steps=steps,
+                     seconds=round(t_step, 5),
+                     seconds_max=round(float(np.max(step_times)), 5),
+                     ops_per_s=round(batch / t_step, 1),
+                     deleted_total=deleted_total,
+                     demoted_total=demoted_total,
+                     border_noise_agreement_vs_refit=round(agree, 4),
+                     speedup_vs_refit=round(t_refit / t_step, 1)))
+    rows.append(dict(bench="churn", op="refit_baseline",
+                     scenario=scenario, n=idx.n_live, d=sc.d,
+                     engine=engine, seconds=round(t_refit, 4)))
+    return rows

@@ -22,6 +22,11 @@ predict throughput + insert latency vs a full refit per query batch,
 n = 1e5 blobs) and writes ``BENCH_3.json``; the >= 10x
 predict-vs-refit check gates the run.
 
+``--churn`` runs the mutation-plane benchmark (steady-state mixed
+70/20/10 predict/insert/delete traffic against the fitted index vs a
+full refit per batch, n = 1e5 blobs) and writes ``BENCH_5.json``; the
+>= 10x churn-step-vs-refit check gates the run.
+
 ``--distributed`` runs the *sharded* serving-plane benchmark
 (``ShardedGritIndex`` slab-routed predict/insert vs a distributed refit
 per query batch, on a mesh over every visible device) and writes
@@ -67,6 +72,30 @@ def _write_bench3(path: str, rows) -> bool:
         "backend": jax.default_backend(),
         "rows": rows,
         "checks": {"predict_10x_faster_than_refit_per_batch": verdict},
+    }
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2)
+        f.write("\n")
+    print(f"wrote {path} ({len(rows)} rows)")
+    return verdict
+
+
+def _write_bench5(path: str, rows) -> bool:
+    """Dump the churn rows + verdict as BENCH_5.json.
+
+    Verdict: a steady-state mixed predict/insert/delete step is >= 10x
+    faster than a full refit per batch (the mutation-plane acceptance
+    bar)."""
+    import jax
+
+    churn = [r for r in rows if r.get("op") == "churn_step"]
+    verdict = bool(churn) and all(
+        r["speedup_vs_refit"] >= 10.0 for r in churn)
+    payload = {
+        "bench": "BENCH_5",
+        "backend": jax.default_backend(),
+        "rows": rows,
+        "checks": {"churn_step_10x_faster_than_refit_per_batch": verdict},
     }
     with open(path, "w") as f:
         json.dump(payload, f, indent=2)
@@ -146,6 +175,12 @@ def main() -> int:
                          "BENCH_3.json")
     ap.add_argument("--serve-n", type=int, default=100_000,
                     help="fit-set size for --serve")
+    ap.add_argument("--churn", action="store_true",
+                    help="mutation-plane bench only (mixed 70/20/10 "
+                         "predict/insert/delete traffic vs "
+                         "refit-per-batch); writes BENCH_5.json")
+    ap.add_argument("--churn-n", type=int, default=100_000,
+                    help="fit-set size for --churn")
     ap.add_argument("--distributed", action="store_true",
                     help="sharded serving-plane bench only "
                          "(ShardedGritIndex predict/insert vs a "
@@ -164,6 +199,7 @@ def main() -> int:
     args = ap.parse_args()
     if args.json_out is None:
         args.json_out = ("BENCH_4.json" if args.distributed
+                         else "BENCH_5.json" if args.churn
                          else "BENCH_3.json" if args.serve
                          else "BENCH_2.json")
 
@@ -188,6 +224,19 @@ def main() -> int:
         print(f"[{'PASS' if ok else 'FAIL'}] sharded predict >= 10x "
               f"faster than a distributed refit per query batch "
               f"(n={args.dist_n})")
+        return 0 if ok else 1
+
+    if args.churn:
+        from benchmarks import churn_bench as C
+        rows = C.bench_churn(n=args.churn_n)
+        csv_text = _print_csv(rows)
+        if args.out:
+            with open(args.out, "w") as f:
+                f.write(csv_text)
+        ok = _write_bench5(args.json_out, rows)
+        print(f"[{'PASS' if ok else 'FAIL'}] steady-state churn step "
+              f">= 10x faster than a full refit per batch "
+              f"(n={args.churn_n})")
         return 0 if ok else 1
 
     from benchmarks import paper_figs as F

@@ -7,11 +7,12 @@ paper-faithful host pipeline, the LDF variant, and the fully in-graph
 device pipeline with adaptive static caps.  All are verified equivalent
 to the O(n^2) oracle.  The last sections show the fit-once / serve-many
 path: ``return_index=True`` keeps the fitted ``GritIndex``, which
-snapshots to flat arrays, restores in another process, and serves
-point queries and micro-batch inserts without ever refitting -- and the
-sharded variant (``fit_sharded`` -> ``ShardedGritIndex``): a
-distributed fit kept as per-slab index shards plus a global label map,
-serving slab-routed predicts and cross-shard inserts the same way.
+snapshots to flat arrays, restores in another process, and serves the
+full mutation plane -- point queries, micro-batch inserts, exact
+deletes and compaction -- without ever refitting; and the sharded
+variant (``fit_sharded`` -> ``ShardedGritIndex``): a distributed fit
+kept as per-slab index shards plus a global label map, serving
+slab-routed predicts and cross-shard inserts/deletes the same way.
 """
 
 import io
@@ -85,6 +86,20 @@ def main():
     print(f"  insert 64 points: {st['newly_core']} newly core, "
           f"{st['affected_grids']} grids recomputed, "
           f"{st['t_total'] * 1e3:.1f}ms")
+    # the full mutation plane: fit -> insert -> delete -> compact.
+    # deletes are by arrival id (fit points are 0..n-1, inserts append;
+    # ids are never reused) and are exact even where DBSCAN is
+    # non-monotone -- cutting a bridge splits the cluster, and the
+    # persistent merge graph makes the component recompute cheap.
+    # unknown ids are rejected, not raised (TTL races are normal).
+    st = idx.delete(np.arange(n, n + 32))  # drop half the insert above
+    print(f"  delete 32 points: {st['demoted']} cores demoted, "
+          f"{st['changed_grids']} grids re-decided, "
+          f"{st['rejected']} ids rejected, {st['t_total'] * 1e3:.1f}ms")
+    st = idx.compact()                    # re-pack tombstoned rows now
+    print(f"  compact: {st['removed']} rows re-packed "
+          f"({idx.n_live} live); deletes also auto-compact past "
+          f"{idx.compact_threshold:.0%} dead")
 
     print("\ndistributed fit -> snapshot -> predict (the sharded plane):")
     # on a multi-device mesh pass mesh=jax.make_mesh(...) and the SPMD
@@ -113,6 +128,10 @@ def main():
           f"{st['newly_core']} newly core, "
           f"{st['reconcile_unions']} cross-shard label unions, "
           f"{st['t_total'] * 1e3:.1f}ms")
+    st = sidx.delete(np.arange(n, n + 32))  # owner + ghost copies go
+    print(f"  delete 32 points: shards {st['shards_touched']} touched, "
+          f"label map rebuilt from {st['reconcile_unions']} witness "
+          f"unions, {st['t_total'] * 1e3:.1f}ms")
     print("done.")
 
 

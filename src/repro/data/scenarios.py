@@ -34,6 +34,15 @@ micro-batch inserts that drift outside the fitted bounding box.
 engineered at the slab cut bands (queries that must consult two shards,
 inserts whose blobs straddle a cut and whose merges need cross-shard
 re-reconciliation).
+
+Churn workloads (:class:`ChurnScenario`, ``churn_scenarios()``) add the
+delete direction: deterministic interleaved insert/delete op streams
+engineered at DBSCAN's non-monotone spots -- bridge cuts that split a
+cluster in two, thinning that demotes cores to border/noise, deletes
+below the shifted identifier origin, a whole grid emptied at once, and
+TTL sliding windows that eventually erase entire fitted regions.  The
+mutation-plane tests replay each op against both index flavors and pin
+the read-out to a from-scratch ``cluster()`` on the surviving set.
 """
 
 from __future__ import annotations
@@ -440,6 +449,133 @@ def _insert_slab_drift(rng: np.random.Generator, base: np.ndarray,
     dcen[0] = (1 - t) * 0.5 * DOMAIN + t * 1.15 * DOMAIN
     drift = dcen + rng.normal(scale=1.5 * sc.eps, size=(n_drift, d))
     return np.concatenate([blob, bridge, drift])
+
+
+# --------------------------------------------------------------------------
+# churn scenarios: interleaved insert/delete op streams
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ChurnScenario:
+    """A base fit plus a deterministic interleaved mutation stream.
+
+    :meth:`ops` yields ``("insert", points)`` / ``("delete",
+    arrival_ids)`` pairs; arrival ids are *global*: the base fit takes
+    ``0..n-1`` and every insert appends ids in submission order --
+    exactly the id discipline of ``GritIndex`` / ``ShardedGritIndex``
+    (ids are never reused, deletes may target any earlier op's
+    points).  Deterministic in the seed, like the rest of the
+    catalogue.
+    """
+
+    name: str
+    base: Scenario
+    plan: Callable[[np.random.Generator, np.ndarray, Scenario],
+                   List[Tuple[str, np.ndarray]]]
+    tags: Tuple[str, ...] = ("churn",)
+
+    def fit_points(self, seed: int = 0) -> np.ndarray:
+        return self.base.points(seed)
+
+    def ops(self, seed: int = 0) -> List[Tuple[str, np.ndarray]]:
+        rng = np.random.default_rng(30_000 + seed)
+        out = self.plan(rng, self.fit_points(seed), self.base)
+        for kind, payload in out:
+            assert kind in ("insert", "delete"), kind
+        return out
+
+
+def _plan_churn_split(rng: np.random.Generator, base: np.ndarray,
+                      sc: Scenario) -> List[Tuple[str, np.ndarray]]:
+    """The non-monotone corners, one op each: build two blobs + a dense
+    bridge (one merged cluster), cut the bridge (split in two), empty
+    one grid-sized box of the base set, insert below the fitted origin
+    (id_shift) then delete half of those, and thin a blob below MinPts
+    (core -> border/noise demotions)."""
+    eps, mp = sc.eps, sc.min_pts
+    ops: List[Tuple[str, np.ndarray]] = []
+    nid = len(base)
+
+    def ins(pts: np.ndarray) -> np.ndarray:
+        nonlocal nid
+        ids = np.arange(nid, nid + len(pts), dtype=np.int64)
+        nid += len(pts)
+        ops.append(("insert", np.asarray(pts, np.float64)))
+        return ids
+
+    c = np.full(2, 0.5 * DOMAIN)
+    off = np.array([4.0 * eps, 0.0])
+    left = ins((c - off) + rng.normal(scale=0.3 * eps,
+                                      size=(4 * mp, 2)))
+    ins((c + off) + rng.normal(scale=0.3 * eps, size=(4 * mp, 2)))
+    t = np.linspace(0.0, 1.0, 8 * mp)[:, None]
+    bridge = ins((c - off) + t * (2 * off)
+                 + rng.normal(scale=0.05 * eps, size=(8 * mp, 2)))
+    ops.append(("delete", bridge))          # bridge cut: cluster splits
+    side = eps / np.sqrt(2.0)
+    lo = np.quantile(base, 0.4, axis=0)
+    in_box = np.flatnonzero(
+        ((base >= lo) & (base < lo + side)).all(axis=1))
+    ops.append(("delete", in_box))          # one whole grid emptied
+    below = ins(base.min(axis=0) - 10 * eps
+                + rng.uniform(0, eps, size=(3 * mp, 2)))
+    ops.append(("delete", below[::2]))      # delete below shifted origin
+    ops.append(("delete", left[: 3 * mp]))  # thin a blob: demotions
+    return ops
+
+
+def _plan_ttl_drift(rng: np.random.Generator, base: np.ndarray,
+                    sc: Scenario, steps: int = 4
+                    ) -> List[Tuple[str, np.ndarray]]:
+    """TTL sliding window over a drifting stream: each step inserts a
+    blob walking off past the domain corner (outside the fitted box:
+    identifier-origin shifts) plus on-cluster points, then expires the
+    oldest as many live points -- the window eventually erases entire
+    original grids while the drift keeps opening new ones."""
+    eps, d = sc.eps, sc.d
+    ops: List[Tuple[str, np.ndarray]] = []
+    nid = len(base)
+    live: List[int] = list(range(len(base)))
+    for step in range(steps):
+        t = (step + 1) / steps
+        center = ((1 - t) * 0.5 + t * 1.12) * DOMAIN * np.ones(d)
+        blob = center + rng.normal(scale=1.5 * eps, size=(40, d))
+        onto = base[rng.integers(0, len(base), 16)] + rng.normal(
+            scale=0.4 * eps, size=(16, d))
+        pts = np.concatenate([blob, onto])
+        ops.append(("insert", pts))
+        ids = list(range(nid, nid + len(pts)))
+        nid += len(pts)
+        live += ids
+        expire, live = live[:len(pts)], live[len(pts):]
+        ops.append(("delete", np.asarray(expire, np.int64)))
+    return ops
+
+
+def churn_scenarios() -> List[ChurnScenario]:
+    """Interleaved insert/delete workloads for the mutation-plane
+    tests and ``benchmarks/run.py --churn``."""
+    base = scenario_map()
+    return [
+        ChurnScenario(name="churn-split-2d", base=base["blobs-2d"],
+                      plan=_plan_churn_split,
+                      tags=("churn", "split")),
+        ChurnScenario(name="ttl-drift-3d", base=base["blobs-3d"],
+                      plan=_plan_ttl_drift,
+                      tags=("churn", "ttl")),
+    ]
+
+
+def churn_scenario_map() -> Dict[str, ChurnScenario]:
+    return {sc.name: sc for sc in churn_scenarios()}
+
+
+def get_churn_scenario(name: str) -> ChurnScenario:
+    m = churn_scenario_map()
+    if name not in m:
+        raise KeyError(
+            f"unknown churn scenario {name!r}; known: {sorted(m)}")
+    return m[name]
 
 
 def serving_scenarios() -> List[ServingScenario]:

@@ -6,21 +6,27 @@ micro-batch inserts without refitting) and its multi-shard sibling
     res = cluster(points, eps=3000.0, min_pts=10, return_index=True)
     labels = res.index.predict(new_points)       # exact, no refit
     res.index.insert(micro_batch)                # incremental splice
+    res.index.delete(arrival_ids)                # exact removal
     snap = res.index.snapshot()                  # flat arrays, savez-able
 
     from repro.index import fit_sharded
     sidx = fit_sharded(points, eps, min_pts, mesh=mesh)  # per-slab shards
     labels = sidx.predict(new_points)            # slab-routed, exact
+    sidx.delete(arrival_ids)                     # owner + ghost removal
 
-See DESIGN.md §7 for the state layouts and exactness arguments.
+Both mutation directions run through one delta engine
+(``repro.index.delta``) that maintains the persistent core-grid merge
+graph.  See DESIGN.md §7 for the state layouts and exactness
+arguments.
 """
 
+from .delta import build_merge_graph, compact, delete_ids, insert_batch
 from .grit_index import GritIndex, PredictCaps
-from .insert import insert_batch
 from .sharded import LabelMap, ShardedGritIndex, fit_sharded
 
 __all__ = ["GritIndex", "LabelMap", "PredictCaps", "ShardedGritIndex",
-           "fit_index", "fit_sharded", "insert_batch"]
+           "build_merge_graph", "compact", "delete_ids", "fit_index",
+           "fit_sharded", "insert_batch"]
 
 
 def fit_index(points, eps: float, min_pts: int, *, engine: str = "auto",

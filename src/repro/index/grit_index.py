@@ -18,9 +18,14 @@ device caps of the fit -- and serves it (DESIGN.md §7):
   numpy, bit-identical to the brute oracle's distance formula) and
   ``kernel`` (slot-batched ``row_min_batch`` -- jitted, static-shaped,
   grown through :class:`PredictCaps` like the adaptive driver's caps).
-* :meth:`insert` splices a micro-batch into the fitted state,
-  recomputing core status and merges only in the offset-stencil of the
-  touched grids (``repro.index.insert``).
+* :meth:`insert` / :meth:`delete` mutate the fitted state through one
+  shared *delta engine* (``repro.index.delta``): both directions
+  recompute core status and merge decisions only in the offset-stencil
+  of the touched grids, maintain the **persistent core-grid merge
+  graph** (:attr:`merge_edges` -- the first-class structure cluster
+  identity is recomputed from), and reconcile labels by connected
+  components over it.  Deletes tombstone rows first; a
+  threshold-triggered :meth:`compact` re-packs the flat arrays.
 * :meth:`snapshot` / :meth:`restore` serialize the whole fitted state
   as a dict of flat numpy arrays (``np.savez``-able), so a fitted index
   ships between processes without refitting.
@@ -38,7 +43,14 @@ from repro.core.grid_tree import GridTree
 from repro.core.device_dbscan import GritCaps
 from repro.engine.adaptive import _pow2_at_least
 
-_SNAPSHOT_VERSION = 1
+from .snapshot_io import (check_version, load_snapshot, save_snapshot)
+
+# v2 adds the mutation-plane state: ``alive`` tombstone flags,
+# ``next_arrival`` and the persistent merge-graph edge array.  v1
+# snapshots stay restorable (no tombstones; merge graph rebuilt lazily
+# on the first mutation that needs it).
+_SNAPSHOT_VERSION = 2
+_ACCEPTED_VERSIONS = (1, 2)
 
 
 @dataclasses.dataclass
@@ -93,9 +105,9 @@ class GritIndex:
     arrival: np.ndarray       # [n] int64 arrival index of each sorted row
     ids: np.ndarray           # [G, d] int64 lex-sorted non-empty grid ids
     starts: np.ndarray        # [G] int64 first sorted row of each grid
-    counts: np.ndarray        # [G] int64 points per grid
-    core: np.ndarray          # [n] bool (sorted order)
-    labels: np.ndarray        # [n] int64 (sorted order; -1 noise)
+    counts: np.ndarray        # [G] int64 physical rows per grid
+    core: np.ndarray          # [n] bool (sorted order; False on dead rows)
+    labels: np.ndarray        # [n] int64 (sorted order; -1 noise/dead)
     eps: float
     min_pts: int
     side: float               # eps / sqrt(d), exactly as fit
@@ -104,10 +116,37 @@ class GritIndex:
     next_label: int           # smallest unused cluster id
     caps: Optional[GritCaps] = None   # device-fit caps (jit key reuse)
     predict_caps: PredictCaps = dataclasses.field(default_factory=PredictCaps)
+    # -- mutation-plane state (repro.index.delta) ----------------------
+    # Deleted rows *tombstone* first (alive=False, core=False, label=-1,
+    # physical row kept so the CSR layout and grid numbering survive);
+    # compact() re-packs once dead_fraction crosses compact_threshold.
+    # Arrival ids are never reused: next_arrival is the id the next
+    # inserted point gets, so delete(ids) stays unambiguous forever.
+    alive: Optional[np.ndarray] = None        # [n] bool
+    live_counts: Optional[np.ndarray] = None  # [G] live points per grid
+    next_arrival: int = -1
+    # The persistent core-grid merge graph: [E, 2] int64 grid-index
+    # pairs (i < j, lex-sorted, deduped) with MinDist(cores_i, cores_j)
+    # <= eps.  None = not built yet (v1 snapshots / fresh fits); the
+    # delta engine builds it lazily on the first mutation and then
+    # maintains it incrementally in both directions.  Cluster identity
+    # of core points is exactly the connected components of this graph.
+    merge_edges: Optional[np.ndarray] = None
+    compact_threshold: float = 0.25
     _tree: Optional[GridTree] = dataclasses.field(
         default=None, repr=False, compare=False)
     _core_csr: Optional[tuple] = dataclasses.field(
         default=None, repr=False, compare=False)
+    _arr_to_row: Optional[np.ndarray] = dataclasses.field(
+        default=None, repr=False, compare=False)
+
+    def __post_init__(self):
+        if self.alive is None:
+            self.alive = np.ones(self.points.shape[0], bool)
+        if self.live_counts is None:
+            self.live_counts = np.asarray(self.counts, np.int64).copy()
+        if self.next_arrival < 0:
+            self.next_arrival = int(self.arrival.max(initial=-1)) + 1
 
     # ------------------------------------------------------------------
     # construction
@@ -153,7 +192,17 @@ class GritIndex:
 
     @property
     def n(self) -> int:
+        """Physical rows (tombstoned rows included until compaction)."""
         return int(self.points.shape[0])
+
+    @property
+    def n_live(self) -> int:
+        return int(self.alive.sum())
+
+    @property
+    def dead_fraction(self) -> float:
+        n = self.n
+        return (n - self.n_live) / n if n else 0.0
 
     @property
     def d(self) -> int:
@@ -171,39 +220,99 @@ class GritIndex:
 
     @property
     def fit_grid(self) -> GridIndex:
-        """The current partition as a host ``GridIndex`` (arrival order).
+        """The current *live* partition as a host ``GridIndex``.
 
         Identifiers are returned in the canonical origin (``id_shift``
         subtracted), so the ``GridIndex`` invariant
         ``ids == floor((x - mins) / side)`` holds even after inserts
         extended the bounding box; a uniform integer shift preserves
-        the lexicographic order, so the CSR layout is unchanged.
+        the lexicographic order, so the CSR layout is unchanged.  Rows
+        are indexed in arrival *rank* order (live points sorted by
+        arrival id -- identical to arrival order until a delete
+        tombstones rows).
         """
-        point_grid = np.empty(self.n, np.int64)
-        point_grid[self.arrival] = np.repeat(
-            np.arange(self.num_grids, dtype=np.int64), self.counts)
-        ids = self.ids - self.id_shift[None, :]
-        return GridIndex(order=self.arrival.copy(), ids=ids,
-                         starts=self.starts.copy(), counts=self.counts.copy(),
+        grid_of = np.repeat(np.arange(self.num_grids, dtype=np.int64),
+                            self.counts)
+        live = np.flatnonzero(self.alive)
+        rank = np.argsort(self.arrival[live], kind="stable")
+        keep = self.live_counts > 0
+        new_of_old = np.cumsum(keep) - 1          # grid renumbering
+        order = np.empty(len(live), np.int64)
+        order[rank] = np.arange(len(live))
+        point_grid = new_of_old[grid_of[live]][rank]
+        ids = self.ids[keep] - self.id_shift[None, :]
+        starts = np.cumsum(self.live_counts[keep]) - self.live_counts[keep]
+        return GridIndex(order=order, ids=ids,
+                         starts=starts, counts=self.live_counts[keep].copy(),
                          point_grid=point_grid, side=self.side,
                          mins=self.mins.copy(),
                          eta=int(ids.max(initial=0)))
 
     def labels_arrival(self) -> np.ndarray:
-        """Labels in arrival order (fit points first, inserts appended)."""
-        out = np.empty(self.n, np.int64)
-        out[self.arrival] = self.labels
-        return out
+        """Labels of the *live* points, ordered by arrival id (fit
+        points first, inserts appended; deleted rows omitted)."""
+        live = self.alive
+        return self.labels[live][np.argsort(self.arrival[live],
+                                            kind="stable")]
 
     def core_arrival(self) -> np.ndarray:
-        out = np.empty(self.n, bool)
-        out[self.arrival] = self.core
+        """Core flags of the live points, ordered by arrival id."""
+        live = self.alive
+        return self.core[live][np.argsort(self.arrival[live],
+                                          kind="stable")]
+
+    def points_arrival(self) -> np.ndarray:
+        """Coordinates of the live points, ordered by arrival id (the
+        surviving set :meth:`labels_arrival` labels, row for row)."""
+        live = self.alive
+        return self.points[live][np.argsort(self.arrival[live],
+                                            kind="stable")]
+
+    def arrival_live(self) -> np.ndarray:
+        """Sorted arrival ids of the surviving points (what
+        :meth:`labels_arrival` rows correspond to)."""
+        return np.sort(self.arrival[self.alive])
+
+    def rows_of_arrival(self, arrival_ids: np.ndarray) -> np.ndarray:
+        """Sorted-order rows holding the given arrival ids (-1 where an
+        id was never assigned or its row is tombstoned)."""
+        if self._arr_to_row is None:
+            a2r = np.full(self.next_arrival, -1, np.int64)
+            live = np.flatnonzero(self.alive)
+            a2r[self.arrival[live]] = live
+            self._arr_to_row = a2r
+        ids = np.asarray(arrival_ids, np.int64)
+        out = np.full(ids.shape, -1, np.int64)
+        ok = (ids >= 0) & (ids < self.next_arrival)
+        out[ok] = self._arr_to_row[ids[ok]]
         return out
 
-    def invalidate(self) -> None:
-        """Drop derived caches after a structural mutation (insert)."""
-        self._tree = None
+    def labels_at(self, arrival_ids: np.ndarray) -> np.ndarray:
+        """Labels of specific (live) arrival ids; -1 for dead/unknown."""
+        rows = self.rows_of_arrival(arrival_ids)
+        out = np.full(rows.shape, -1, np.int64)
+        ok = rows >= 0
+        out[ok] = self.labels[rows[ok]]
+        return out
+
+    def core_at(self, arrival_ids: np.ndarray) -> np.ndarray:
+        """Core flags of specific (live) arrival ids; False for dead."""
+        rows = self.rows_of_arrival(arrival_ids)
+        out = np.zeros(rows.shape, bool)
+        ok = rows >= 0
+        out[ok] = self.core[rows[ok]]
+        return out
+
+    def invalidate(self, keep_tree: bool = False) -> None:
+        """Drop derived caches after a structural mutation.
+
+        ``keep_tree=True`` preserves the level tree when the grid id
+        array is untouched (deletes tombstone in place, so only the
+        row-level caches go stale)."""
+        if not keep_tree:
+            self._tree = None
         self._core_csr = None
+        self._arr_to_row = None
 
     # ------------------------------------------------------------------
     # identifiers + candidate enumeration
@@ -294,6 +403,15 @@ class GritIndex:
         if stats is not None:
             stats["mode"] = mode
             stats["n_queries"] = int(q.shape[0])
+        if not self.core.any():
+            # no live cores (e.g. everything deleted): every query is
+            # noise by the assignment rule -- skip the (possibly empty)
+            # tree entirely
+            out = np.full(q.shape[0], -1, np.int64)
+            if stats is not None:
+                stats["candidates"] = 0
+            d2 = np.full(q.shape[0], np.inf, np.float64)
+            return (out, d2) if return_d2 else out
         if mode == "host":
             out, d2 = self._predict_host(q, chunk, stats)
         elif mode == "kernel":
@@ -400,13 +518,40 @@ class GritIndex:
         return out, out_d2
 
     # ------------------------------------------------------------------
-    # insert
+    # mutation plane (repro.index.delta)
     # ------------------------------------------------------------------
 
+    def ensure_merge_graph(self) -> np.ndarray:
+        """The persistent core-grid merge graph, building it if absent.
+
+        Returns the ``[E, 2]`` edge array (grid-index pairs, i < j).
+        Built once from the fitted state (FastMerging over every
+        core-grid neighbor pair -- the cost shape of one fit's merging
+        phase), then maintained incrementally by insert/delete."""
+        if self.merge_edges is None:
+            from .delta import build_merge_graph
+            self.merge_edges = build_merge_graph(self)
+        return self.merge_edges
+
     def insert(self, points) -> Dict[str, Any]:
-        """Micro-batch incremental update (``repro.index.insert``)."""
-        from .insert import insert_batch
+        """Micro-batch incremental insert (stats schema: see
+        :func:`repro.index.delta.insert_batch`)."""
+        from .delta import insert_batch
         return insert_batch(self, points)
+
+    def delete(self, arrival_ids) -> Dict[str, Any]:
+        """Exact micro-batch delete by arrival id (stats schema: see
+        :func:`repro.index.delta.delete_ids`).  Unknown or already
+        deleted ids are rejected, not raised -- serving traffic carries
+        them routinely (double deletes, TTL races)."""
+        from .delta import delete_ids
+        return delete_ids(self, arrival_ids)
+
+    def compact(self) -> Dict[str, Any]:
+        """Re-pack the flat arrays, dropping tombstoned rows (called
+        automatically by :meth:`delete` past ``compact_threshold``)."""
+        from .delta import compact
+        return compact(self)
 
     # ------------------------------------------------------------------
     # snapshot / restore
@@ -435,19 +580,28 @@ class GritIndex:
             "core": self.core, "labels": self.labels,
             "mins": self.mins, "id_shift": self.id_shift,
             "scalars_f": np.asarray([self.eps, self.side], np.float64),
-            "scalars_i": np.asarray([self.min_pts, self.next_label],
-                                    np.int64),
+            "scalars_i": np.asarray([self.min_pts, self.next_label,
+                                     self.next_arrival], np.int64),
             "caps": caps,
+            # v2: mutation-plane state.  ``has_merge_graph``
+            # distinguishes a built-but-empty graph (no merges) from an
+            # absent one (rebuild lazily on restore).
+            "alive": self.alive,
+            "live_counts": self.live_counts,
+            "merge_edges": (self.merge_edges if self.merge_edges is not None
+                            else np.zeros((0, 2), np.int64)),
+            "has_merge_graph": np.asarray(
+                [self.merge_edges is not None], bool),
         }
 
     @classmethod
     def restore(cls, snap: Dict[str, np.ndarray]) -> "GritIndex":
         """Rebuild a fitted index from :meth:`snapshot` output (accepts
-        an ``np.load`` mapping of a saved ``.npz`` as well)."""
-        version = int(np.asarray(snap["version"])[0])
-        if version != _SNAPSHOT_VERSION:
-            raise ValueError(
-                f"snapshot version {version} != {_SNAPSHOT_VERSION}")
+        an ``np.load`` mapping of a saved ``.npz`` as well).  Previous-
+        version snapshots restore too: a v1 snapshot has no tombstones
+        and no merge graph (rebuilt lazily by the first mutation)."""
+        version = check_version(snap, "version", _ACCEPTED_VERSIONS,
+                                "snapshot")
         caps_arr = np.asarray(snap["caps"])
         caps = None
         if caps_arr.size:
@@ -458,6 +612,16 @@ class GritIndex:
                             merge_iters=v[8], use_kernels=bool(v[9]))
         sf = np.asarray(snap["scalars_f"], np.float64)
         si = np.asarray(snap["scalars_i"], np.int64)
+        merge_edges = None
+        alive = live_counts = None
+        next_arrival = -1
+        if version >= 2:
+            alive = np.asarray(snap["alive"], bool)
+            live_counts = np.asarray(snap["live_counts"], np.int64)
+            next_arrival = int(si[2])
+            if bool(np.asarray(snap["has_merge_graph"])[0]):
+                merge_edges = np.asarray(snap["merge_edges"],
+                                         np.int64).reshape(-1, 2)
         return cls(
             points=np.asarray(snap["points"], np.float64),
             arrival=np.asarray(snap["arrival"], np.int64),
@@ -469,12 +633,13 @@ class GritIndex:
             eps=float(sf[0]), min_pts=int(si[0]), side=float(sf[1]),
             mins=np.asarray(snap["mins"], np.float64),
             id_shift=np.asarray(snap["id_shift"], np.int64),
-            next_label=int(si[1]), caps=caps)
+            next_label=int(si[1]), caps=caps,
+            alive=alive, live_counts=live_counts,
+            next_arrival=next_arrival, merge_edges=merge_edges)
 
     def save(self, path) -> None:
-        np.savez(path, **self.snapshot())
+        save_snapshot(path, self.snapshot())
 
     @classmethod
     def load(cls, path) -> "GritIndex":
-        with np.load(path) as data:
-            return cls.restore({k: data[k] for k in data.files})
+        return cls.restore(load_snapshot(path))

@@ -1,224 +1,16 @@
-"""Micro-batch incremental insert for a fitted :class:`GritIndex`.
+"""Compatibility shim: the insert path moved into the unified mutation
+plane ``repro.index.delta``.
 
-Exactness argument (DESIGN.md §7).  DBSCAN is *monotone under
-insertion*: neighborhood counts only grow, so existing core points stay
-core, and a merge edge between two grids (MinDist of their core sets
-<= eps) never disappears.  The from-scratch result on the union set
-therefore differs from the fitted state only where the new points can
-reach:
-
-* **core status** can change only for points within eps of a new point.
-  A new point lives in a *touched* grid t; anything within eps of it
-  lies in a grid at integer offset < d of t (the paper's stencil
-  bound).  Recomputing core status for the non-core points of
-  ``touched ∪ Nei(touched)`` grids -- from scratch, against their full
-  own+stencil candidate sets -- is thus exhaustive.
-* **merges**: the core-grid graph gains vertices/edges only at grids
-  whose core *set* changed (a MinDist decision depends on nothing
-  else).  Re-deciding every (changed grid, core neighbor) pair with
-  FastMerging and folding the decisions into a union-find over cluster
-  ids splices the new components exactly; decisions between two
-  unchanged grids are already encoded in the existing labels.
-* **border/noise**: a labeled border stays valid (its witness core
-  survives; its cluster id follows the union-find relabel).  A noise
-  point can only flip to border via a *newly* core point, so only noise
-  rows in the stencil of changed grids -- plus the new points
-  themselves -- need the nearest-core test.
-
-Everything runs in float64 with the same distance expression as the
-brute oracle, so decisions are bit-identical to a from-scratch host
-fit.  Cost: one O((n+m) log(n+m)) identifier re-sort (numpy lexsort --
-milliseconds at 1e5) plus distance work proportional to the occupancy
-of the touched stencil, not to n.
+What used to live here as an insert-only splice is now one *delta
+engine* shared by both mutation directions -- ``insert_batch`` and
+``delete_ids`` run the same direction-parameterized stages (touched
+stencil closure -> per-grid core recompute -> FastMerging re-decision
+at changed-core-set grids -> component relabel over the persistent
+merge graph -> border reconciliation).  Import from
+``repro.index.delta`` in new code; this module keeps the historical
+name importable (same pattern as ``repro.core.distributed``).
 """
 
-from __future__ import annotations
+from repro.index.delta import insert_batch  # noqa: F401
 
-import time
-from typing import Any, Dict
-
-import numpy as np
-
-from repro.core.grids import group_rows
-from repro.core.labels import UnionFind
-from repro.core.merging import fast_merging
-
-
-def insert_batch(index, batch) -> Dict[str, Any]:
-    """Splice ``batch`` ([m, d]) into ``index`` in place.
-
-    Returns a stats dict (grids touched/affected, newly-core count,
-    merge checks, distance evals, timings).  Raises ``ValueError`` on
-    shape/NaN problems, mirroring ``cluster()``'s input validation.
-    """
-    t0 = time.perf_counter()
-    B = np.asarray(batch, np.float64)
-    if B.ndim != 2 or B.shape[1] != index.d:
-        raise ValueError(f"insert batch must be [m, {index.d}], "
-                         f"got {B.shape}")
-    m = B.shape[0]
-    if m == 0:
-        return {"inserted": 0, "n": index.n, "touched_grids": 0,
-                "affected_grids": 0, "changed_grids": 0, "newly_core": 0,
-                "newly_core_arrival": np.empty(0, np.int64),
-                "merge_checks": 0, "dist_evals": 0, "id_shifted": False,
-                "t_total": time.perf_counter() - t0}
-    if not np.isfinite(B).all():
-        raise ValueError("insert batch contains non-finite coordinates")
-
-    d = index.d
-    eps, eps2, min_pts = index.eps, index.eps * index.eps, index.min_pts
-
-    # ---- 1. identifiers (fit-time formula) + origin shift ---------------
-    new_ids = index.query_ids(B)
-    neg = np.minimum(new_ids.min(axis=0), 0)
-    shifted = bool((neg < 0).any())
-    if shifted:
-        # keep the stored-ids >= 0 invariant by translating the integer
-        # lattice -- never by moving the float origin, which could
-        # re-cell existing points through rounding
-        shift = (-neg).astype(np.int64)
-        index.ids = index.ids + shift[None, :]
-        new_ids = new_ids + shift[None, :]
-        index.id_shift = index.id_shift + shift
-
-    # ---- 2. merge into the sorted structure -----------------------------
-    n_old = index.n
-    old_pt_ids = np.repeat(index.ids, index.counts, axis=0)       # [n, d]
-    all_ids = np.concatenate([old_pt_ids, new_ids])
-    order, sids, starts, counts, grid_of = group_rows(all_ids)
-    n = n_old + m
-    index.points = np.concatenate([index.points, B])[order]
-    index.arrival = np.concatenate(
-        [index.arrival, n_old + np.arange(m, dtype=np.int64)])[order]
-    index.core = np.concatenate([index.core, np.zeros(m, bool)])[order]
-    index.labels = np.concatenate(
-        [index.labels, np.full(m, -1, np.int64)])[order]
-    index.ids = sids[starts]
-    index.starts, index.counts = starts, counts
-    index.invalidate()
-    G = index.num_grids
-    pts, core = index.points, index.core
-    tree = index.tree
-    is_new = (order >= n_old)                                     # sorted
-
-    # ---- 3. core recompute over the touched stencil ---------------------
-    touched = np.unique(grid_of[is_new])
-    ip_t, nb_t, _ = tree.query(index.ids[touched], include_self=False)
-    affected = np.unique(np.concatenate([touched, nb_t]))
-    ip, nb, _ = tree.query(index.ids[affected], include_self=False)
-    newly_core_rows = []
-    dist_evals = 0
-    for k, g in enumerate(affected):
-        own = np.arange(starts[g], starts[g] + counts[g])
-        if counts[g] >= min_pts:                  # all-core shortcut
-            gain = own[~core[own]]
-        else:
-            cand = own[~core[own]]
-            if len(cand) == 0:
-                continue
-            p = pts[cand]
-            cnt = np.full(len(cand), counts[g], np.int64)
-            undecided = cnt < min_pts
-            for ng in nb[ip[k]:ip[k + 1]]:        # offset-ascending
-                if not undecided.any():
-                    break
-                crows = np.arange(starts[ng], starts[ng] + counts[ng])
-                d2 = ((p[undecided][:, None, :]
-                       - pts[crows][None, :, :]) ** 2).sum(-1)
-                dist_evals += d2.size
-                cnt[undecided] += (d2 <= eps2).sum(1)
-                undecided = cnt < min_pts
-            gain = cand[cnt >= min_pts]
-        if len(gain):
-            core[gain] = True
-            newly_core_rows.append(gain)
-    newly_core = (np.concatenate(newly_core_rows) if newly_core_rows
-                  else np.empty(0, np.int64))
-    index.invalidate()            # core CSR cache is stale now
-
-    # ---- 4. merge splice over grids whose core set changed --------------
-    core_per_grid = np.zeros(G, np.int64)
-    np.add.at(core_per_grid, grid_of[core], 1)
-    glabel = np.full(G, -1, np.int64)
-    # core points that already carry a cluster id: pre-insert cores, and
-    # former *border* points promoted to core (their old id is a real
-    # connection -- the witness core that labeled them survives)
-    labeled_core = core & (index.labels >= 0)
-    np.maximum.at(glabel, grid_of[labeled_core], index.labels[labeled_core])
-    fresh = (core_per_grid > 0) & (glabel < 0)    # all-new core grids
-    glabel[fresh] = index.next_label + np.arange(int(fresh.sum()))
-    n_comp = index.next_label + int(fresh.sum())
-    uf = UnionFind(n_comp)
-    merge_checks = 0
-    changed = (np.unique(grid_of[newly_core]) if len(newly_core)
-               else np.empty(0, np.int64))
-    if len(changed):
-        # inside a changed grid, every labeled core is <= eps from every
-        # other core of that grid (grid diagonal == eps), so all their
-        # cluster ids collapse into the grid's component.  Outside
-        # changed grids the previous state already guarantees one id per
-        # grid, so only changed grids need the sweep.
-        in_changed = np.zeros(G, bool)
-        in_changed[changed] = True
-        for r in np.flatnonzero(labeled_core & in_changed[grid_of]):
-            uf.union(int(index.labels[r]), int(glabel[grid_of[r]]))
-        ipc, nbc, _ = tree.query(index.ids[changed], include_self=False)
-        for k, g in enumerate(changed):
-            sg = pts[index.grid_core_rows(g)]
-            for g2 in nbc[ipc[k]:ipc[k + 1]]:
-                if core_per_grid[g2] == 0:
-                    continue
-                if uf.find(glabel[g]) == uf.find(glabel[g2]):
-                    continue
-                merge_checks += 1
-                if fast_merging(sg, pts[index.grid_core_rows(g2)], eps):
-                    uf.union(glabel[g], glabel[g2])
-    root = np.fromiter((uf.find(i) for i in range(n_comp)),
-                       np.int64, count=n_comp)
-    index.labels[core] = root[glabel[grid_of[core]]]
-    relabel = (~core) & (index.labels >= 0)
-    index.labels[relabel] = root[index.labels[relabel]]
-    index.next_label = n_comp
-
-    # ---- 5. border pass: new points + noise near newly-core grids -------
-    new_noise = np.flatnonzero(is_new & ~core)
-    region_noise = np.empty(0, np.int64)
-    if len(changed):
-        region = np.unique(np.concatenate([changed, nbc]))
-        in_region = np.zeros(G, bool)
-        in_region[region] = True
-        region_noise = np.flatnonzero(
-            in_region[grid_of] & ~core & (index.labels < 0))
-    cand_rows = np.unique(np.concatenate([new_noise, region_noise]))
-    if len(cand_rows):
-        cgrids = np.unique(grid_of[cand_rows])
-        ipb, nbb, _ = tree.query(index.ids[cgrids], include_self=False)
-        for k, g in enumerate(cgrids):
-            rows = cand_rows[(cand_rows >= starts[g])
-                             & (cand_rows < starts[g] + counts[g])]
-            crows = np.concatenate(
-                [index.grid_core_rows(g)]
-                + [index.grid_core_rows(g2) for g2 in nbb[ipb[k]:ipb[k + 1]]])
-            if len(crows) == 0:
-                continue
-            d2 = ((pts[rows][:, None, :] - pts[crows][None, :, :]) ** 2
-                  ).sum(-1)
-            dist_evals += d2.size
-            j = d2.argmin(axis=1)
-            dmin = d2[np.arange(len(rows)), j]
-            hit = dmin <= eps2
-            index.labels[rows[hit]] = index.labels[crows[j[hit]]]
-
-    return {
-        "inserted": m, "n": n, "touched_grids": int(len(touched)),
-        "affected_grids": int(len(affected)),
-        "changed_grids": int(len(changed)),
-        "newly_core": int(len(newly_core)),
-        # arrival ids of the newly-core rows: lets a multi-shard caller
-        # attribute promotions to owned vs ghost copies
-        "newly_core_arrival": index.arrival[newly_core],
-        "merge_checks": merge_checks, "dist_evals": dist_evals,
-        "id_shifted": shifted,
-        "t_total": time.perf_counter() - t0,
-    }
+__all__ = ["insert_batch"]

@@ -44,6 +44,22 @@ shards and unions their label pairs into the global label map (edges
 only at genuinely core shared points -- border labels are
 order-dependent and must never stitch clusters).  Read-outs and
 predictions resolve raw per-shard labels through the map.
+
+**Delete.**  A delete removes a point's authoritative copy *and* every
+ghost copy in one call, so each shard's local state stays
+self-consistently exact (the same invariant insert maintains); the
+shard-local removals run through the delta engine
+(``repro.index.delta``), which handles demotions, merge-edge loss and
+component splits per shard.  Cross-shard identity can now *split* --
+a union-only map cannot express that -- so after a delete the global
+``LabelMap`` is **rebuilt from the surviving shared-core witness
+edges**: exactly the pairs the incremental pass would union, collected
+over every boundary registry.  Any cross-shard connection that
+survived the delete is still witnessed by a shared core near a cut
+(the fit-time argument, unchanged), so the rebuilt map is exhaustive;
+anything no longer witnessed falls apart into the per-shard components
+the delta engine already split.  The registries are boundary-sized, so
+the rebuild costs O(ghost copies), not O(n).
 """
 
 from __future__ import annotations
@@ -57,8 +73,13 @@ import numpy as np
 from repro.dist.sharding import owner_of_slab, slab_cuts
 
 from .grit_index import GritIndex
+from .snapshot_io import check_version, load_snapshot, save_snapshot
 
-_SHARDED_SNAPSHOT_VERSION = 1
+# v2 carries deletions (tombstoned global ids appear as owner_shard ==
+# -1 and the per-shard sub-snapshots are v2); v1 snapshots restore
+# unchanged.
+_SHARDED_SNAPSHOT_VERSION = 2
+_SHARDED_ACCEPTED = (1, 2)
 
 
 class LabelMap:
@@ -141,8 +162,11 @@ class ShardedGritIndex:
     own_gids: List[np.ndarray]
     ghost_rows: List[np.ndarray]
     ghost_gids: List[np.ndarray]
-    owner_shard: np.ndarray        # [n] int64
+    owner_shard: np.ndarray        # [n] int64 (-1 = deleted)
     owner_row: np.ndarray          # [n] int64
+    # True once per-shard labels are per-local-component with disjoint
+    # arenas (the invariant deletion needs; see _ensure_localized)
+    localized: bool = False
 
     # ------------------------------------------------------------------
     # construction
@@ -215,8 +239,14 @@ class ShardedGritIndex:
 
     @property
     def n(self) -> int:
-        """Owned points (each physical point counted once)."""
+        """Global ids ever assigned (deleted ids included -- ids are
+        never reused, so this is also the next fresh id)."""
         return int(len(self.owner_shard))
+
+    @property
+    def n_live(self) -> int:
+        """Surviving owned points (each physical point counted once)."""
+        return int((self.owner_shard >= 0).sum())
 
     @property
     def d(self) -> int:
@@ -238,21 +268,26 @@ class ShardedGritIndex:
         return lo, hi
 
     def labels_arrival(self) -> np.ndarray:
-        """Canonical labels in global arrival order (fit order, inserts
-        appended) -- per-shard raw labels resolved through the map."""
-        out = np.empty(self.n, np.int64)
+        """Canonical labels of the *live* points in global arrival
+        order (fit order, inserts appended, deleted ids omitted) --
+        per-shard raw labels resolved through the map."""
+        out = np.full(self.n, -1, np.int64)
         for k, idx in enumerate(self.shards):
-            la = idx.labels_arrival()
-            out[self.own_gids[k]] = la[self.own_rows[k]]
-        return self.label_map.resolve(out)
+            out[self.own_gids[k]] = idx.labels_at(self.own_rows[k])
+        return self.label_map.resolve(out[self.owner_shard >= 0])
 
     def core_arrival(self) -> np.ndarray:
-        """Core flags in global arrival order (owner copies: exact)."""
-        out = np.empty(self.n, bool)
+        """Core flags of the live points in global arrival order
+        (owner copies: exact)."""
+        out = np.zeros(self.n, bool)
         for k, idx in enumerate(self.shards):
-            ca = idx.core_arrival()
-            out[self.own_gids[k]] = ca[self.own_rows[k]]
-        return out
+            out[self.own_gids[k]] = idx.core_at(self.own_rows[k])
+        return out[self.owner_shard >= 0]
+
+    def arrival_live(self) -> np.ndarray:
+        """Sorted global ids of the surviving points (what
+        :meth:`labels_arrival` rows correspond to)."""
+        return np.flatnonzero(self.owner_shard >= 0)
 
     # ------------------------------------------------------------------
     # predict
@@ -318,6 +353,9 @@ class ShardedGritIndex:
     # insert
     # ------------------------------------------------------------------
 
+    _SUMMED = ("touched_grids", "affected_grids", "changed_grids",
+               "merge_checks", "dist_evals", "relabeled")
+
     def insert(self, batch) -> Dict[str, Any]:
         """Micro-batch insert confined to the touched shards.
 
@@ -325,6 +363,15 @@ class ShardedGritIndex:
         shard (plus ghost copies into neighbors whose band contains the
         point), then re-reconciles cluster identity over the shared
         points adjacent to the touched shards (module docstring).
+
+        Returns the **unified mutation stats schema** -- the same keys
+        as ``GritIndex.insert`` (see
+        :func:`repro.index.delta.insert_batch`), with the per-grid /
+        per-eval counters summed over the touched shards,
+        ``newly_core`` deduplicated to owned copies, and ``id_shifted``
+        true if any shard translated its lattice.  Sharded extras:
+        ``shards_touched``, ``reconcile_unions`` and ``per_shard``
+        (the raw per-shard breakdowns).
         """
         t0 = time.perf_counter()
         B = np.asarray(batch, np.float64)
@@ -333,8 +380,11 @@ class ShardedGritIndex:
                              f"got {B.shape}")
         m = B.shape[0]
         if m == 0:
-            return {"inserted": 0, "n": self.n, "shards_touched": [],
-                    "newly_core": 0, "reconcile_unions": 0,
+            return {"op": "insert", "inserted": 0, "n": self.n,
+                    "n_live": self.n_live,
+                    **{f: 0 for f in self._SUMMED},
+                    "newly_core": 0, "id_shifted": False,
+                    "shards_touched": [], "reconcile_unions": 0,
                     "per_shard": [],
                     "t_total": time.perf_counter() - t0}
         if not np.isfinite(B).all():
@@ -356,7 +406,10 @@ class ShardedGritIndex:
             oidx = np.flatnonzero(own_sel)
             gidx = np.flatnonzero(ghost_sel)
             shard = self.shards[k]
-            n_before = shard.n
+            # the delta engine assigns shard-local arrival ids from
+            # next_arrival (NOT from n: after a delete + compaction the
+            # two diverge, ids are never reused)
+            n_before = shard.next_arrival
             # fresh cluster ids come from the shared global sequence,
             # so two shards can never mint the same id
             shard.next_label = self.next_label
@@ -382,16 +435,21 @@ class ShardedGritIndex:
             per_shard.append({
                 "shard": k, "own": int(len(oidx)),
                 "ghost": int(len(gidx)), "newly_core_own": nc_own,
-                **{f: st[f] for f in ("touched_grids", "affected_grids",
-                                      "changed_grids", "newly_core",
-                                      "merge_checks", "dist_evals")}})
+                "newly_core": st["newly_core"],
+                "id_shifted": st["id_shifted"],
+                **{f: st[f] for f in self._SUMMED}})
         self.owner_shard = np.concatenate([self.owner_shard, owner])
         self.owner_row = np.concatenate([self.owner_row, owner_row_new])
         self.label_map.grow(self.next_label)
         unions = self._reconcile(touched)
-        return {"inserted": m, "n": self.n, "shards_touched": touched,
+        return {"op": "insert", "inserted": m, "n": self.n,
+                "n_live": self.n_live,
+                **{f: sum(s[f] for s in per_shard)
+                   for f in self._SUMMED},
                 "newly_core": int(sum(s["newly_core_own"]
                                       for s in per_shard)),
+                "id_shifted": any(s["id_shifted"] for s in per_shard),
+                "shards_touched": touched,
                 "reconcile_unions": unions, "per_shard": per_shard,
                 "t_total": time.perf_counter() - t0}
 
@@ -404,48 +462,167 @@ class ShardedGritIndex:
         border labels are legitimately order-dependent and must never
         merge clusters.
         """
-        touched_set = set(touched)
-        if not touched_set:
+        if not touched:
             return 0
-        lab_cache: Dict[int, np.ndarray] = {}
-        core_cache: Dict[int, np.ndarray] = {}
+        return self._union_witness_edges(self.label_map, set(touched))
 
-        def lab_of(k: int) -> np.ndarray:
-            if k not in lab_cache:
-                lab_cache[k] = self.shards[k].labels_arrival()
-            return lab_cache[k]
+    def _union_witness_edges(self, lm: LabelMap,
+                             touched: Optional[set] = None) -> int:
+        """Union every surviving shared-core witness pair into ``lm``.
 
-        def core_of(k: int) -> np.ndarray:
-            if k not in core_cache:
-                core_cache[k] = self.shards[k].core_arrival()
-            return core_cache[k]
-
+        The one enumeration both reconciliation directions share: walk
+        the ghost registries, and for every ghost copy whose
+        authoritative (owner) copy is core and both copies carry
+        labels, union the (owner label, ghost label) pair.  Core
+        witnesses only -- border labels are order-dependent and must
+        never stitch clusters.  ``touched`` restricts the walk to
+        ghosts in (or owned by) those shards -- insert's incremental
+        patch; ``None`` walks every registry -- delete's rebuild.
+        Returns the union count.
+        """
         unions = 0
-        for k in range(self.num_shards):
+        for k, shard in enumerate(self.shards):
             gg = self.ghost_gids[k]
             if len(gg) == 0:
                 continue
             own_s = self.owner_shard[gg]
-            if k in touched_set:
+            if touched is None or k in touched:
                 mask = np.ones(len(gg), bool)
             else:
-                mask = np.isin(own_s, np.asarray(sorted(touched_set)))
+                mask = np.isin(own_s, np.asarray(sorted(touched)))
             if not mask.any():
                 continue
-            gr = self.ghost_rows[k][mask]
+            glab = shard.labels_at(self.ghost_rows[k][mask])
             gid = gg[mask]
             own_s = own_s[mask]
-            glab = lab_of(k)[gr]
             for o in np.unique(own_s):
                 sel = own_s == o
                 orow = self.owner_row[gid[sel]]
-                olab = lab_of(int(o))[orow]
-                ocore = core_of(int(o))[orow]
+                olab = self.shards[int(o)].labels_at(orow)
+                ocore = self.shards[int(o)].core_at(orow)
                 ok = ocore & (olab >= 0) & (glab[sel] >= 0) \
                     & (olab != glab[sel])
                 for a, b in zip(olab[ok], glab[sel][ok]):
-                    unions += self.label_map.union(int(a), int(b))
+                    unions += lm.union(int(a), int(b))
         return int(unions)
+
+    # ------------------------------------------------------------------
+    # delete
+    # ------------------------------------------------------------------
+
+    def _ensure_localized(self) -> None:
+        """Re-mint per-shard labels as per-local-component ids (once).
+
+        A global fit hands every shard the *global* cluster ids, which
+        is fine for insert-only traffic (components only ever merge,
+        and the union-only map absorbs that).  Deletion breaks it: a
+        raw id shared by two shards -- or spanning two locally
+        disconnected pieces whose connection runs through a third
+        shard's coverage -- cannot be split by any label *map* once the
+        connection is severed, because both uses resolve through the
+        same id.  So before the first delete, every shard re-mints its
+        labels per local merge-graph component from the shared fresh
+        sequence (arenas disjoint forever after), and cross-shard
+        identity moves entirely into the witness-edge map, where a
+        rebuild CAN express splits.  A pure rename: the read-out
+        partition is unchanged.  Mutations maintain the invariant
+        inductively (insert merges keep one id per component; delete
+        splits mint fresh ids for the non-keeper sides).
+        """
+        if self.localized:
+            return
+        from .delta import relabel_local_components
+        for shard in self.shards:
+            shard.next_label = self.next_label
+            relabel_local_components(shard)
+            self.next_label = shard.next_label
+        self.localized = True
+        self._rebuild_label_map()
+
+    def delete(self, arrival_ids) -> Dict[str, Any]:
+        """Exactly remove points by global arrival id, across shards.
+
+        Every physical copy goes at once -- the owner copy and each
+        ghost copy in a neighbor's band -- so per-shard local state
+        stays self-consistently exact; shard-local removal runs through
+        the delta engine (demotions, merge-edge loss, component
+        splits, threshold compaction).  Because deletion can *split*
+        cross-shard clusters, the global label map is then rebuilt from
+        the surviving shared-core witness edges (module docstring),
+        not union-patched.
+
+        Unknown / already-deleted ids are rejected (reported, not
+        raised).  Returns the unified mutation stats schema with
+        ``op="delete"`` (per-grid counters shard-summed, ``demoted``
+        deduplicated to owned copies) plus ``rejected`` /
+        ``rejected_ids``, ``shards_touched``, ``reconcile_unions``
+        (unions in the rebuilt map) and ``per_shard``.
+        """
+        t0 = time.perf_counter()
+        self._ensure_localized()
+        ids = np.unique(np.asarray(arrival_ids, np.int64).ravel())
+        valid = (ids >= 0) & (ids < self.n)
+        valid[valid] = self.owner_shard[ids[valid]] >= 0
+        gids, rejected = ids[valid], ids[~valid]
+        kill = np.zeros(self.n, bool)
+        kill[gids] = True
+        touched: List[int] = []
+        per_shard: List[Dict[str, Any]] = []
+        for k, shard in enumerate(self.shards):
+            own_m = kill[self.own_gids[k]]
+            ghost_m = kill[self.ghost_gids[k]]
+            if not (own_m.any() or ghost_m.any()):
+                continue
+            shard.next_label = self.next_label
+            st = shard.delete(np.concatenate(
+                [self.own_rows[k][own_m], self.ghost_rows[k][ghost_m]]))
+            self.next_label = shard.next_label
+            # count demotions on owned copies only -- a shared (ghost)
+            # copy demotes in every shard holding it, and summing raw
+            # per-shard counts would double-count (same dedupe as
+            # insert's newly_core)
+            demoted_own = int((~np.isin(st["demoted_arrival"],
+                                        self.ghost_rows[k])).sum())
+            self.own_rows[k] = self.own_rows[k][~own_m]
+            self.own_gids[k] = self.own_gids[k][~own_m]
+            self.ghost_rows[k] = self.ghost_rows[k][~ghost_m]
+            self.ghost_gids[k] = self.ghost_gids[k][~ghost_m]
+            touched.append(k)
+            per_shard.append({
+                "shard": k, "own": int(own_m.sum()),
+                "ghost": int(ghost_m.sum()),
+                "deleted": st["deleted"], "demoted": st["demoted"],
+                "demoted_own": demoted_own,
+                "compacted": st["compacted"],
+                **{f: st[f] for f in self._SUMMED}})
+        self.owner_shard[gids] = -1
+        self.owner_row[gids] = -1
+        unions = self._rebuild_label_map()
+        return {"op": "delete", "requested": int(len(ids)),
+                "deleted": int(len(gids)),
+                "rejected": int(len(rejected)), "rejected_ids": rejected,
+                "n": self.n, "n_live": self.n_live,
+                **{f: sum(s[f] for s in per_shard)
+                   for f in self._SUMMED},
+                "demoted": int(sum(s["demoted_own"] for s in per_shard)),
+                "compacted": any(s["compacted"] for s in per_shard),
+                "shards_touched": touched,
+                "reconcile_unions": unions, "per_shard": per_shard,
+                "t_total": time.perf_counter() - t0}
+
+    def _rebuild_label_map(self) -> int:
+        """Reconstruct the global map from surviving witness edges.
+
+        The delete-direction twin of :meth:`_reconcile`: instead of
+        union-patching (which cannot express a split), start from a
+        fresh identity map over the shared ``next_label`` arena and
+        union exactly the (owner label, ghost label) pairs still
+        witnessed by a core shared point.  Returns the union count.
+        """
+        lm = LabelMap(self.next_label)
+        unions = self._union_witness_edges(lm)
+        self.label_map = lm
+        return unions
 
     # ------------------------------------------------------------------
     # snapshot / restore
@@ -461,8 +638,8 @@ class ShardedGritIndex:
             "cuts": np.asarray(self.cuts, np.float64),
             "scalars_f": np.asarray([self.eps], np.float64),
             "scalars_i": np.asarray(
-                [self.min_pts, self.next_label, self.num_shards],
-                np.int64),
+                [self.min_pts, self.next_label, self.num_shards,
+                 int(self.localized)], np.int64),
             "label_parent": self.label_map.parent.copy(),
             "owner_shard": self.owner_shard.copy(),
             "owner_row": self.owner_row.copy(),
@@ -480,10 +657,8 @@ class ShardedGritIndex:
 
     @classmethod
     def restore(cls, snap: Dict[str, np.ndarray]) -> "ShardedGritIndex":
-        version = int(np.asarray(snap["sharded_version"])[0])
-        if version != _SHARDED_SNAPSHOT_VERSION:
-            raise ValueError(f"sharded snapshot version {version} != "
-                             f"{_SHARDED_SNAPSHOT_VERSION}")
+        check_version(snap, "sharded_version", _SHARDED_ACCEPTED,
+                      "sharded snapshot")
         sf = np.asarray(snap["scalars_f"], np.float64)
         si = np.asarray(snap["scalars_i"], np.int64)
         K = int(si[2])
@@ -512,15 +687,15 @@ class ShardedGritIndex:
                    own_rows=own_rows, own_gids=own_gids,
                    ghost_rows=ghost_rows, ghost_gids=ghost_gids,
                    owner_shard=np.asarray(snap["owner_shard"], np.int64),
-                   owner_row=np.asarray(snap["owner_row"], np.int64))
+                   owner_row=np.asarray(snap["owner_row"], np.int64),
+                   localized=bool(si[3]) if len(si) > 3 else False)
 
     def save(self, path) -> None:
-        np.savez(path, **self.snapshot())
+        save_snapshot(path, self.snapshot())
 
     @classmethod
     def load(cls, path) -> "ShardedGritIndex":
-        with np.load(path) as data:
-            return cls.restore({k: data[k] for k in data.files})
+        return cls.restore(load_snapshot(path))
 
 
 def fit_sharded(points, eps: float, min_pts: int, *,

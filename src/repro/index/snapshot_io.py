@@ -1,0 +1,40 @@
+"""Shared snapshot plumbing for the fitted indexes.
+
+``GritIndex`` and ``ShardedGritIndex`` both serialize as a dict of flat
+numpy arrays; the ``.npz`` read/write boilerplate (and the version
+guard) used to be copy-pasted between them.  This module is the single
+home for it: a snapshot *is* a ``Dict[str, np.ndarray]``, and these
+helpers move one between memory and a ``np.savez`` file.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Sequence
+
+import numpy as np
+
+
+def save_snapshot(path, snap: Dict[str, np.ndarray]) -> None:
+    """Write a flat-array snapshot dict as one ``.npz`` file/buffer."""
+    np.savez(path, **snap)
+
+
+def load_snapshot(path) -> Dict[str, np.ndarray]:
+    """Read a ``.npz`` file/buffer back into a plain snapshot dict."""
+    with np.load(path) as data:
+        return {k: data[k] for k in data.files}
+
+
+def check_version(snap: Dict[str, np.ndarray], key: str,
+                  accepted: Sequence[int], what: str) -> int:
+    """Validate a snapshot's schema version and return it.
+
+    ``accepted`` lists every version ``restore()`` knows how to read
+    (older versions stay restorable: missing arrays are rebuilt lazily
+    by the caller).  Unknown versions raise, never mis-parse.
+    """
+    version = int(np.asarray(snap[key])[0])
+    if version not in tuple(accepted):
+        raise ValueError(
+            f"{what} version {version} not in supported {tuple(accepted)}")
+    return version

@@ -5,14 +5,22 @@ into batch slots, runs one jitted program per step, and swaps finished
 sequences out; this driver applies the same discipline to point-query
 traffic against a fitted :class:`~repro.index.GritIndex`:
 
-* requests arrive as *ragged* [m_i, d] query batches and are admitted
-  into ``slots`` request slots of ``query_cap`` queries each -- the
-  step's admission budget (slot occupancy is reported per step);
-* each step concatenates the admitted requests and runs one batched
-  :meth:`GritIndex.predict` over them, then retires every slot (point
-  queries finish in one step, so continuous batching reduces to
-  refilling all slots from the queue).  The *jit-facing* fixed shapes
-  live inside the index (`PredictCaps` slot packing), not here;
+* requests arrive as *ragged* [m_i, d] query batches -- or as mutation
+  requests (:meth:`ClusterServer.submit_insert` /
+  :meth:`ClusterServer.submit_delete`) -- and are admitted into
+  ``slots`` request slots of ``query_cap`` queries each -- the step's
+  admission budget (slot occupancy is reported per step);
+* each step applies the admitted mutations in submission order, then
+  concatenates the admitted query requests and runs one batched
+  :meth:`GritIndex.predict` over them (predicts in a step observe the
+  step's mutations), then retires every slot (requests finish in one
+  step, so continuous batching reduces to refilling all slots from the
+  queue).  The *jit-facing* fixed shapes live inside the index
+  (`PredictCaps` slot packing), not here.  Delete requests carry
+  rejected-id telemetry through the step log and summary: unknown /
+  already-deleted ids are normal serving traffic (TTL expiry racing
+  explicit erasure, replays), rejected per id by the index, and must
+  never poison the co-batched requests;
 * caps grow, never shrink: an oversized request bumps the admission
   shape ``query_cap`` to the next power of two (the adaptive driver's
   quantization, shared via ``_pow2_at_least``), and the kernel path's
@@ -51,12 +59,18 @@ from repro.engine.adaptive import _pow2_at_least
 
 @dataclasses.dataclass
 class ClusterRequest:
-    """One in-flight query batch."""
+    """One in-flight request: a ragged query batch (``kind="predict"``),
+    a micro-batch insert (``kind="insert"``) or a delete-by-arrival-ids
+    (``kind="delete"``).  Mutations carry their stats dict back on
+    ``result``; predicts carry ``labels``."""
 
     rid: int
-    points: np.ndarray                    # [m, d] ragged
+    points: np.ndarray                    # [m, d] ragged (empty: delete)
     t_submit: float
+    kind: str = "predict"
+    ids: Optional[np.ndarray] = None      # delete requests: arrival ids
     labels: Optional[np.ndarray] = None   # [m] int64 once served
+    result: Optional[Dict[str, Any]] = None   # mutation stats once applied
     t_done: float = 0.0
 
     @property
@@ -77,6 +91,7 @@ class ClusterServer:
         self.done: List[ClusterRequest] = []
         self.growth_events: List[Dict[str, Any]] = []
         self.step_log: List[Dict[str, Any]] = []
+        self.rejected_ids: List[np.ndarray] = []   # delete telemetry
         self._next_rid = 0
 
     # ------------------------------------------------------------------
@@ -100,8 +115,43 @@ class ClusterServer:
         self.pending.append(req)
         return req.rid
 
+    def submit_insert(self, points) -> int:
+        """Enqueue a micro-batch insert; validated at admission like
+        predicts, co-batched into a serving step with them."""
+        pts = np.asarray(points, np.float64)
+        if pts.ndim != 2 or pts.shape[1] != self.index.d:
+            raise ValueError(
+                f"request must be [m, {self.index.d}], got {pts.shape}")
+        if not np.isfinite(pts).all():
+            raise ValueError("request contains non-finite coordinates")
+        req = ClusterRequest(rid=self._next_rid, points=pts,
+                             kind="insert", t_submit=time.perf_counter())
+        self._next_rid += 1
+        self.pending.append(req)
+        return req.rid
+
+    def submit_delete(self, arrival_ids) -> int:
+        """Enqueue a delete-by-arrival-ids request.
+
+        Unknown / already-deleted ids are not an admission error -- the
+        index rejects them individually and the step log carries the
+        rejected-id telemetry (TTL races and replays are normal
+        traffic, and one bad id must not poison a co-batched step).
+        """
+        ids = np.asarray(arrival_ids, np.int64).ravel()
+        req = ClusterRequest(rid=self._next_rid,
+                             points=np.zeros((0, self.index.d)),
+                             kind="delete", ids=ids,
+                             t_submit=time.perf_counter())
+        self._next_rid += 1
+        self.pending.append(req)
+        return req.rid
+
     def step(self) -> List[ClusterRequest]:
-        """Serve one batch: fill up to ``slots`` slots, one predict call.
+        """Serve one batch: fill up to ``slots`` slots, apply the
+        admitted mutations (in submission order), then one predict call
+        over the co-batched query requests -- predicts in a step
+        observe that step's mutations.
 
         Returns the requests finished this step (empty when idle).
         """
@@ -110,7 +160,8 @@ class ClusterServer:
             active.append(self.pending.popleft())
         if not active:
             return []
-        need = max(len(r.points) for r in active)
+        predicts = [r for r in active if r.kind == "predict"]
+        need = max((len(r.points) for r in predicts), default=0)
         if need > self.query_cap:
             grown = _pow2_at_least(need, lo=8)
             self.growth_events.append(
@@ -118,11 +169,24 @@ class ClusterServer:
                  "was": self.query_cap, "now": grown})
             self.query_cap = grown
 
-        flat = np.concatenate([r.points for r in active])
-        pstats: Dict[str, Any] = {}
         t0 = time.perf_counter()
-        flat_labels = self.index.predict(flat, mode=self.mode,
-                                         stats=pstats)
+        inserted = deleted = rejected = 0
+        for r in active:
+            if r.kind == "insert":
+                r.result = self.index.insert(r.points)
+                inserted += r.result["inserted"]
+            elif r.kind == "delete":
+                r.result = self.index.delete(r.ids)
+                deleted += r.result["deleted"]
+                if r.result["rejected"]:
+                    rejected += r.result["rejected"]
+                    self.rejected_ids.append(r.result["rejected_ids"])
+        pstats: Dict[str, Any] = {}
+        flat = (np.concatenate([r.points for r in predicts])
+                if predicts else np.zeros((0, self.index.d)))
+        flat_labels = (self.index.predict(flat, mode=self.mode,
+                                          stats=pstats)
+                       if len(flat) else np.empty(0, np.int64))
         t_step = time.perf_counter() - t0
         if pstats.get("caps_grew"):
             self.growth_events.append(
@@ -132,14 +196,17 @@ class ClusterServer:
         off = 0
         now = time.perf_counter()
         for r in active:
-            m = len(r.points)
-            r.labels = flat_labels[off:off + m]
-            off += m
+            if r.kind == "predict":
+                m = len(r.points)
+                r.labels = flat_labels[off:off + m]
+                off += m
             r.t_done = now
             self.done.append(r)
         self.step_log.append(
             {"requests": len(active), "queries": len(flat),
              "slot_fill": len(flat) / (self.slots * self.query_cap),
+             "inserted": inserted, "deleted": deleted,
+             "rejected": rejected,
              "seconds": t_step, "predict": pstats})
         return active
 
@@ -156,9 +223,15 @@ class ClusterServer:
         lat = np.asarray([r.latency_ms for r in self.done], np.float64)
         served_s = sum(s["seconds"] for s in self.step_log)
         queries = sum(s["queries"] for s in self.step_log)
+        rejected = (np.concatenate(self.rejected_ids)
+                    if self.rejected_ids else np.empty(0, np.int64))
         return {
             "requests": len(self.done),
             "queries": queries,
+            "inserted": sum(s["inserted"] for s in self.step_log),
+            "deleted": sum(s["deleted"] for s in self.step_log),
+            "rejected": int(len(rejected)),
+            "rejected_ids": rejected,
             "steps": len(self.step_log),
             "latency_ms_p50": float(np.percentile(lat, 50)) if len(lat) else 0.0,
             "latency_ms_p95": float(np.percentile(lat, 95)) if len(lat) else 0.0,
@@ -187,6 +260,11 @@ def main() -> None:
                     help="serve from an N-slab ShardedGritIndex "
                          "(slab-routed predict) instead of the "
                          "single-host index")
+    ap.add_argument("--mutate", action="store_true",
+                    help="mix insert and delete requests into the "
+                         "stream (~70/20/10 predict/insert/delete, "
+                         "incl. one bogus delete id for the rejected "
+                         "telemetry)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -216,20 +294,40 @@ def main() -> None:
     rng = np.random.default_rng(args.seed)
     n_req = 6 if args.smoke else args.num_requests
     srv = ClusterServer(index, slots=args.slots, mode=args.mode)
-    for _ in range(n_req):
+    deletable = list(range(len(pts)))
+    for i in range(n_req):
+        kind = (rng.choice(["predict", "insert", "delete"],
+                           p=[0.7, 0.2, 0.1]) if args.mutate
+                else "predict")
         m = int(rng.integers(4, args.max_queries + 1))
         near = pts[rng.integers(0, len(pts), m)] + rng.normal(
             scale=sc.eps * 0.25, size=(m, sc.d))
-        srv.submit(near)
+        if kind == "insert":
+            srv.submit_insert(near[:max(m // 4, 1)])
+        elif kind == "delete" and deletable:
+            k = min(len(deletable), int(rng.integers(1, 9)))
+            pick = rng.choice(len(deletable), k, replace=False)
+            ids = [deletable[j] for j in pick]
+            for j in sorted(pick)[::-1]:
+                deletable.pop(j)
+            # one bogus id exercises the rejected-id telemetry
+            srv.submit_delete(np.asarray(ids + [10 ** 9]))
+        else:
+            srv.submit(near)
     srv.run()
     s = srv.summary()
     print(f"served {s['requests']} requests / {s['queries']} queries in "
           f"{s['steps']} steps ({s['queries_per_s']:.0f} q/s)")
+    if args.mutate:
+        print(f"  mutations: {s['inserted']} inserted, "
+              f"{s['deleted']} deleted, {s['rejected']} delete ids "
+              f"rejected {s['rejected_ids'][:4].tolist()}...")
     print(f"  latency p50 {s['latency_ms_p50']:.2f}ms  "
           f"p95 {s['latency_ms_p95']:.2f}ms  "
           f"slot fill {s['mean_slot_fill']:.2f}  "
           f"cap growth events: {len(s['growth_events'])}")
-    noise = sum(int((r.labels < 0).sum()) for r in srv.done)
+    noise = sum(int((r.labels < 0).sum()) for r in srv.done
+                if r.labels is not None)
     print(f"  noise rate {noise / max(s['queries'], 1):.2f}")
     if args.sharded:
         routed = sum(st["predict"].get("multi_routed", 0)

@@ -197,8 +197,12 @@ def test_insert_matches_from_scratch_recluster(name, fitted):
 
 
 def test_insert_bridge_across_cut_merges_labels(fitted):
-    """A dense bridge laid across a cut must union the two sides'
-    cluster ids through the global label map (not per-shard arrays)."""
+    """A dense bridge laid across a cut must merge the two sides'
+    cluster ids in the global read-out.  (The mechanism is not pinned:
+    when both shards' coverage sees the whole bridge, the delta
+    engine's component relabel converges on one raw id locally and the
+    label map has nothing left to union; a merge invisible to one
+    neighbor goes through the witness-edge reconciliation instead.)"""
     ss, pts, _ = fitted("slab-serve-2d")
     eps, min_pts = ss.base.eps, ss.base.min_pts
     sidx = fit_sharded(pts, eps, min_pts, n_shards=4, engine="grit")
@@ -222,7 +226,7 @@ def test_insert_bridge_across_cut_merges_labels(fitted):
     l_right = la[len(pts) + len(left):]
     assert (l_left >= 0).all() and (l_right >= 0).all()
     st = sidx.insert(chain)
-    assert st["reconcile_unions"] >= 1
+    assert st["newly_core"] > 0
     la = sidx.labels_arrival()
     merged = set(la[len(pts):len(pts) + len(left) + len(right)].tolist())
     assert len(merged) == 1, f"bridge left {merged} distinct labels"
