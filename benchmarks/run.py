@@ -27,6 +27,12 @@ predict-vs-refit check gates the run.
 full refit per batch, n = 1e5 blobs) and writes ``BENCH_5.json``; the
 >= 10x churn-step-vs-refit check gates the run.
 
+``--serve-device`` runs the device-resident serving benchmark
+(identical mixed predict/insert/delete traffic replayed on the host
+numpy path and the device-resident path, reporting the kernel-vs-
+host-packing time split) and writes ``BENCH_6.json``; two checks gate
+the run: device throughput >= host, and bitwise-equal outputs.
+
 ``--distributed`` runs the *sharded* serving-plane benchmark
 (``ShardedGritIndex`` slab-routed predict/insert vs a distributed refit
 per query batch, on a mesh over every visible device) and writes
@@ -102,6 +108,33 @@ def _write_bench5(path: str, rows) -> bool:
         f.write("\n")
     print(f"wrote {path} ({len(rows)} rows)")
     return verdict
+
+
+def _write_bench6(path: str, rows) -> bool:
+    """Dump the device-serving rows + verdict as BENCH_6.json.
+
+    Verdict: the device-resident serving path matches or beats host
+    throughput on identical mixed traffic, *and* its outputs (predict
+    label streams + final ``labels_arrival``) are bitwise equal to the
+    host run -- the device plane is only allowed to be a faster route
+    to the same answer."""
+    import jax
+
+    dev = [r for r in rows if r.get("op") == "device"]
+    ge_host = bool(dev) and all(r["speedup_vs_host"] >= 1.0 for r in dev)
+    exact = bool(dev) and all(r["exact"] for r in dev)
+    payload = {
+        "bench": "BENCH_6",
+        "backend": jax.default_backend(),
+        "rows": rows,
+        "checks": {"device_serve_ge_host_throughput": ge_host,
+                   "device_bitwise_equal_host": exact},
+    }
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2)
+        f.write("\n")
+    print(f"wrote {path} ({len(rows)} rows)")
+    return ge_host and exact
 
 
 def _write_bench4(path: str, rows) -> bool:
@@ -181,6 +214,15 @@ def main() -> int:
                          "refit-per-batch); writes BENCH_5.json")
     ap.add_argument("--churn-n", type=int, default=100_000,
                     help="fit-set size for --churn")
+    ap.add_argument("--serve-device", action="store_true",
+                    help="device-resident serving bench only (identical "
+                         "mixed traffic on the host vs device path, "
+                         "kernel-vs-packing split + bitwise exactness); "
+                         "writes BENCH_6.json")
+    ap.add_argument("--serve-device-n", type=int, default=60_000,
+                    help="fit-set size for --serve-device")
+    ap.add_argument("--serve-device-steps", type=int, default=8,
+                    help="timed waves for --serve-device")
     ap.add_argument("--distributed", action="store_true",
                     help="sharded serving-plane bench only "
                          "(ShardedGritIndex predict/insert vs a "
@@ -200,6 +242,7 @@ def main() -> int:
     if args.json_out is None:
         args.json_out = ("BENCH_4.json" if args.distributed
                          else "BENCH_5.json" if args.churn
+                         else "BENCH_6.json" if args.serve_device
                          else "BENCH_3.json" if args.serve
                          else "BENCH_2.json")
 
@@ -224,6 +267,20 @@ def main() -> int:
         print(f"[{'PASS' if ok else 'FAIL'}] sharded predict >= 10x "
               f"faster than a distributed refit per query batch "
               f"(n={args.dist_n})")
+        return 0 if ok else 1
+
+    if args.serve_device:
+        from benchmarks import serve_device_bench as SD
+        rows = SD.bench_serve_device(n=args.serve_device_n,
+                                     steps=args.serve_device_steps)
+        csv_text = _print_csv(rows)
+        if args.out:
+            with open(args.out, "w") as f:
+                f.write(csv_text)
+        ok = _write_bench6(args.json_out, rows)
+        print(f"[{'PASS' if ok else 'FAIL'}] device-resident serving "
+              f">= host throughput and bitwise-equal outputs "
+              f"(n={args.serve_device_n})")
         return 0 if ok else 1
 
     if args.churn:

@@ -1,0 +1,177 @@
+"""Device-resident serving benchmark: identical mixed traffic replayed
+against a host-path and a device-path :class:`ClusterServer` (the
+BENCH_6.json artifact).
+
+The device serving plane (``GritIndex.ensure_device_state``) keeps the
+CSR-sorted points, core/alive flags and merge-edge arrays resident as
+donated device buffers and runs predict + the delta engine's
+core-recompute / merge re-decision through flat guard-band kernels; the
+host numpy path stays the reference.  This bench quantifies both claims
+at once:
+
+* ``fit``    -- one ``cluster(..., return_index=True)`` run; the fitted
+               index is snapshot-cloned so both servers start from the
+               *same* bits.
+* ``host``   -- wall time serving ``steps`` pre-scripted mixed waves
+               (predict / insert / delete) on the numpy path.
+* ``device`` -- the same waves, byte-identical traffic, on the
+               device-resident path; reports the per-step
+               ``kernel_s`` / ``pack_s`` split from the step log, the
+               throughput ratio against the host row, and ``exact``:
+               every predict label stream *and* the final
+               ``labels_arrival()`` must be bitwise equal to the host
+               server's.
+
+Warmup waves (same traffic generator, separate draw) are served first
+on each path and excluded from timing: they pay jit compilation and
+saturate the pow2 upload-bucket set, which is steady-state-irrelevant
+one-time cost.  The headline checks -- device throughput >= host and
+``exact`` -- gate the run in ``benchmarks.run``.
+"""
+
+from __future__ import annotations
+
+import io
+import time
+from typing import Dict, List
+
+import numpy as np
+
+
+def _script_traffic(pts, eps, d, rng, waves, n_pred, n_ins, n_del,
+                    alive, next_id):
+    """Pre-script ``waves`` mixed waves of traffic.
+
+    Both servers must observe *identical* requests, so the kill ids are
+    drawn against a simulated alive set (initially the fitted arrival
+    ids; inserts extend it) rather than against either live index.
+    Returns (script, alive, next_id) so warmup and timed traffic chain.
+    """
+    n = len(pts)
+    lo, hi = pts.min() - 5 * eps, pts.max() + 5 * eps
+
+    def points(m):
+        near_m = int(0.8 * m)
+        near = pts[rng.integers(0, n, near_m)] + rng.normal(
+            scale=0.3 * eps, size=(near_m, d))
+        far = rng.uniform(lo, hi, size=(m - near_m, d))
+        return np.concatenate([near, far])
+
+    script = []
+    for _ in range(waves):
+        ins = points(n_ins)
+        kill = rng.choice(len(alive), size=n_del, replace=False)
+        kill_ids = np.asarray([alive[k] for k in kill], np.int64)
+        keep = np.ones(len(alive), bool)
+        keep[kill] = False
+        alive = [a for a, k in zip(alive, keep) if k] + \
+            list(range(next_id, next_id + n_ins))
+        next_id += n_ins
+        script.append(dict(queries=points(n_pred), inserts=ins,
+                           kills=kill_ids))
+    return script, alive, next_id
+
+
+def _serve_wave(server, wave, reqs_per_wave, labels):
+    """Serve one scripted wave; appends predict labels, returns wall s."""
+    q = wave["queries"]
+    per = len(q) // reqs_per_wave
+    t0 = time.perf_counter()
+    rids = [server.submit(q[i * per:(i + 1) * per])
+            for i in range(reqs_per_wave)]
+    server.submit_insert(wave["inserts"])
+    server.submit_delete(wave["kills"])
+    done = {r.rid: r for r in server.run()}
+    labels.extend(done[rid].labels for rid in rids)
+    return time.perf_counter() - t0
+
+
+def bench_serve_device(n: int = 60_000, scenario: str = "blobs-2d",
+                       batch: int = 2048, steps: int = 8,
+                       warmup: int = 6, seed: int = 0) -> List[Dict]:
+    """Rows for the device-serving bench (see module docstring)."""
+    from repro.data.scenarios import get_scenario
+    from repro.engine import cluster
+    from repro.index import GritIndex
+    from repro.serve.driver import ClusterServer
+
+    sc = get_scenario(scenario)
+    # same occupancy-preserving eps rescale as bench_churn
+    eps = sc.eps * (sc.n / n) ** (1.0 / sc.d)
+    pts = sc.points(n=n)
+    rows: List[Dict] = []
+
+    t0 = time.perf_counter()
+    res = cluster(pts, eps, sc.min_pts, engine="grit", return_index=True)
+    t_fit = time.perf_counter() - t0
+    res.index.ensure_merge_graph()       # one-time lazy build, pre-bench
+    buf = io.BytesIO()
+    res.index.save(buf)
+    rows.append(dict(bench="serve_device", op="fit", scenario=scenario,
+                     n=n, d=sc.d, seconds=round(t_fit, 4),
+                     clusters=res.n_clusters,
+                     grids=res.index.num_grids))
+
+    n_pred = int(0.85 * batch)
+    n_ins = int(0.10 * batch)
+    n_del = batch - n_pred - n_ins
+    reqs = 4                              # predict requests per wave
+    n_pred -= n_pred % reqs
+
+    # identical scripted traffic for both paths: warmup waves (untimed,
+    # pay compilation + bucket saturation) chained into timed waves
+    rng = np.random.default_rng(seed)
+    alive, nxt = list(range(n)), n
+    warm_script, alive, nxt = _script_traffic(
+        pts, eps, sc.d, rng, warmup, n_pred, n_ins, n_del, alive, nxt)
+    script, _, _ = _script_traffic(
+        pts, eps, sc.d, rng, steps, n_pred, n_ins, n_del, alive, nxt)
+
+    # both servers run the same wave back to back (host first), so
+    # machine-load drift across the run hits both paths equally
+    results = {}
+    for op, device in (("host", False), ("device", True)):
+        buf.seek(0)
+        idx = GritIndex.load(buf)
+        srv = ClusterServer(idx, slots=reqs + 2, query_cap=n_pred // reqs,
+                            mode="host" if not device else "auto",
+                            device_state=device)
+        results[op] = dict(index=idx, server=srv, seconds=0.0, labels=[])
+    for wave in warm_script:
+        for op in ("host", "device"):
+            _serve_wave(results[op]["server"], wave, reqs, [])
+    warm_steps = {op: len(results[op]["server"].step_log)
+                  for op in results}
+    for wave in script:
+        for op in ("host", "device"):
+            r = results[op]
+            r["seconds"] += _serve_wave(r["server"], wave, reqs,
+                                        r["labels"])
+    for op, r in results.items():
+        timed = r["server"].step_log[warm_steps[op]:]
+        r["kernel_s"] = sum(s["kernel_s"] for s in timed)
+        r["pack_s"] = sum(s["pack_s"] for s in timed)
+        r["final"] = r["index"].labels_arrival()
+        r["n_live"] = r["index"].n_live
+    host, dev = results["host"], results["device"]
+
+    exact = (len(host["labels"]) == len(dev["labels"])
+             and all(np.array_equal(a, b) for a, b in
+                     zip(host["labels"], dev["labels"]))
+             and np.array_equal(host["final"], dev["final"]))
+    ops = steps * batch
+    for op in ("host", "device"):
+        r = results[op]
+        row = dict(bench="serve_device", op=op, scenario=scenario, n=n,
+                   n_live=r["n_live"], d=sc.d, batch=batch, steps=steps,
+                   warmup=warmup, predicts=n_pred, inserts=n_ins,
+                   deletes=n_del, seconds=round(r["seconds"], 4),
+                   ops_per_s=round(ops / r["seconds"], 1),
+                   kernel_s=round(r["kernel_s"], 4),
+                   pack_s=round(r["pack_s"], 4))
+        if op == "device":
+            row["speedup_vs_host"] = round(
+                host["seconds"] / dev["seconds"], 3)
+            row["exact"] = bool(exact)
+        rows.append(row)
+    return rows

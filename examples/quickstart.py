@@ -101,6 +101,28 @@ def main():
           f"({idx.n_live} live); deletes also auto-compact past "
           f"{idx.compact_threshold:.0%} dead")
 
+    print("\ndevice-resident serving (same answers, kernel hot path):")
+    # keep the serving-hot arrays resident as jax buffers: predict and
+    # the delta engine's hot stages run through guard-banded float32
+    # kernels, with every uncertain case re-decided by the same host
+    # float64 code -- outputs stay bit-identical to host serving
+    # (pinned by tests/test_device_serving.py), it is purely a faster
+    # route on large batches.  drop_device_state() returns to host-only.
+    idx.ensure_device_state()
+    stats = {}
+    labels_dev = idx.predict(queries, mode="device", stats=stats)
+    assert np.array_equal(labels_dev, idx.predict(queries, mode="host"))
+    print(f"  predict {len(queries)} queries on the resident state: "
+          f"pack {stats['t_pack'] * 1e3:.1f}ms + kernel "
+          f"{stats['t_kernel'] * 1e3:.1f}ms, {stats['uncertain']} "
+          f"band-uncertain queries re-decided in float64 -- labels "
+          f"bit-identical to host")
+    st = idx.insert(queries[64:128])      # mutations keep buffers fresh
+    print(f"  insert 64 more: donated-scatter flag updates + mirror "
+          f"re-ship, {st['t_total'] * 1e3:.1f}ms; benchmarks/run.py "
+          f"--serve-device gates device >= host throughput (BENCH_6)")
+    idx.drop_device_state()
+
     print("\ndistributed fit -> snapshot -> predict (the sharded plane):")
     # on a multi-device mesh pass mesh=jax.make_mesh(...) and the SPMD
     # engine fits the slabs in parallel; without one, the same serving

@@ -85,17 +85,43 @@ _PROD_CAP = 4096       # |S_a|*|S_b| beyond which FastMerging wins
 _FLAT_CHUNK = 2 ** 21  # flat distance evals per vectorized chunk
 
 
+def _bbox_survivors(index, pairs: np.ndarray) -> np.ndarray:
+    """Tier-1 axis-aligned core-bbox gap reject, shared by the host and
+    device edge deciders: per-grid core sets are eps-diameter-bounded,
+    so the bound is tight and kills most far-offset stencil pairs
+    without any distance work.  The reject threshold carries a 1+1e-12
+    guard so a knife-edge pair can never be lost to the sum's rounding;
+    survivors must be decided by the exact expression.  Returns the
+    indices into ``pairs`` that survive.
+    """
+    core_rows, cstarts, ccounts = index._core_ranges()
+    pts, eps = index.points, index.eps
+    cpts = pts[core_rows]
+    # per-grid core bboxes: reduceat over the core-bearing grids only
+    # -- their cstarts are exactly the segment starts of the core CSR,
+    # so the last segment runs to len(core_rows) (clamping zero-core
+    # grids' starts instead would shear the final grid's segment and
+    # shrink its bbox, falsely rejecting true edges)
+    cg = np.flatnonzero(ccounts > 0)
+    if len(cg) == 0:
+        return np.empty(0, np.int64)
+    lo = np.empty((len(ccounts), pts.shape[1]))
+    hi = np.empty_like(lo)
+    lo[cg] = np.minimum.reduceat(cpts, cstarts[cg], axis=0)
+    hi[cg] = np.maximum.reduceat(cpts, cstarts[cg], axis=0)
+    a, b = pairs[:, 0], pairs[:, 1]
+    gap = np.maximum(0.0, np.maximum(lo[a] - hi[b], lo[b] - hi[a]))
+    return np.flatnonzero(
+        (gap * gap).sum(1) <= eps * eps * (1 + 1e-12))
+
+
 def _decide_edges_batch(index, pairs: np.ndarray,
                         ctr: Dict[str, int]) -> np.ndarray:
     """Exact MinDist(S_a, S_b) <= eps for many grid pairs at once.
 
     Three tiers, cheapest first, all on the oracle's float64 d2
-    expression: (1) a vectorized axis-aligned core-bbox gap reject --
-    per-grid core sets are eps-diameter-bounded, so the bound is tight
-    and kills most far-offset stencil pairs without any distance work
-    (the reject threshold carries a 1+1e-12 guard so a knife-edge pair
-    can never be lost to the sum's rounding; the survivors are decided
-    by the exact expression); (2) one flat broadcast over every
+    expression: (1) the vectorized core-bbox gap reject
+    (:func:`_bbox_survivors`); (2) one flat broadcast over every
     surviving pair with a small core-set product (the common case --
     one numpy call per ~2M evals instead of one Python call per pair);
     (3) FastMerging (Algorithm 5) for the rare huge products, where
@@ -106,23 +132,9 @@ def _decide_edges_batch(index, pairs: np.ndarray,
     core_rows, cstarts, ccounts = index._core_ranges()
     pts, eps = index.points, index.eps
     eps2 = eps * eps
-    cpts = pts[core_rows]
-    # per-grid core bboxes: reduceat over the core-bearing grids only
-    # -- their cstarts are exactly the segment starts of the core CSR,
-    # so the last segment runs to len(core_rows) (clamping zero-core
-    # grids' starts instead would shear the final grid's segment and
-    # shrink its bbox, falsely rejecting true edges)
-    cg = np.flatnonzero(ccounts > 0)
-    if len(cg) == 0:
-        return np.zeros(len(pairs), bool)
-    lo = np.empty((len(ccounts), pts.shape[1]))
-    hi = np.empty_like(lo)
-    lo[cg] = np.minimum.reduceat(cpts, cstarts[cg], axis=0)
-    hi[cg] = np.maximum.reduceat(cpts, cstarts[cg], axis=0)
     a, b = pairs[:, 0], pairs[:, 1]
-    gap = np.maximum(0.0, np.maximum(lo[a] - hi[b], lo[b] - hi[a]))
     hit = np.zeros(len(pairs), bool)
-    rem = np.flatnonzero((gap * gap).sum(1) <= eps2 * (1 + 1e-12))
+    rem = _bbox_survivors(index, pairs)
     if len(rem) == 0:
         return hit
     # fixed-shape sample accept: ANY pair of cores within eps proves
@@ -172,6 +184,19 @@ def _decide_edges_batch(index, pairs: np.ndarray,
     return hit
 
 
+def _decide_edges(index, pairs: np.ndarray,
+                  ctr: Dict[str, int]) -> np.ndarray:
+    """Route MinDist decisions to the device plane when the index holds
+    a resident :class:`~repro.index.device_state.DeviceState` (kernel
+    pair-minima under the guard band, host float64 for the uncertain
+    pairs -- decision-identical by construction)."""
+    ds = getattr(index, "device_state", None)
+    if ds is None:
+        return _decide_edges_batch(index, pairs, ctr)
+    from . import device_state
+    return device_state.decide_edges_device(index, ds, pairs, ctr)
+
+
 def build_merge_graph(index) -> np.ndarray:
     """Decide the full core-grid merge graph of the current state.
 
@@ -192,7 +217,7 @@ def build_merge_graph(index) -> np.ndarray:
     if len(pairs) == 0:
         return np.zeros((0, 2), np.int64)
     ctr: Dict[str, int] = {"dist_evals": 0}
-    return pairs[_decide_edges_batch(index, pairs, ctr)]
+    return pairs[_decide_edges(index, pairs, ctr)]
 
 
 def grid_components(num_grids: int,
@@ -226,6 +251,19 @@ def grid_components(num_grids: int,
 
 def _recompute_cores(index, affected, direction: int,
                      ctr: Dict[str, int]) -> np.ndarray:
+    """Stage 2 dispatcher: device twin when a resident state is
+    attached (flip-set-identical -- see ``recompute_cores_device``),
+    host float64 loop otherwise."""
+    ds = getattr(index, "device_state", None)
+    if ds is None:
+        return _recompute_cores_host(index, affected, direction, ctr)
+    from . import device_state
+    return device_state.recompute_cores_device(
+        index, ds, affected, direction, ctr)
+
+
+def _recompute_cores_host(index, affected, direction: int,
+                          ctr: Dict[str, int]) -> np.ndarray:
     """Stage 2: re-derive core status inside the stencil closure.
 
     Returns the sorted-order rows whose flag flipped (promotions under
@@ -331,7 +369,7 @@ def _update_merge_edges(index, changed: np.ndarray, direction: int,
                             keep[:, 0] * G + keep[:, 1])
             pairs = pairs[~known]
     ctr["merge_checks"] += len(pairs)
-    new = pairs[_decide_edges_batch(index, pairs, ctr)]
+    new = pairs[_decide_edges(index, pairs, ctr)]
     merged = np.concatenate([keep, new])
     if len(merged):
         # keep ∪ new is duplicate-free by construction (insert decides
@@ -446,6 +484,18 @@ def _reconcile_noncore(index, grid_of: np.ndarray, changed: np.ndarray,
 
 def _border_pass(index, rows: np.ndarray, grid_of: np.ndarray,
                  ctr: Dict[str, int]) -> None:
+    """Stage 5 dispatcher: device twin when a resident state is
+    attached (label-identical -- see ``border_pass_device``), host
+    float64 loop otherwise."""
+    ds = getattr(index, "device_state", None)
+    if ds is None:
+        return _border_pass_host(index, rows, grid_of, ctr)
+    from . import device_state
+    return device_state.border_pass_device(index, ds, rows, grid_of, ctr)
+
+
+def _border_pass_host(index, rows: np.ndarray, grid_of: np.ndarray,
+                      ctr: Dict[str, int]) -> None:
     """Nearest-live-core test for ``rows`` (sorted, non-core, live):
     within eps of a core -> that core's (already final) label, else
     noise.  Candidates from the own+stencil core CSR -- complete by
@@ -580,6 +630,11 @@ def insert_batch(index, batch) -> Dict[str, Any]:
             index.merge_edges = old_to_new[index.merge_edges]
     index.invalidate()
     is_new = order >= n_old                                       # sorted
+    ds = getattr(index, "device_state", None)
+    if ds is not None:
+        # splice rewrote the row layout: structural re-upload (also
+        # folds the new coordinates into the error-band span)
+        ds.refresh_rows(index)
 
     # ---- 3. core recompute over the touched stencil ---------------------
     tree = index.tree
@@ -601,6 +656,8 @@ def insert_batch(index, batch) -> Dict[str, Any]:
     remap = _relabel_components(index, grid_of, ctr)
     _reconcile_noncore(index, grid_of, changed, remap, +1,
                        np.flatnonzero(is_new), ctr)
+    if ds is not None:
+        ds.refresh_small(index)           # CSR + merge-edge mirrors
 
     return _insert_stats(index, t0, ctr, inserted=m,
                          touched=len(touched), affected=len(affected),
@@ -622,6 +679,11 @@ def _insert_stats(index, t0, ctr, *, inserted, touched, affected,
         "relabeled": int(ctr["relabeled"]),
         "id_shifted": bool(shifted),
         "merge_graph_built": bool(ctr["merge_graph_built"]),
+        # device-path timing split (0.0 on the host path); excluded
+        # from the differential stats comparison, like t_total
+        "t_pack": float(ctr.get("t_pack", 0.0)),
+        "t_kernel": float(ctr.get("t_kernel", 0.0)),
+        "band_fallback": int(ctr.get("band_fallback", 0)),
         "t_total": time.perf_counter() - t0,
     }
 
@@ -668,6 +730,9 @@ def delete_ids(index, arrival_ids) -> Dict[str, Any]:
     index.labels[rows] = -1
     np.subtract.at(index.live_counts, grid_of[rows], 1)
     index.invalidate(keep_tree=True)      # ids untouched: tree survives
+    ds = getattr(index, "device_state", None)
+    if ds is not None:
+        ds.mark_dead(rows)                # donated tombstone scatter
 
     # ---- 2. demotions over the touched stencil --------------------------
     tree = index.tree
@@ -696,8 +761,10 @@ def delete_ids(index, arrival_ids) -> Dict[str, Any]:
     # ---- 5. threshold-triggered compaction ------------------------------
     compacted = False
     if index.dead_fraction > index.compact_threshold:
-        compact(index)
+        compact(index)                    # refreshes the mirror itself
         compacted = True
+    elif ds is not None:
+        ds.refresh_small(index)
     return _delete_stats(index, t0, ctr, requested=len(ids),
                          deleted=len(rows), rejected=rejected,
                          touched=len(touched), affected=len(affected),
@@ -724,6 +791,9 @@ def _delete_stats(index, t0, ctr, *, requested, deleted, rejected,
         "relabeled": int(ctr["relabeled"]),
         "compacted": bool(compacted),
         "merge_graph_built": bool(ctr["merge_graph_built"]),
+        "t_pack": float(ctr.get("t_pack", 0.0)),
+        "t_kernel": float(ctr.get("t_kernel", 0.0)),
+        "band_fallback": int(ctr.get("band_fallback", 0)),
         "t_total": time.perf_counter() - t0,
     }
 
@@ -805,6 +875,10 @@ def compact(index) -> Dict[str, Any]:
     index.live_counts = index.counts.copy()
     index.starts = np.cumsum(index.counts) - index.counts
     index.invalidate()
+    ds = getattr(index, "device_state", None)
+    if ds is not None:
+        ds.refresh_rows(index)            # row layout rewritten
+        ds.refresh_small(index)
     return {"op": "compact", "removed": int(removed),
             "grids_dropped": grids_dropped, "n": index.n,
             "t_total": time.perf_counter() - t0}

@@ -139,6 +139,12 @@ class GritIndex:
         default=None, repr=False, compare=False)
     _arr_to_row: Optional[np.ndarray] = dataclasses.field(
         default=None, repr=False, compare=False)
+    # Device-resident serving state (repro.index.device_state): jax
+    # mirrors of the serving-hot arrays, attached explicitly via
+    # ensure_device_state().  Host numpy stays authoritative -- the
+    # mirror is derived state (like _tree), never snapshotted.
+    device_state: Optional[Any] = dataclasses.field(
+        default=None, repr=False, compare=False)
 
     def __post_init__(self):
         if self.alive is None:
@@ -373,8 +379,11 @@ class GritIndex:
             outside the fitted bounding box, ... all fine).
           mode: "host" (float64 numpy -- bit-identical to the brute
             oracle), "kernel" (slot-batched jitted ``row_min_batch``,
-            float32 with per-grid re-centering), or "auto" (kernel on
-            accelerators, host on CPU).
+            float32 with per-grid re-centering), "device" (resident-
+            buffer guard-band path -- float32 kernels for the certain
+            queries, host float64 for the band, output bit-identical
+            to "host"), or "auto" (device when a resident state is
+            attached, else kernel on accelerators / host on CPU).
           chunk: host-mode query chunk (memory bound).
           stats: optional dict filled with execution counters
             (mode, candidate totals, kernel cap growth).
@@ -398,8 +407,12 @@ class GritIndex:
         if not np.isfinite(q).all():
             raise ValueError("queries contain non-finite coordinates")
         if mode == "auto":
-            import jax
-            mode = "host" if jax.default_backend() == "cpu" else "kernel"
+            if self.device_state is not None:
+                mode = "device"
+            else:
+                import jax
+                mode = ("host" if jax.default_backend() == "cpu"
+                        else "kernel")
         if stats is not None:
             stats["mode"] = mode
             stats["n_queries"] = int(q.shape[0])
@@ -416,9 +429,56 @@ class GritIndex:
             out, d2 = self._predict_host(q, chunk, stats)
         elif mode == "kernel":
             out, d2 = self._predict_kernel(q, stats)
+        elif mode == "device":
+            out, d2 = self._predict_device(q, stats)
         else:
             raise ValueError(f"unknown predict mode {mode!r}")
         return (out, d2) if return_d2 else out
+
+    def predict_async(self, queries, *, mode: str = "auto",
+                      chunk: int = 2048, stats: Optional[dict] = None,
+                      return_d2: bool = False):
+        """Two-phase :meth:`predict`: dispatch now, block later.
+
+        Returns a zero-argument ``resolve()`` producing exactly what
+        :meth:`predict` would.  On the device path the kernel work is
+        dispatched before this returns and ``resolve()`` blocks on it
+        -- what :class:`~repro.serve.driver.ClusterServer` overlaps the
+        next step's host packing with.  Other modes compute eagerly
+        (``resolve()`` just hands the answer back), so callers need no
+        mode-specific branches.
+        """
+        q = np.asarray(queries, np.float64)
+        if mode == "auto" and self.device_state is not None:
+            mode = "device"
+        if (mode != "device" or q.shape[0] == 0
+                or not self.core.any()):
+            out = self.predict(q, mode=mode, chunk=chunk, stats=stats,
+                               return_d2=return_d2)
+            return lambda: out
+        if q.ndim != 2 or q.shape[1] != self.d:
+            raise ValueError(
+                f"queries must be [m, {self.d}], got {q.shape}")
+        if not np.isfinite(q).all():
+            raise ValueError("queries contain non-finite coordinates")
+        self.ensure_device_state()
+        if stats is not None:
+            stats["mode"] = "device"
+            stats["n_queries"] = int(q.shape[0])
+        from . import device_state as _dsm
+        resolver = _dsm.predict_device_async(self, self.device_state,
+                                             q, stats)
+
+        def resolve():
+            out, d2 = resolver()
+            return (out, d2) if return_d2 else out
+
+        return resolve
+
+    def _predict_device(self, q: np.ndarray, stats: Optional[dict]):
+        from . import device_state as _dsm
+        self.ensure_device_state()
+        return _dsm.predict_device(self, self.device_state, q, stats)
 
     def _predict_host(self, q: np.ndarray, chunk: int,
                       stats: Optional[dict]):
@@ -532,6 +592,26 @@ class GritIndex:
             from .delta import build_merge_graph
             self.merge_edges = build_merge_graph(self)
         return self.merge_edges
+
+    def ensure_device_state(self, interpret: Optional[bool] = None):
+        """Attach (or return) the device-resident serving state.
+
+        Uploads the CSR-sorted points, core/alive flags, grid ranges
+        and merge edges as jax buffers; predict and the delta engine's
+        hot stages then run through the batched kernels (guard-band
+        exact -- outputs stay bit-identical to the host path).  The
+        mirror follows every mutation automatically; ``interpret``
+        forces Pallas interpret mode for the kernels (CPU-only
+        runners)."""
+        if self.device_state is None:
+            from . import device_state as _dsm
+            self.device_state = _dsm.DeviceState(self,
+                                                 interpret=interpret)
+        return self.device_state
+
+    def drop_device_state(self) -> None:
+        """Detach the resident mirror (serving falls back to host)."""
+        self.device_state = None
 
     def insert(self, points) -> Dict[str, Any]:
         """Micro-batch incremental insert (stats schema: see

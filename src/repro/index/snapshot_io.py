@@ -9,6 +9,8 @@ helpers move one between memory and a ``np.savez`` file.
 
 from __future__ import annotations
 
+import zipfile
+import zlib
 from typing import Dict, Sequence
 
 import numpy as np
@@ -20,9 +22,20 @@ def save_snapshot(path, snap: Dict[str, np.ndarray]) -> None:
 
 
 def load_snapshot(path) -> Dict[str, np.ndarray]:
-    """Read a ``.npz`` file/buffer back into a plain snapshot dict."""
-    with np.load(path) as data:
-        return {k: data[k] for k in data.files}
+    """Read a ``.npz`` file/buffer back into a plain snapshot dict.
+
+    A truncated or otherwise corrupt file raises a ``ValueError`` that
+    names the file -- a half-written snapshot (crashed writer, partial
+    download) must fail loudly at load, not as a ``BadZipFile`` /
+    ``zlib.error`` deep inside the array reader.
+    """
+    try:
+        with np.load(path) as data:
+            return {k: data[k] for k in data.files}
+    except (zipfile.BadZipFile, zlib.error, EOFError, OSError) as e:
+        raise ValueError(
+            f"snapshot file {path!r} is not a readable .npz "
+            f"(truncated or corrupt?): {e}") from e
 
 
 def check_version(snap: Dict[str, np.ndarray], key: str,
@@ -31,9 +44,18 @@ def check_version(snap: Dict[str, np.ndarray], key: str,
 
     ``accepted`` lists every version ``restore()`` knows how to read
     (older versions stay restorable: missing arrays are rebuilt lazily
-    by the caller).  Unknown versions raise, never mis-parse.
+    by the caller).  Unknown versions raise, never mis-parse; a mapping
+    without the version field (wrong file, truncated writer) raises the
+    same clear ``ValueError`` instead of a raw ``KeyError``.
     """
-    version = int(np.asarray(snap[key])[0])
+    if key not in snap:
+        raise ValueError(
+            f"{what} has no {key!r} field -- not a {what} "
+            f"(found keys {sorted(snap)[:8]}) or truncated")
+    arr = np.asarray(snap[key])
+    if arr.size == 0:
+        raise ValueError(f"{what} {key!r} field is empty -- truncated?")
+    version = int(arr.reshape(-1)[0])
     if version not in tuple(accepted):
         raise ValueError(
             f"{what} version {version} not in supported {tuple(accepted)}")

@@ -44,6 +44,7 @@ satisfies the contract trivially.
 from __future__ import annotations
 
 import functools
+import os
 from typing import Optional
 
 import jax
@@ -51,7 +52,9 @@ import jax.numpy as jnp
 
 from . import ref
 from .pairwise import (eps_count_pallas, row_min_pallas,
-                       eps_count_batch_pallas, row_min_batch_pallas, LANE)
+                       eps_count_batch_pallas, row_min_batch_pallas,
+                       eps_count_band_batch_pallas, row_min2_batch_pallas,
+                       LANE)
 from .flash_attention import flash_attention_pallas
 
 FAR = 1e15
@@ -60,6 +63,20 @@ FAR = 1e15
 # marks "no valid candidate" after a row_min kernel
 FAR_D2 = 1e29
 FORCE_REF = False
+# REPRO_FORCE_INTERPRET=1 routes the batched wrappers through the
+# *Pallas kernels under the interpreter* on non-TPU backends (instead
+# of the tiled jnp fast path) -- how a CPU-only CI runner exercises the
+# exact kernel code the device serving path compiles on TPU.  Read at
+# import; per-call ``interpret=`` arguments still take precedence.
+FORCE_INTERPRET = os.environ.get("REPRO_FORCE_INTERPRET", "") not in ("", "0")
+
+
+def interpret_default(interpret: Optional[bool]) -> Optional[bool]:
+    """Resolve a caller's ``interpret=None`` against the
+    ``REPRO_FORCE_INTERPRET`` knob (module docstring)."""
+    if interpret is None and FORCE_INTERPRET:
+        return True
+    return interpret
 
 
 def _interpret() -> bool:
@@ -287,6 +304,220 @@ def row_min_batch(a: jnp.ndarray, b: jnp.ndarray,
     none = mins >= FAR_D2
     return (jnp.where(none, jnp.inf, mins),
             jnp.where(none, jnp.int32(-1), args))
+
+
+def _eps_count_band_tiled(a32, b32, lo2, hi2, stop_row, valid_b, block_n):
+    """Non-TPU fast path of :func:`eps_count_band_batch`: one b-tile
+    loop accumulating both thresholds' counts.  ``stop_row`` ([B, M]
+    int32 or None) is the per-row saturation bar on the *lo* count --
+    the delta engine's MinPts-minus-own-count early exit; rows whose
+    final lo-count is below their bar have provably scanned every valid
+    tile, so their hi-count is complete (see the wrapper contract)."""
+    B, M, _ = a32.shape
+    bp, vp, n_tiles = _tile_prep(b32, valid_b, block_n)
+
+    def cond(state):
+        t, lo, hi = state
+        live = t < n_tiles
+        if stop_row is not None:
+            live = live & jnp.any(lo < stop_row)
+        return live
+
+    def body(state):
+        t, lo, hi = state
+        bt = jax.lax.dynamic_slice_in_dim(bp, t * block_n, block_n, axis=1)
+        vt = jax.lax.dynamic_slice_in_dim(vp, t * block_n, block_n, axis=1)
+        d2 = jnp.sum((a32[:, :, None, :] - bt[:, None, :, :]) ** 2, axis=-1)
+        d2 = jnp.where(vt[:, None, :], d2, jnp.inf)
+        return (t + 1,
+                lo + (d2 <= lo2).sum(axis=2, dtype=jnp.int32),
+                hi + (d2 <= hi2).sum(axis=2, dtype=jnp.int32))
+
+    z = jnp.zeros((B, M), jnp.int32)
+    _, lo, hi = jax.lax.while_loop(cond, body, (jnp.int32(0), z, z))
+    return lo, hi
+
+
+def _row_min2_tiled(a32, b32, valid_b, block_n):
+    """Non-TPU fast path of :func:`row_min2_batch`: the ``_row_min_tiled``
+    loop extended with the runner-up merge (smaller of both tiles'
+    runners-up and the loser of the two firsts)."""
+    B, M, _ = a32.shape
+    bp, vp, n_tiles = _tile_prep(b32, valid_b, block_n)
+
+    def body(state):
+        t, best, best2, arg = state
+        bt = jax.lax.dynamic_slice_in_dim(bp, t * block_n, block_n, axis=1)
+        vt = jax.lax.dynamic_slice_in_dim(vp, t * block_n, block_n, axis=1)
+        d2 = jnp.sum((a32[:, :, None, :] - bt[:, None, :, :]) ** 2, axis=-1)
+        d2 = jnp.where(vt[:, None, :], d2, jnp.inf)
+        tloc = jnp.argmin(d2, axis=2).astype(jnp.int32)
+        tmin = jnp.min(d2, axis=2)
+        cols = jnp.arange(d2.shape[2], dtype=jnp.int32)
+        d2_wo = jnp.where(cols[None, None, :] == tloc[:, :, None],
+                          jnp.inf, d2)
+        tmin2 = jnp.min(d2_wo, axis=2)
+        better = tmin < best
+        loser = jnp.maximum(best, tmin)
+        return (t + 1, jnp.where(better, tmin, best),
+                jnp.minimum(jnp.minimum(best2, tmin2), loser),
+                jnp.where(better, tloc + t * block_n, arg))
+
+    inf = jnp.full((B, M), jnp.inf, jnp.float32)
+    _, mins, mins2, args = jax.lax.while_loop(
+        lambda s: s[0] < n_tiles, body,
+        (jnp.int32(0), inf, inf, jnp.full((B, M), -1, jnp.int32)))
+    return mins, mins2, args
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "block_m", "block_n", "interpret", "has_stop"))
+def _eps_count_band_batch_jit(a, b, eps_lo, eps_hi, valid_b, stop_row,
+                              *, block_m, block_n, interpret, has_stop):
+    lo2 = jnp.asarray(eps_lo, jnp.float32) ** 2
+    hi2 = jnp.asarray(eps_hi, jnp.float32) ** 2
+    a32 = a.astype(jnp.float32)
+    b32 = b.astype(jnp.float32)
+    if not _use_batch_pallas(interpret):
+        if FORCE_REF:
+            return ref.eps_count_band_batch(a32, b32, eps_lo, eps_hi,
+                                            valid_b)
+        return _eps_count_band_tiled(a32, b32, lo2, hi2,
+                                     stop_row if has_stop else None,
+                                     valid_b, block_n)
+    if valid_b is not None:
+        b32 = jnp.where(valid_b[:, :, None], b32, FAR)
+    M = a.shape[1]
+    ap = _pad_feat(_pad_rows(a32, block_m, 0.0, axis=1))
+    bp = _pad_feat(_pad_rows(b32, block_n, FAR, axis=1))
+    lo, hi = eps_count_band_batch_pallas(
+        ap, bp, jnp.stack([lo2, hi2]), block_m=block_m, block_n=block_n,
+        interpret=bool(interpret))
+    return lo[:, :M, 0], hi[:, :M, 0]
+
+
+def eps_count_band_batch(a, b, eps_lo, eps_hi,
+                         valid_b: Optional[jnp.ndarray] = None,
+                         stop_row: Optional[jnp.ndarray] = None,
+                         *, block_m: int = 128, block_n: int = 128,
+                         interpret: Optional[bool] = None):
+    """Two-threshold batched eps-counts (a [B, M, d], b [B, N, d]).
+
+    Returns ``(count_lo, count_hi)`` [B, M] int32 -- hits at
+    ``d2 <= eps_lo**2`` and ``d2 <= eps_hi**2`` in one sweep over the
+    same distance tiles.  The guard-band serving path brackets the
+    exact float64 count between the two whenever the f32 error of the
+    decided distances is inside the band.
+
+    ``stop_row`` ([B, M] int32) is a per-row saturating bar on the *lo*
+    count (the MinPts-minus-base early exit; pass 0 to exempt padded
+    rows).  Contract: a row whose returned ``count_lo`` is below its
+    bar has scanned every valid candidate -- its counts are complete --
+    because the loop only exits early once *every* row reached its bar.
+    The TPU kernel scans everything, satisfying the contract trivially.
+    """
+    if stop_row is None:
+        stop = jnp.zeros((a.shape[0], a.shape[1]), jnp.int32)
+        has_stop = False
+    else:
+        stop, has_stop = stop_row, True
+    return _eps_count_band_batch_jit(
+        a, b, eps_lo, eps_hi, valid_b, stop, block_m=block_m,
+        block_n=block_n, interpret=interpret_default(interpret),
+        has_stop=has_stop)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("block_m", "block_n", "interpret"))
+def _row_min2_batch_jit(a, b, valid_b, *, block_m, block_n, interpret):
+    a32 = a.astype(jnp.float32)
+    b32 = b.astype(jnp.float32)
+    if not _use_batch_pallas(interpret):
+        if FORCE_REF:
+            return ref.row_min2_batch(a32, b32, valid_b)
+        return _row_min2_tiled(a32, b32, valid_b, block_n)
+    if valid_b is not None:
+        b32 = jnp.where(valid_b[:, :, None], b32, FAR)
+    M = a.shape[1]
+    ap = _pad_feat(_pad_rows(a32, block_m, 0.0, axis=1))
+    bp = _pad_feat(_pad_rows(b32, block_n, FAR, axis=1))
+    mins, mins2, args = row_min2_batch_pallas(
+        ap, bp, block_m=block_m, block_n=block_n,
+        interpret=bool(interpret))
+    mins, mins2, args = mins[:, :M, 0], mins2[:, :M, 0], args[:, :M, 0]
+    none = mins >= FAR_D2
+    return (jnp.where(none, jnp.inf, mins),
+            jnp.where(mins2 >= FAR_D2, jnp.inf, mins2),
+            jnp.where(none, jnp.int32(-1), args))
+
+
+@jax.jit
+def _pairwise_d2_flat_jit(points_res, qa, rr, qo, av):
+    diff = (points_res[rr] - av) - qa[qo]
+    return jnp.sum(diff * diff, axis=1)
+
+
+def pairwise_d2_flat(points_res, qa, rr, qo, av):
+    """Flat ragged candidate distances: [T] float32 squared distances.
+
+    The padded-chunk form (``row_min2_batch``) pays pow2 padding plus
+    one dispatch per chunk; this op takes the ragged candidate list
+    *flat* -- one dispatch, zero padding waste, all the O(T*d) distance
+    math on device.  ``points_res`` is the [row_cap, d] float32
+    resident buffer; ``rr``/``qo`` [T] int32 give each flat element's
+    resident row and query slot; ``qa`` [m, d] float32 holds
+    anchor-centered queries and ``av`` [T, d] each element's cell
+    anchor (host-gathered -- shipping it per element keeps the jit key
+    a function of the T bucket alone, so recompiles converge fast), so
+    the subtraction runs on stencil-scale coordinates (same error
+    budget as the chunked kernels).  The caller reduces the returned
+    distances per segment (segmented min is O(T) and memory-bound;
+    XLA's scatter-based segment ops lose to a single host
+    ``minimum.reduceat`` pass on CPU, so the reduce stays with the
+    caller).  Pure jnp (gather + map): XLA-native on every backend, so
+    there is no pallas/interpret variant.
+    """
+    return _pairwise_d2_flat_jit(points_res, qa, rr, qo, av)
+
+
+@jax.jit
+def _pairwise_d2_flat_res_jit(points_res, ra, rb, av):
+    a = points_res[ra] - av
+    b = points_res[rb] - av
+    diff = a - b
+    return jnp.sum(diff * diff, axis=1)
+
+
+def pairwise_d2_flat_res(points_res, ra, rb, av):
+    """``pairwise_d2_flat`` with *both* operands resident.
+
+    ``ra``/``rb`` [T] int32 pick the two resident rows of each flat
+    element; ``av`` [T, d] float32 is each element's cell anchor
+    (host-gathered, same jit-key rationale as ``pairwise_d2_flat``).
+    Both sides are re-centered by the same resident-row-minus-anchor
+    subtract, so the float32 distances carry the established
+    stencil-scale error budget.  Used by the delta engine's flat
+    core-recount / merge-decide / border stages, where every operand
+    already lives in the resident buffer.
+    """
+    return _pairwise_d2_flat_res_jit(points_res, ra, rb, av)
+
+
+def row_min2_batch(a, b, valid_b: Optional[jnp.ndarray] = None,
+                   *, block_m: int = 128, block_n: int = 128,
+                   interpret: Optional[bool] = None):
+    """Batched (min, runner-up, argmin) squared distances.
+
+    a [B, M, d], b [B, N, d], valid_b [B, N] -> ([B, M] f32 min d2,
+    [B, M] f32 second-smallest slot d2, [B, M] int32 argmin).  The
+    runner-up is over remaining slots (a duplicate distance counts),
+    so ``min2 - min`` lower-bounds the argmin's margin: wider than the
+    f32 error band proves the float64 argmin picks the same row.  No
+    valid candidate -> (inf, inf, -1); exactly one -> (d2, inf, idx).
+    """
+    return _row_min2_batch_jit(a, b, valid_b, block_m=block_m,
+                               block_n=block_n,
+                               interpret=interpret_default(interpret))
 
 
 @functools.partial(jax.jit, static_argnames=(

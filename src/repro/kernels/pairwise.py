@@ -175,6 +175,119 @@ def eps_count_batch_pallas(a: jnp.ndarray, b: jnp.ndarray, eps2: jnp.ndarray,
     )(a, b, eps2.reshape(1, 1).astype(jnp.float32))
 
 
+def _eps_count_band_batch_kernel(a_ref, b_ref, eps2_ref, lo_ref, hi_ref):
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        lo_ref[...] = jnp.zeros_like(lo_ref)
+        hi_ref[...] = jnp.zeros_like(hi_ref)
+
+    d2 = _sq_dist_tile(a_ref[0, :, :], b_ref[0, :, :])
+    hit_lo = (d2 <= eps2_ref[0, 0]).astype(jnp.int32)
+    hit_hi = (d2 <= eps2_ref[0, 1]).astype(jnp.int32)
+    lo_ref[0, :, :] += jnp.sum(hit_lo, axis=1, keepdims=True)
+    hi_ref[0, :, :] += jnp.sum(hit_hi, axis=1, keepdims=True)
+
+
+def eps_count_band_batch_pallas(a: jnp.ndarray, b: jnp.ndarray,
+                                eps2_band: jnp.ndarray,
+                                *, block_m: int = BLOCK_M,
+                                block_n: int = BLOCK_N,
+                                interpret: bool = False):
+    """Two-threshold twin of ``eps_count_batch_pallas``.
+
+    a: [G, M, D], b: [G, N, D] (aligned), eps2_band: [2] (lo2, hi2)
+    squared thresholds.  Returns two [G, M, 1] int32 count arrays --
+    hits at ``d2 <= lo2`` and at ``d2 <= hi2``, accumulated in one
+    sweep over the same distance tiles (the guard-band decision needs
+    both counts and the tiles dominate the cost)."""
+    G, M, D = a.shape
+    N = b.shape[1]
+    grid = (G, M // block_m, N // block_n)
+    return pl.pallas_call(
+        _eps_count_band_batch_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_m, D), lambda g, i, j: (g, i, 0)),
+            pl.BlockSpec((1, block_n, D), lambda g, i, j: (g, j, 0)),
+            pl.BlockSpec((1, 2), lambda g, i, j: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, block_m, 1), lambda g, i, j: (g, i, 0)),
+            pl.BlockSpec((1, block_m, 1), lambda g, i, j: (g, i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((G, M, 1), jnp.int32),
+            jax.ShapeDtypeStruct((G, M, 1), jnp.int32),
+        ],
+        interpret=interpret,
+    )(a, b, eps2_band.reshape(1, 2).astype(jnp.float32))
+
+
+def _row_min2_batch_kernel(a_ref, b_ref, min_ref, min2_ref, arg_ref,
+                           *, block_n: int):
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        min_ref[...] = jnp.full_like(min_ref, jnp.inf)
+        min2_ref[...] = jnp.full_like(min2_ref, jnp.inf)
+        arg_ref[...] = jnp.full_like(arg_ref, -1)
+
+    d2 = _sq_dist_tile(a_ref[0, :, :], b_ref[0, :, :])
+    tile_arg = jnp.argmin(d2, axis=1).astype(jnp.int32)[:, None]
+    tile_min = jnp.min(d2, axis=1, keepdims=True)             # [BM, 1]
+    cols = jax.lax.broadcasted_iota(jnp.int32, d2.shape, 1)
+    d2_wo = jnp.where(cols == tile_arg, jnp.inf, d2)
+    tile_min2 = jnp.min(d2_wo, axis=1, keepdims=True)
+    prev_min = min_ref[0, :, :]
+    better = tile_min < prev_min
+    # merge the two sorted (first, second) pairs: the global runner-up
+    # is the smaller of both runners-up and the loser of the two firsts
+    loser = jnp.maximum(prev_min, tile_min)
+    min2_ref[0, :, :] = jnp.minimum(jnp.minimum(min2_ref[0, :, :],
+                                                tile_min2), loser)
+    min_ref[0, :, :] = jnp.where(better, tile_min, prev_min)
+    arg_ref[0, :, :] = jnp.where(better, tile_arg + j * block_n,
+                                 arg_ref[0, :, :])
+
+
+def row_min2_batch_pallas(a: jnp.ndarray, b: jnp.ndarray,
+                          *, block_m: int = BLOCK_M,
+                          block_n: int = BLOCK_N,
+                          interpret: bool = False):
+    """``row_min_batch_pallas`` plus the runner-up distance.
+
+    a: [G, M, D], b: [G, N, D] (aligned).  Returns ([G, M, 1] f32 min,
+    [G, M, 1] f32 second-smallest slot distance, [G, M, 1] int32
+    argmin).  The runner-up feeds the device path's argmin-certainty
+    test: a gap wider than the float32 error band proves the float64
+    argmin is the same row."""
+    G, M, D = a.shape
+    N = b.shape[1]
+    grid = (G, M // block_m, N // block_n)
+    return pl.pallas_call(
+        functools.partial(_row_min2_batch_kernel, block_n=block_n),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_m, D), lambda g, i, j: (g, i, 0)),
+            pl.BlockSpec((1, block_n, D), lambda g, i, j: (g, j, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, block_m, 1), lambda g, i, j: (g, i, 0)),
+            pl.BlockSpec((1, block_m, 1), lambda g, i, j: (g, i, 0)),
+            pl.BlockSpec((1, block_m, 1), lambda g, i, j: (g, i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((G, M, 1), jnp.float32),
+            jax.ShapeDtypeStruct((G, M, 1), jnp.float32),
+            jax.ShapeDtypeStruct((G, M, 1), jnp.int32),
+        ],
+        interpret=interpret,
+    )(a, b)
+
+
 def _row_min_batch_kernel(a_ref, b_ref, min_ref, arg_ref, *, block_n: int):
     j = pl.program_id(2)
 

@@ -100,6 +100,53 @@ def row_min_batch(a: jnp.ndarray, b: jnp.ndarray,
     return mins, idx
 
 
+def eps_count_band_batch(a: jnp.ndarray, b: jnp.ndarray,
+                         eps_lo: jnp.ndarray, eps_hi: jnp.ndarray,
+                         valid_b: Optional[jnp.ndarray] = None):
+    """Two-threshold batched eps-counts: hits at ``d2 <= eps_lo**2`` and
+    at ``d2 <= eps_hi**2`` in one pass (a [B, M, d], b [B, N, d] ->
+    two [B, M] int32 arrays).
+
+    The guard-band discipline of the device serving path rests on
+    ``count_lo <= exact_count <= count_hi`` whenever the float32 error
+    of every decided distance is below the lo/hi band, which is how a
+    core decision is proven without float64.
+    """
+    d2 = sq_dists_batch(a, b)
+    lo2 = jnp.asarray(eps_lo, jnp.float32) ** 2
+    hi2 = jnp.asarray(eps_hi, jnp.float32) ** 2
+    hit_lo = d2 <= lo2
+    hit_hi = d2 <= hi2
+    if valid_b is not None:
+        hit_lo = hit_lo & valid_b[:, None, :]
+        hit_hi = hit_hi & valid_b[:, None, :]
+    return (hit_lo.sum(axis=-1).astype(jnp.int32),
+            hit_hi.sum(axis=-1).astype(jnp.int32))
+
+
+def row_min2_batch(a: jnp.ndarray, b: jnp.ndarray,
+                   valid_b: Optional[jnp.ndarray] = None):
+    """Batched (min, runner-up min, argmin) squared distances.
+
+    a [B, M, d], b [B, N, d], valid_b [B, N] -> ([B, M] f32 min,
+    [B, M] f32 second-smallest, [B, M] int32 argmin).  The runner-up is
+    over the remaining *slots* (duplicate distances count separately),
+    so ``min2 - min`` bounds how far the argmin is from being tied --
+    the device path's argmin-certainty test.  No valid candidate ->
+    (inf, inf, -1); exactly one -> (d2, inf, idx).
+    """
+    d2 = sq_dists_batch(a, b)
+    if valid_b is not None:
+        d2 = jnp.where(valid_b[:, None, :], d2, jnp.inf)
+    mins = jnp.min(d2, axis=-1)
+    idx = jnp.argmin(d2, axis=-1).astype(jnp.int32)
+    cols = jnp.arange(d2.shape[-1], dtype=jnp.int32)
+    d2_wo = jnp.where(cols[None, None, :] == idx[:, :, None], jnp.inf, d2)
+    mins2 = jnp.min(d2_wo, axis=-1)
+    idx = jnp.where(jnp.isinf(mins), jnp.int32(-1), idx)
+    return mins, mins2, idx
+
+
 def min_dist(a: jnp.ndarray, va: jnp.ndarray,
              b: jnp.ndarray, vb: jnp.ndarray) -> jnp.ndarray:
     """Minimum squared distance between two masked sets (scalar)."""

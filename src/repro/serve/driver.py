@@ -82,7 +82,7 @@ class ClusterServer:
     """Continuous-batching predict server over a fitted index."""
 
     def __init__(self, index, *, slots: int = 4, query_cap: int = 64,
-                 mode: str = "auto"):
+                 mode: str = "auto", device_state: bool = False):
         self.index = index
         self.slots = int(slots)
         self.query_cap = _pow2_at_least(query_cap, lo=8)
@@ -93,6 +93,17 @@ class ClusterServer:
         self.step_log: List[Dict[str, Any]] = []
         self.rejected_ids: List[np.ndarray] = []   # delete telemetry
         self._next_rid = 0
+        # double-buffered admission: the batch packed while the previous
+        # step's kernels were executing (device path), served next step
+        self._staged: Optional[List[ClusterRequest]] = None
+        if device_state:
+            ensure = getattr(index, "ensure_device_state", None)
+            if ensure is None:
+                raise ValueError(
+                    "device_state=True needs a backend with device-"
+                    f"resident serving state; {type(index).__name__} "
+                    "has no ensure_device_state()")
+            ensure()
 
     # ------------------------------------------------------------------
 
@@ -147,30 +158,49 @@ class ClusterServer:
         self.pending.append(req)
         return req.rid
 
-    def step(self) -> List[ClusterRequest]:
-        """Serve one batch: fill up to ``slots`` slots, apply the
-        admitted mutations (in submission order), then one predict call
-        over the co-batched query requests -- predicts in a step
-        observe that step's mutations.
-
-        Returns the requests finished this step (empty when idle).
-        """
+    def _admit(self) -> List[ClusterRequest]:
+        """Fill up to ``slots`` slots from the queue (admission-time
+        ``query_cap`` growth included) -- the host-packing half of a
+        step, so it can run while the previous step's kernels execute."""
         active: List[ClusterRequest] = []
         while self.pending and len(active) < self.slots:
             active.append(self.pending.popleft())
-        if not active:
-            return []
-        predicts = [r for r in active if r.kind == "predict"]
-        need = max((len(r.points) for r in predicts), default=0)
+        need = max((len(r.points) for r in active
+                    if r.kind == "predict"), default=0)
         if need > self.query_cap:
             grown = _pow2_at_least(need, lo=8)
             self.growth_events.append(
                 {"step": len(self.step_log), "cap": "query_cap",
                  "was": self.query_cap, "now": grown})
             self.query_cap = grown
+        return active
+
+    def step(self) -> List[ClusterRequest]:
+        """Serve one batch: fill up to ``slots`` slots, apply the
+        admitted mutations (in submission order), then one predict call
+        over the co-batched query requests -- predicts in a step
+        observe that step's mutations.
+
+        The admission is double-buffered: the predict is *dispatched*
+        (``predict_async``), the *next* step's batch is admitted while
+        the kernels run, and only then does the step block on the
+        labels -- on the device path the host packing of step k+1
+        overlaps the jitted program of step k.  The step log splits
+        ``kernel_s`` (device kernel + resolve time) from ``pack_s``
+        (host slot packing) next to the total ``seconds``.
+
+        Returns the requests finished this step (empty when idle).
+        """
+        active = self._staged if self._staged is not None \
+            else self._admit()
+        self._staged = None
+        if not active:
+            return []
+        predicts = [r for r in active if r.kind == "predict"]
 
         t0 = time.perf_counter()
         inserted = deleted = rejected = 0
+        kernel_s = pack_s = 0.0
         for r in active:
             if r.kind == "insert":
                 r.result = self.index.insert(r.points)
@@ -181,12 +211,26 @@ class ClusterServer:
                 if r.result["rejected"]:
                     rejected += r.result["rejected"]
                     self.rejected_ids.append(r.result["rejected_ids"])
+            if r.result is not None:
+                kernel_s += r.result.get("t_kernel", 0.0)
+                pack_s += r.result.get("t_pack", 0.0)
         pstats: Dict[str, Any] = {}
         flat = (np.concatenate([r.points for r in predicts])
                 if predicts else np.zeros((0, self.index.d)))
-        flat_labels = (self.index.predict(flat, mode=self.mode,
-                                          stats=pstats)
-                       if len(flat) else np.empty(0, np.int64))
+        dispatch = getattr(self.index, "predict_async", None)
+        if len(flat) == 0:
+            resolve = lambda: np.empty(0, np.int64)
+        elif dispatch is not None:
+            resolve = dispatch(flat, mode=self.mode, stats=pstats)
+        else:
+            out = self.index.predict(flat, mode=self.mode, stats=pstats)
+            resolve = lambda: out
+        # admit the next step's batch while the dispatched work runs
+        staged = self._admit()
+        self._staged = staged if staged else None
+        flat_labels = resolve()
+        kernel_s += pstats.get("t_kernel", 0.0)
+        pack_s += pstats.get("t_pack", 0.0)
         t_step = time.perf_counter() - t0
         if pstats.get("caps_grew"):
             self.growth_events.append(
@@ -207,13 +251,15 @@ class ClusterServer:
              "slot_fill": len(flat) / (self.slots * self.query_cap),
              "inserted": inserted, "deleted": deleted,
              "rejected": rejected,
-             "seconds": t_step, "predict": pstats})
+             "seconds": t_step, "kernel_s": kernel_s, "pack_s": pack_s,
+             "predict": pstats})
         return active
 
     def run(self) -> List[ClusterRequest]:
-        """Drain the queue; returns every request served."""
+        """Drain the queue (staged batch included); returns every
+        request served."""
         out: List[ClusterRequest] = []
-        while self.pending:
+        while self.pending or self._staged is not None:
             out.extend(self.step())
         return out
 
@@ -255,7 +301,11 @@ def main() -> None:
     ap.add_argument("--num-requests", type=int, default=24)
     ap.add_argument("--max-queries", type=int, default=96)
     ap.add_argument("--mode", default="auto",
-                    choices=("auto", "host", "kernel"))
+                    choices=("auto", "host", "kernel", "device"))
+    ap.add_argument("--device", action="store_true",
+                    help="attach device-resident serving state to the "
+                         "index (guard-band kernel hot path; outputs "
+                         "stay bit-identical to host serving)")
     ap.add_argument("--sharded", type=int, default=0, metavar="N",
                     help="serve from an N-slab ShardedGritIndex "
                          "(slab-routed predict) instead of the "
@@ -293,7 +343,8 @@ def main() -> None:
 
     rng = np.random.default_rng(args.seed)
     n_req = 6 if args.smoke else args.num_requests
-    srv = ClusterServer(index, slots=args.slots, mode=args.mode)
+    srv = ClusterServer(index, slots=args.slots, mode=args.mode,
+                        device_state=args.device)
     deletable = list(range(len(pts)))
     for i in range(n_req):
         kind = (rng.choice(["predict", "insert", "delete"],

@@ -240,3 +240,87 @@ def test_eps_exactly_on_tile_boundary_ties():
                              jnp.asarray(np.arange(n) == 127)[None],
                              interpret=True)
     assert float(m[0, 1]) == eps ** 2 and int(i[0, 1]) == 127
+
+
+# --------------------------------------------------------------------------
+# guard-band kernels (device-resident serving path): two-threshold counts
+# and first/runner-up minima vs the oracles, on both dispatch paths
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("bsz,m,n,d", BATCH_SHAPES)
+def test_eps_count_band_batch_parity(bsz, m, n, d):
+    a, b, vb = _batch(("band", bsz, m, n, d), bsz, m, n, d)
+    want_lo = ref.eps_count_batch(a, b, 5.7, vb)
+    want_hi = ref.eps_count_batch(a, b, 6.3, vb)
+    for kw in [dict(interpret=True), dict()]:
+        got_lo, got_hi = ops.eps_count_band_batch(a, b, 5.7, 6.3, vb, **kw)
+        assert got_lo.shape == (bsz, m)
+        np.testing.assert_array_equal(np.asarray(got_lo), np.asarray(want_lo))
+        np.testing.assert_array_equal(np.asarray(got_hi), np.asarray(want_hi))
+        assert (np.asarray(got_lo) <= np.asarray(got_hi)).all()
+
+
+@pytest.mark.parametrize("bsz,m,n,d", BATCH_SHAPES)
+def test_row_min2_batch_parity(bsz, m, n, d):
+    a, b, vb = _batch(("min2", bsz, m, n, d), bsz, m, n, d)
+    want_m, want_m2, want_i = ref.row_min2_batch(a, b, vb)
+    for kw in [dict(interpret=True), dict()]:
+        got_m, got_m2, got_i = ops.row_min2_batch(a, b, vb, **kw)
+        np.testing.assert_allclose(np.asarray(got_m), np.asarray(want_m),
+                                   rtol=1e-5, atol=1e-4)
+        np.testing.assert_allclose(np.asarray(got_m2), np.asarray(want_m2),
+                                   rtol=1e-5, atol=1e-4)
+        # a differing argmin is legal only on a distance tie (the two
+        # dispatch paths use different d2 summation orders)
+        got_iv, want_iv = np.asarray(got_i), np.asarray(want_i)
+        differ = got_iv != want_iv
+        if differ.any():
+            d2 = np.asarray(ref.sq_dists_batch(a, b))
+            vb_np = np.asarray(vb)
+            for bb, mm in zip(*np.nonzero(differ)):
+                gi = got_iv[bb, mm]
+                assert gi >= 0 and vb_np[bb, gi]
+                np.testing.assert_allclose(
+                    d2[bb, mm, gi], d2[bb, mm, want_iv[bb, mm]],
+                    rtol=1e-5, atol=1e-4)
+        if bsz > 1:   # all-masked slot: (inf, inf, -1)
+            assert np.isinf(np.asarray(got_m[0])).all()
+            assert np.isinf(np.asarray(got_m2[0])).all()
+            assert (np.asarray(got_i[0]) == -1).all()
+
+
+def test_row_min2_single_candidate_contract():
+    """Exactly one valid candidate -> (d2, inf, idx): the runner-up is
+    inf so the device path's argmin-margin test is trivially certain."""
+    rng = _rng("min2_single")
+    a = jnp.asarray(rng.normal(size=(1, 4, 3)) * 10, jnp.float32)
+    b = jnp.asarray(rng.normal(size=(1, 9, 3)) * 10, jnp.float32)
+    vb = jnp.asarray(np.arange(9) == 5)[None]
+    for kw in [dict(interpret=True), dict()]:
+        m, m2, i = ops.row_min2_batch(a, b, vb, **kw)
+        d2 = np.asarray(ref.sq_dists_batch(a, b))[0, :, 5]
+        np.testing.assert_allclose(np.asarray(m[0]), d2, rtol=1e-5, atol=1e-4)
+        assert np.isinf(np.asarray(m2[0])).all()
+        assert (np.asarray(i[0]) == 5).all()
+
+
+@pytest.mark.parametrize("bar", [0, 2, 5, 1000])
+def test_eps_count_band_stop_row_contract(bar):
+    """Per-row saturation contract: any row whose returned lo-count is
+    *below* its bar has scanned every valid candidate, so both its
+    counts must equal the exact oracle counts.  Rows at/over the bar may
+    have stopped early (counts are lower bounds)."""
+    bsz, m, n, d = 3, 9, 260, 2
+    a, b, vb = _batch(("band_stop", bsz, m, n, d), bsz, m, n, d)
+    rows = _rng("band_stop_bars", bar).integers(0, max(bar, 1) + 1,
+                                                size=(bsz, m))
+    stop = jnp.asarray(rows, jnp.int32)
+    exact_lo = np.asarray(ref.eps_count_batch(a, b, 5.7, vb))
+    exact_hi = np.asarray(ref.eps_count_batch(a, b, 6.3, vb))
+    got_lo, got_hi = ops.eps_count_band_batch(a, b, 5.7, 6.3, vb,
+                                              stop_row=stop)
+    got_lo, got_hi = np.asarray(got_lo), np.asarray(got_hi)
+    assert (got_lo <= exact_lo).all() and (got_hi <= exact_hi).all()
+    done = got_lo < rows
+    np.testing.assert_array_equal(got_lo[done], exact_lo[done])
+    np.testing.assert_array_equal(got_hi[done], exact_hi[done])

@@ -1,0 +1,110 @@
+"""Snapshot plumbing guards: the version check must fail *clearly* --
+a wrong-file / truncated / future-version snapshot raises ``ValueError``
+naming what went wrong, never a raw ``KeyError`` or ``BadZipFile`` from
+deep inside the reader.  Both accepted versions keep restoring."""
+
+import io
+
+import numpy as np
+import pytest
+
+from repro.data.scenarios import get_serving_scenario
+from repro.engine import cluster
+from repro.index import GritIndex
+from repro.index.snapshot_io import (check_version, load_snapshot,
+                                     save_snapshot)
+
+
+@pytest.fixture(scope="module")
+def fitted():
+    ss = get_serving_scenario("drift-2d")
+    pts = ss.fit_points()
+    res = cluster(pts, ss.base.eps, ss.base.min_pts, engine="grit",
+                  return_index=True)
+    return res.index
+
+
+def test_v2_roundtrip(fitted):
+    buf = io.BytesIO()
+    fitted.save(buf)
+    buf.seek(0)
+    back = GritIndex.load(buf)
+    assert np.array_equal(back.labels, fitted.labels)
+    assert np.array_equal(back.alive, fitted.alive)
+    assert int(np.asarray(fitted.snapshot()["version"])[0]) == 2
+
+
+def test_v1_snapshot_restores(fitted):
+    """A v1 snapshot (no mutation-plane arrays) must keep restoring:
+    tombstones default to all-alive, merge graph rebuilds lazily."""
+    snap = fitted.snapshot()
+    for k in ("alive", "live_counts", "merge_edges", "has_merge_graph"):
+        snap.pop(k)
+    snap["version"] = np.asarray([1], np.int64)
+    back = GritIndex.restore(snap)
+    assert np.array_equal(back.labels, fitted.labels)
+    assert back.alive.all()
+    assert back.merge_edges is None
+    # and the lazily rebuilt graph equals the fitted one
+    assert np.array_equal(back.ensure_merge_graph(),
+                          fitted.ensure_merge_graph())
+
+
+def test_unknown_version_rejected(fitted):
+    snap = fitted.snapshot()
+    snap["version"] = np.asarray([99], np.int64)
+    with pytest.raises(ValueError, match=r"version 99"):
+        GritIndex.restore(snap)
+
+
+def test_missing_version_field_is_value_error(fitted):
+    """A mapping without the version field (wrong file / truncated
+    writer) must raise a naming ValueError, not a KeyError."""
+    snap = fitted.snapshot()
+    del snap["version"]
+    with pytest.raises(ValueError, match=r"no 'version' field"):
+        GritIndex.restore(snap)
+    with pytest.raises(ValueError, match=r"snapshot"):
+        check_version(snap, "version", (1, 2), "snapshot")
+
+
+def test_empty_version_field_is_value_error():
+    with pytest.raises(ValueError, match=r"empty"):
+        check_version({"version": np.empty(0, np.int64)},
+                      "version", (1, 2), "snapshot")
+
+
+def test_truncated_npz_is_value_error(fitted, tmp_path):
+    """A half-written .npz (crashed writer) must fail loudly at load
+    with the file named, not as a BadZipFile from the zip reader."""
+    path = tmp_path / "snap.npz"
+    fitted.save(str(path))
+    raw = path.read_bytes()
+    for cut in (len(raw) // 2, 10):
+        trunc = tmp_path / f"trunc_{cut}.npz"
+        trunc.write_bytes(raw[:cut])
+        with pytest.raises(ValueError, match=r"trunc_.*npz"):
+            load_snapshot(str(trunc))
+        with pytest.raises(ValueError):
+            GritIndex.load(str(trunc))
+
+
+def test_wrong_npz_is_value_error(tmp_path):
+    """A structurally valid .npz that is not a snapshot (no version
+    field) fails the version check, not a KeyError."""
+    path = tmp_path / "other.npz"
+    np.savez(str(path), foo=np.arange(3))
+    snap = load_snapshot(str(path))
+    with pytest.raises(ValueError, match=r"no 'version' field"):
+        check_version(snap, "version", (1, 2), "snapshot")
+
+
+def test_save_load_helpers_roundtrip(tmp_path):
+    snap = {"version": np.asarray([2], np.int64),
+            "x": np.arange(5, dtype=np.float64)}
+    p = tmp_path / "s.npz"
+    save_snapshot(str(p), snap)
+    back = load_snapshot(str(p))
+    assert set(back) == {"version", "x"}
+    assert np.array_equal(back["x"], snap["x"])
+    assert check_version(back, "version", (1, 2), "snapshot") == 2
