@@ -1,0 +1,62 @@
+"""``repro.analysis``: AST-based invariant linter for the serving stack.
+
+The serving hot path is fast because it layers *conventions* on top of
+jax that jax itself cannot enforce: donated buffers must never be read
+through a stale alias, float32 may only decide provably-certain cases
+(the guard-band contract -- float64 stays the reference), jit keys must
+route through pow2 bucketing so recompiles converge, the hot loop must
+not host-sync outside its intended block points, and reductions over
+PAD/FAR-padded buffers must fold a validity mask first.  Nothing but
+reviewer vigilance stops a future change from violating these in a way
+the differential tests only catch probabilistically -- so this package
+turns each convention into a static rule (stdlib ``ast``, no deps):
+
+* ``donation-aliasing``  -- reads of a donated argument's binding after
+  the donating call without reassignment (``rules/donation.py``);
+* ``f64-discipline``     -- float32 casts / mixed-precision comparisons
+  in ``core/`` and ``index/`` outside the allowlisted kernel-dispatch
+  functions (``rules/precision.py``);
+* ``recompile-hazard``   -- jitted callables fed raw data-dependent
+  shapes that skip the pow2/bucketing helpers, and array-typed values
+  in ``static_argnames`` (``rules/recompile.py``);
+* ``hot-path-sync``      -- host syncs (``np.asarray`` of a device
+  value, ``.item()``, ``block_until_ready``, ``jax.device_get``) inside
+  functions reachable from ``ClusterServer.step`` or the ``DeviceState``
+  dispatch stages (``rules/hostsync.py``);
+* ``sentinel-mask``      -- raw ``min``/``argmin`` reductions in
+  ``kernels/`` without a preceding validity-mask fold
+  (``rules/sentinel.py``).
+
+Violations are suppressed line by line with a *justified* pragma::
+
+    risky_expression()  # grit-lint: disable=<rule> -- <reason>
+
+(also honoured on the immediately preceding line).  A pragma without a
+reason, or naming an unknown rule, never suppresses -- it is itself
+reported under the ``pragma`` meta-rule.  Suppressed violations stay in
+the report with their reason, so ``--show-suppressed`` is an audit of
+every escape hatch in the tree.
+
+CLI: ``python -m repro.analysis --check src`` (exit 0 iff no
+unsuppressed violations); the tier-1 suite runs it over the live
+``src/repro`` tree, so a PR that breaks an invariant fails fast
+(DESIGN.md §8).
+"""
+
+from __future__ import annotations
+
+from .registry import Rule, all_rules, get_rule, register_rule, rule_names
+from .report import Report, Violation
+from .runner import analyze_paths, collect_py_files
+
+__all__ = [
+    "Report",
+    "Rule",
+    "Violation",
+    "all_rules",
+    "analyze_paths",
+    "collect_py_files",
+    "get_rule",
+    "register_rule",
+    "rule_names",
+]

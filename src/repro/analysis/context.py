@@ -1,0 +1,337 @@
+"""Shared AST plumbing for the invariant rules.
+
+One pass over each file builds a :class:`ModuleInfo` (function units,
+locally-jitted callables with their donation/static metadata, kernel-ops
+import aliases); the :class:`ProjectContext` ties the files of one run
+together for the rules that need cross-file knowledge (the hot-path
+call graph, cross-module jit specs of the ``repro.kernels.ops``
+wrappers).
+
+Scope note: rules analyze *function units* (top-level functions and
+class methods; nested functions and lambdas are part of their enclosing
+unit's tree).  Module-level statements outside any function are not
+scanned -- none of the guarded invariants can be violated at import
+time in this codebase.
+"""
+
+from __future__ import annotations
+
+import ast
+import dataclasses
+from typing import Dict, Iterator, List, Optional, Set, Tuple
+
+#: names a ``jax.jit`` call/decorator goes by in this codebase
+_JIT_CALLEES = frozenset({"jax.jit", "jit"})
+#: ``functools.partial`` spellings (``from functools import partial``)
+_PARTIAL_CALLEES = frozenset({"functools.partial", "partial"})
+#: module paths whose public callables are jitted kernel entry points
+_KERNEL_OPS_MODULES = frozenset(
+    {"repro.kernels.ops", "repro.kernels"})
+
+
+def dotted_name(node: ast.AST) -> Optional[str]:
+    """``a.b.c`` for a Name/Attribute chain, else None."""
+    if isinstance(node, ast.Name):
+        return node.id
+    if isinstance(node, ast.Attribute):
+        base = dotted_name(node.value)
+        return f"{base}.{node.attr}" if base is not None else None
+    return None
+
+
+def _const_strings(node: ast.AST) -> Tuple[str, ...]:
+    if isinstance(node, ast.Constant) and isinstance(node.value, str):
+        return (node.value,)
+    if isinstance(node, (ast.Tuple, ast.List)):
+        out: List[str] = []
+        for elt in node.elts:
+            if isinstance(elt, ast.Constant) and isinstance(elt.value, str):
+                out.append(elt.value)
+        return tuple(out)
+    return ()
+
+
+def _const_ints(node: ast.AST) -> Tuple[int, ...]:
+    if isinstance(node, ast.Constant) and isinstance(node.value, int):
+        return (node.value,)
+    if isinstance(node, (ast.Tuple, ast.List)):
+        out: List[int] = []
+        for elt in node.elts:
+            if isinstance(elt, ast.Constant) and isinstance(elt.value, int):
+                out.append(elt.value)
+        return tuple(out)
+    return ()
+
+
+@dataclasses.dataclass(frozen=True)
+class JitSpec:
+    """Donation / static metadata of one jitted callable."""
+
+    donate_argnums: Tuple[int, ...] = ()
+    donate_argnames: Tuple[str, ...] = ()
+    static_argnames: Tuple[str, ...] = ()
+
+    @property
+    def donates(self) -> bool:
+        return bool(self.donate_argnums or self.donate_argnames)
+
+
+def jit_spec_of_call(call: ast.Call) -> Optional[JitSpec]:
+    """The :class:`JitSpec` of a ``jax.jit(...)`` /
+    ``functools.partial(jax.jit, ...)`` expression, else None."""
+    callee = dotted_name(call.func)
+    is_jit = callee in _JIT_CALLEES
+    is_partial_jit = (
+        callee in _PARTIAL_CALLEES and bool(call.args)
+        and dotted_name(call.args[0]) in _JIT_CALLEES)
+    if not (is_jit or is_partial_jit):
+        return None
+    nums: Tuple[int, ...] = ()
+    dnames: Tuple[str, ...] = ()
+    snames: Tuple[str, ...] = ()
+    for kw in call.keywords:
+        if kw.arg == "donate_argnums":
+            nums = _const_ints(kw.value)
+        elif kw.arg == "donate_argnames":
+            dnames = _const_strings(kw.value)
+        elif kw.arg == "static_argnames":
+            snames = _const_strings(kw.value)
+    return JitSpec(donate_argnums=nums, donate_argnames=dnames,
+                   static_argnames=snames)
+
+
+def jit_spec_of_def(node: ast.FunctionDef) -> Optional[JitSpec]:
+    """The jit decoration of a function definition, else None."""
+    for dec in node.decorator_list:
+        if dotted_name(dec) in _JIT_CALLEES:
+            return JitSpec()
+        if isinstance(dec, ast.Call):
+            spec = jit_spec_of_call(dec)
+            if spec is not None:
+                return spec
+    return None
+
+
+@dataclasses.dataclass
+class FunctionUnit:
+    """One analyzable function: a top-level def or a class method.
+
+    ``node`` includes any nested defs/lambdas -- rules walk the whole
+    unit, so closures are analyzed in their enclosing unit's scope."""
+
+    qualname: str              # "func" or "Class.method"
+    node: ast.FunctionDef
+    module_relpath: str
+    jit: Optional[JitSpec] = None
+    called_names: Set[str] = dataclasses.field(default_factory=set)
+
+    @property
+    def simple_name(self) -> str:
+        return self.qualname.rsplit(".", 1)[-1]
+
+    def param_names(self) -> List[str]:
+        a = self.node.args
+        params = [p.arg for p in a.posonlyargs + a.args + a.kwonlyargs]
+        if a.vararg is not None:
+            params.append(a.vararg.arg)
+        if a.kwarg is not None:
+            params.append(a.kwarg.arg)
+        return params
+
+
+@dataclasses.dataclass
+class ModuleInfo:
+    """One parsed source file plus the lookups the rules share."""
+
+    path: str                  # display path (as reported)
+    relpath: str               # posix path relative to the scan root
+    tree: ast.Module
+    lines: List[str]
+    units: List[FunctionUnit] = dataclasses.field(default_factory=list)
+    #: locally-defined jitted callables (decorated defs and
+    #: ``f = jax.jit(g, ...)`` bindings), by local name
+    jitted: Dict[str, JitSpec] = dataclasses.field(default_factory=dict)
+    #: local names bound to the kernel-ops *module* (``kernel_ops.x``)
+    kernel_module_aliases: Set[str] = dataclasses.field(
+        default_factory=set)
+    #: local names bound to individual kernel-ops callables
+    kernel_func_aliases: Set[str] = dataclasses.field(default_factory=set)
+
+    def path_parts(self) -> Tuple[str, ...]:
+        return tuple(self.relpath.split("/"))
+
+
+def _collect_units(mod: ModuleInfo) -> None:
+    def add(node: ast.FunctionDef, qual: str) -> None:
+        unit = FunctionUnit(qualname=qual, node=node,
+                            module_relpath=mod.relpath,
+                            jit=jit_spec_of_def(node))
+        for sub in ast.walk(node):
+            if isinstance(sub, ast.Call):
+                callee = sub.func
+                if isinstance(callee, ast.Name):
+                    unit.called_names.add(callee.id)
+                elif isinstance(callee, ast.Attribute):
+                    unit.called_names.add(callee.attr)
+        mod.units.append(unit)
+        if unit.jit is not None:
+            mod.jitted[node.name] = unit.jit
+
+    for stmt in mod.tree.body:
+        if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            add(stmt, stmt.name)  # type: ignore[arg-type]
+        elif isinstance(stmt, ast.ClassDef):
+            for sub in stmt.body:
+                if isinstance(sub, (ast.FunctionDef,
+                                    ast.AsyncFunctionDef)):
+                    add(sub,  # type: ignore[arg-type]
+                        f"{stmt.name}.{sub.name}")
+
+
+def _collect_jit_bindings(mod: ModuleInfo) -> None:
+    # ``f = jax.jit(g, donate_argnums=...)`` anywhere in the file binds
+    # a donating/static callee under a plain name
+    for node in ast.walk(mod.tree):
+        if not isinstance(node, ast.Assign):
+            continue
+        if not isinstance(node.value, ast.Call):
+            continue
+        spec = jit_spec_of_call(node.value)
+        if spec is None:
+            continue
+        for tgt in node.targets:
+            if isinstance(tgt, ast.Name):
+                mod.jitted[tgt.id] = spec
+
+
+def _collect_kernel_aliases(mod: ModuleInfo) -> None:
+    for node in ast.walk(mod.tree):
+        if isinstance(node, ast.ImportFrom) and node.module:
+            if node.module in _KERNEL_OPS_MODULES:
+                for alias in node.names:
+                    local = alias.asname or alias.name
+                    if alias.name == "ops":
+                        mod.kernel_module_aliases.add(local)
+                    else:
+                        mod.kernel_func_aliases.add(local)
+        elif isinstance(node, ast.Import):
+            for alias in node.names:
+                if alias.name in _KERNEL_OPS_MODULES and \
+                        alias.name.endswith("ops"):
+                    mod.kernel_module_aliases.add(
+                        alias.asname or alias.name)
+
+
+def build_module(path: str, relpath: str, source: str) -> ModuleInfo:
+    """Parse one file into a :class:`ModuleInfo` (raises SyntaxError)."""
+    tree = ast.parse(source, filename=path)
+    mod = ModuleInfo(path=path, relpath=relpath, tree=tree,
+                     lines=source.splitlines())
+    _collect_units(mod)
+    _collect_jit_bindings(mod)
+    _collect_kernel_aliases(mod)
+    return mod
+
+
+@dataclasses.dataclass
+class ProjectContext:
+    """Cross-file view of one analysis run."""
+
+    modules: List[ModuleInfo]
+    units_by_simple: Dict[str, List[FunctionUnit]] = dataclasses.field(
+        default_factory=dict)
+
+    def __post_init__(self) -> None:
+        for mod in self.modules:
+            for unit in mod.units:
+                self.units_by_simple.setdefault(
+                    unit.simple_name, []).append(unit)
+
+    def module_of(self, unit: FunctionUnit) -> ModuleInfo:
+        for mod in self.modules:
+            if mod.relpath == unit.module_relpath:
+                return mod
+        raise KeyError(unit.module_relpath)
+
+    def _kernel_ops_module(self) -> Optional[ModuleInfo]:
+        for mod in self.modules:
+            if mod.relpath.endswith("kernels/ops.py"):
+                return mod
+        return None
+
+    def resolve_jitted_callee(self, mod: ModuleInfo,
+                              call: ast.Call) -> Optional[JitSpec]:
+        """The :class:`JitSpec` of a call site whose callee is a known
+        jitted entry point: a locally-jitted def/binding, or one of the
+        ``repro.kernels.ops`` wrappers (module-alias or direct import).
+        Kernel-ops wrappers that are plain functions *wrapping* a jit
+        resolve to an empty spec -- still a jitted entry.  Returns None
+        for everything else."""
+        callee = call.func
+        name = dotted_name(callee)
+        if name is not None and name in mod.jitted:
+            return mod.jitted[name]
+        target: Optional[str] = None
+        if isinstance(callee, ast.Attribute):
+            base = dotted_name(callee.value)
+            if base is not None and base in mod.kernel_module_aliases:
+                target = callee.attr
+        elif isinstance(callee, ast.Name) and \
+                callee.id in mod.kernel_func_aliases:
+            target = callee.id
+        if target is None:
+            return None
+        ops_mod = self._kernel_ops_module()
+        if ops_mod is not None:
+            if target in ops_mod.jitted:
+                return ops_mod.jitted[target]
+        return JitSpec()
+
+
+def iter_assignments(node: ast.AST) -> Iterator[
+        Tuple[List[str], ast.AST, int]]:
+    """Yield ``(target_names, value_expr, lineno)`` for every simple
+    assignment in ``node`` (tuple unpacking flattened; attribute and
+    subscript targets reported by their dotted name when available)."""
+    for sub in ast.walk(node):
+        value: Optional[ast.AST] = None
+        targets: List[ast.AST] = []
+        if isinstance(sub, ast.Assign):
+            value, targets = sub.value, list(sub.targets)
+        elif isinstance(sub, ast.AnnAssign) and sub.value is not None:
+            value, targets = sub.value, [sub.target]
+        elif isinstance(sub, ast.AugAssign):
+            value, targets = sub.value, [sub.target]
+        elif isinstance(sub, ast.NamedExpr):
+            value, targets = sub.value, [sub.target]
+        if value is None:
+            continue
+        names: List[str] = []
+        stack = list(targets)
+        while stack:
+            tgt = stack.pop()
+            if isinstance(tgt, (ast.Tuple, ast.List)):
+                stack.extend(tgt.elts)
+            elif isinstance(tgt, ast.Starred):
+                stack.append(tgt.value)
+            else:
+                dn = dotted_name(tgt)
+                if dn is not None:
+                    names.append(dn)
+        if names:
+            yield names, value, sub.lineno
+
+
+def subtree_has_call(node: ast.AST, simple_names: Set[str]) -> bool:
+    """True when ``node`` contains a call whose callee's simple name
+    (final attribute for dotted callees) is in ``simple_names``."""
+    for sub in ast.walk(node):
+        if isinstance(sub, ast.Call):
+            callee = sub.func
+            if isinstance(callee, ast.Name) and \
+                    callee.id in simple_names:
+                return True
+            if isinstance(callee, ast.Attribute) and \
+                    callee.attr in simple_names:
+                return True
+    return False

@@ -1,0 +1,143 @@
+"""``donation-aliasing``: stale reads of donated buffers.
+
+``jax.jit(..., donate_argnums=...)`` hands the argument's device buffer
+to the callee; the caller's binding now aliases freed storage and any
+subsequent read is undefined (jax only warns at runtime, and only
+sometimes).  The codebase's convention is to rebind the donated name at
+the donating call statement itself::
+
+    self.alive_res, self.core_res = _scatter_dead(self.alive_res,
+                                                  self.core_res, idx)
+
+This rule flags a *load* of a donated argument's dotted name after the
+donating call and before any rebind.  Control flow is approximated
+linearly by source position (a read earlier in a loop body is not
+caught -- the rule is a tripwire for the common straight-line bug, not
+a dataflow engine).
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import List, Optional, Tuple
+
+from ..context import (FunctionUnit, JitSpec, ModuleInfo,
+                       ProjectContext, dotted_name)
+from ..registry import Rule, register_rule
+from ..report import Violation
+
+_SIMPLE_STMTS = (ast.Assign, ast.AnnAssign, ast.AugAssign, ast.Expr,
+                 ast.Return)
+
+
+def _enclosing_stmt(unit: FunctionUnit,
+                    call: ast.Call) -> Optional[ast.stmt]:
+    for node in ast.walk(unit.node):
+        if isinstance(node, _SIMPLE_STMTS):
+            for sub in ast.walk(node):
+                if sub is call:
+                    return node
+    return None
+
+
+def _stmt_rebinds(stmt: ast.stmt, name: str) -> bool:
+    if isinstance(stmt, (ast.Assign, ast.AnnAssign, ast.AugAssign)):
+        targets = (stmt.targets if isinstance(stmt, ast.Assign)
+                   else [stmt.target])
+        stack: List[ast.AST] = list(targets)
+        while stack:
+            tgt = stack.pop()
+            if isinstance(tgt, (ast.Tuple, ast.List)):
+                stack.extend(tgt.elts)
+            elif isinstance(tgt, ast.Starred):
+                stack.append(tgt.value)
+            elif dotted_name(tgt) == name:
+                return True
+    return False
+
+
+def _pos(node: ast.AST) -> Tuple[int, int]:
+    return (getattr(node, "lineno", 0), getattr(node, "col_offset", 0))
+
+
+def _end_pos(node: ast.AST) -> Tuple[int, int]:
+    return (getattr(node, "end_lineno", 0) or 0,
+            getattr(node, "end_col_offset", 0) or 0)
+
+
+@register_rule
+class DonationAliasing(Rule):
+    name = "donation-aliasing"
+    description = ("read of a donated argument's binding after a "
+                   "donate_argnums call site, before rebinding")
+
+    def check_module(self, mod: ModuleInfo,
+                     ctx: ProjectContext) -> List[Violation]:
+        out: List[Violation] = []
+        for unit in mod.units:
+            out.extend(self._check_unit(mod, ctx, unit))
+        return out
+
+    def _check_unit(self, mod: ModuleInfo, ctx: ProjectContext,
+                    unit: FunctionUnit) -> List[Violation]:
+        out: List[Violation] = []
+        for node in ast.walk(unit.node):
+            if not isinstance(node, ast.Call):
+                continue
+            spec = ctx.resolve_jitted_callee(mod, node)
+            if spec is None or not spec.donates:
+                continue
+            callee = dotted_name(node.func) or "<callee>"
+            for donated in self._donated_names(node, spec):
+                v = self._first_stale_read(mod, unit, node, callee,
+                                           donated)
+                if v is not None:
+                    out.append(v)
+        return out
+
+    @staticmethod
+    def _donated_names(call: ast.Call, spec: JitSpec) -> List[str]:
+        names: List[str] = []
+        for idx in spec.donate_argnums:
+            if 0 <= idx < len(call.args):
+                dn = dotted_name(call.args[idx])
+                if dn is not None:
+                    names.append(dn)
+        for arg in spec.donate_argnames:
+            for kw in call.keywords:
+                if kw.arg == arg:
+                    dn = dotted_name(kw.value)
+                    if dn is not None:
+                        names.append(dn)
+        return names
+
+    def _first_stale_read(self, mod: ModuleInfo, unit: FunctionUnit,
+                          call: ast.Call, callee: str,
+                          name: str) -> Optional[Violation]:
+        # the conventional pattern -- rebinding at the call statement
+        # itself -- is always safe regardless of source positions
+        stmt = _enclosing_stmt(unit, call)
+        if stmt is not None and _stmt_rebinds(stmt, name):
+            return None
+        after = _end_pos(call)
+        events: List[Tuple[Tuple[int, int], str, ast.AST]] = []
+        for sub in ast.walk(unit.node):
+            if not isinstance(sub, (ast.Name, ast.Attribute)):
+                continue
+            if dotted_name(sub) != name:
+                continue
+            if _pos(sub) <= after:
+                continue
+            kind = ("store" if isinstance(sub.ctx, ast.Store)
+                    else "load")
+            events.append((_pos(sub), kind, sub))
+        for pos, kind, sub in sorted(events, key=lambda e: e[0]):
+            if kind == "store":
+                return None  # rebound before any read
+            return Violation(
+                rule=self.name, path=mod.path, line=pos[0],
+                col=pos[1],
+                message=(f"'{name}' was donated to {callee}() at line "
+                         f"{call.lineno} and is read here before being "
+                         "rebound; the buffer may already be freed"))
+        return None

@@ -1,0 +1,200 @@
+"""``hot-path-sync``: the serving hot loop must not host-sync.
+
+The whole point of the device-resident serving plane is that
+``ClusterServer.step`` and the ``DeviceState`` dispatch stages enqueue
+device work and defer materialization to each stage's single intended
+block point.  One stray ``np.asarray(device_value)``, ``.item()``,
+``float(tracer)`` or ``block_until_ready()`` in that call graph
+serializes the pipeline and silently halves throughput -- and nothing
+crashes, so nothing catches it.
+
+This is a project-level rule: it builds a call graph (simple-name
+matching, BFS) from the hot-path roots and flags host-sync operations
+in every reachable function.  ``.item()`` / ``block_until_ready`` /
+``jax.device_get`` always flag; ``np.asarray`` / ``float`` / ``int``
+flag only when their operand is device-derived (a ``*dev`` name, a
+``*_res`` resident buffer, or a value assigned from a jitted/kernel
+call).  The intended block points carry justified pragmas.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Optional, Set
+
+from ..context import (FunctionUnit, ModuleInfo, ProjectContext,
+                       dotted_name, iter_assignments)
+from ..registry import Rule, register_rule
+from ..report import Violation
+
+#: dispatch stages in index/device_state.py that are hot-path roots
+STAGE_ROOTS = frozenset({
+    "predict_device_async", "predict_device", "recompute_cores_device",
+    "decide_edges_device", "border_pass_device",
+})
+
+#: modules that can never be on the serving hot path -- name collisions
+#: with their functions must not drag them into the reachable set
+_EXCLUDED_PARTS = frozenset({
+    "train", "launch", "bench", "examples", "scripts", "tests",
+    "analysis",
+})
+
+_MATERIALIZERS = frozenset({
+    "np.asarray", "np.array", "numpy.asarray", "numpy.array",
+    "float", "int",
+})
+
+
+def _excluded(mod: ModuleInfo) -> bool:
+    return bool(set(mod.path_parts()) & _EXCLUDED_PARTS)
+
+
+def _is_root(mod: ModuleInfo, unit: FunctionUnit) -> bool:
+    # roots are ClusterServer.step and the DeviceState *dispatch*
+    # stages; audit helpers like DeviceState.mirror_matches are only
+    # covered if some root actually reaches them
+    if unit.qualname == "ClusterServer.step":
+        return True
+    return (mod.relpath.endswith("index/device_state.py")
+            and unit.simple_name in STAGE_ROOTS)
+
+
+def _device_producers(ctx: ProjectContext) -> Set[str]:
+    """Simple names of functions whose return value lives on device:
+    jitted defs, plus (to fixpoint) functions returning jnp values or
+    the result of another producer."""
+    producers: Set[str] = set()
+    for mod in ctx.modules:
+        for unit in mod.units:
+            if unit.jit is not None or \
+                    mod.relpath.endswith("kernels/ops.py"):
+                producers.add(unit.simple_name)
+    for _ in range(4):
+        grew = False
+        for mod in ctx.modules:
+            for unit in mod.units:
+                if unit.simple_name in producers:
+                    continue
+                for node in ast.walk(unit.node):
+                    if isinstance(node, ast.Return) and \
+                            node.value is not None and \
+                            _device_expr(node.value, producers, set()):
+                        producers.add(unit.simple_name)
+                        grew = True
+                        break
+        if not grew:
+            break
+    return producers
+
+
+def _device_expr(expr: ast.AST, producers: Set[str],
+                 tainted: Set[str]) -> bool:
+    for sub in ast.walk(expr):
+        if isinstance(sub, ast.Name):
+            if sub.id.endswith("dev") or sub.id.endswith("_res") or \
+                    sub.id in tainted:
+                return True
+        elif isinstance(sub, ast.Attribute):
+            if sub.attr.endswith("_res"):
+                return True
+        if isinstance(sub, ast.Call):
+            dn = dotted_name(sub.func)
+            if dn is not None and (dn.startswith("jnp.") or
+                                   dn.startswith("jax.numpy.")):
+                return True
+            simple = (sub.func.id if isinstance(sub.func, ast.Name)
+                      else sub.func.attr
+                      if isinstance(sub.func, ast.Attribute) else "")
+            if simple in producers:
+                return True
+    return False
+
+
+def _device_tainted_names(unit: FunctionUnit,
+                          producers: Set[str]) -> Set[str]:
+    tainted: Set[str] = set()
+    for names, value, _line in sorted(
+            iter_assignments(unit.node), key=lambda t: t[2]):
+        if _device_expr(value, producers, tainted):
+            tainted.update(n for n in names if "." not in n)
+    return tainted
+
+
+@register_rule
+class HotPathSync(Rule):
+    name = "hot-path-sync"
+    description = ("host synchronization inside the call graph of "
+                   "ClusterServer.step / DeviceState dispatch")
+
+    def check_project(self, ctx: ProjectContext) -> List[Violation]:
+        mod_of: Dict[int, ModuleInfo] = {}
+        roots: List[FunctionUnit] = []
+        for mod in ctx.modules:
+            for unit in mod.units:
+                mod_of[id(unit)] = mod
+                if not _excluded(mod) and _is_root(mod, unit):
+                    roots.append(unit)
+        if not roots:
+            return []
+
+        reachable: Dict[int, FunctionUnit] = {}
+        frontier = list(roots)
+        while frontier:
+            unit = frontier.pop()
+            if id(unit) in reachable:
+                continue
+            reachable[id(unit)] = unit
+            for name in unit.called_names:
+                for callee in ctx.units_by_simple.get(name, []):
+                    cmod = mod_of[id(callee)]
+                    if not _excluded(cmod) and \
+                            id(callee) not in reachable:
+                        frontier.append(callee)
+
+        producers = _device_producers(ctx)
+        out: List[Violation] = []
+        for unit in reachable.values():
+            out.extend(self._check_unit(
+                mod_of[id(unit)], unit, producers))
+        return out
+
+    def _check_unit(self, mod: ModuleInfo, unit: FunctionUnit,
+                    producers: Set[str]) -> List[Violation]:
+        tainted = _device_tainted_names(unit, producers)
+        out: List[Violation] = []
+        for node in ast.walk(unit.node):
+            if not isinstance(node, ast.Call):
+                continue
+            v = self._check_call(mod, unit, node, producers, tainted)
+            if v is not None:
+                out.append(v)
+        return out
+
+    def _check_call(self, mod: ModuleInfo, unit: FunctionUnit,
+                    node: ast.Call, producers: Set[str],
+                    tainted: Set[str]) -> Optional[Violation]:
+        where = (f"in {unit.qualname}() on the serving hot path; "
+                 "route through the stage's intended block point or "
+                 "pragma with the reason")
+        if isinstance(node.func, ast.Attribute):
+            if node.func.attr == "block_until_ready":
+                return self._v(mod, node,
+                               f"block_until_ready() {where}")
+            if node.func.attr == "item" and not node.args:
+                return self._v(mod, node, f".item() host sync {where}")
+        dn = dotted_name(node.func)
+        if dn == "jax.device_get":
+            return self._v(mod, node, f"jax.device_get() {where}")
+        if dn in _MATERIALIZERS and node.args:
+            if _device_expr(node.args[0], producers, tainted):
+                return self._v(
+                    mod, node,
+                    f"{dn}() materializes a device value {where}")
+        return None
+
+    def _v(self, mod: ModuleInfo, node: ast.Call,
+           message: str) -> Violation:
+        return Violation(rule=self.name, path=mod.path,
+                         line=node.lineno, col=node.col_offset,
+                         message=message)

@@ -1,0 +1,177 @@
+"""``f64-discipline``: float32 must not leak into exactness-critical code.
+
+The guard-band contract (DESIGN.md) is that ``core/`` and ``index/``
+decide clustering *exactly* in float64; float32 appears only inside the
+designated kernel-dispatch functions, which center coordinates and
+apply the guard band so that f32 only decides provably-certain cases.
+A stray ``np.float32`` cast or an f32-vs-f64 comparison anywhere else
+silently converts "exact DBSCAN" into "approximately DBSCAN".
+
+Flags, inside ``core/`` and ``index/`` but outside the allowlisted
+dispatch functions:
+
+* calls to / references of ``np.float32`` / ``jnp.float32``;
+* ``.astype("float32")`` and ``dtype="float32"`` string dtypes;
+* comparisons where exactly one side is f32-tainted (a name assigned
+  from an expression involving float32) -- the classic mixed-precision
+  threshold bug.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import List, Optional, Set, Tuple
+
+from ..context import (FunctionUnit, ModuleInfo, ProjectContext,
+                       dotted_name, iter_assignments)
+from ..registry import Rule, register_rule
+from ..report import Violation
+
+_F32_NAMES = frozenset({
+    "np.float32", "jnp.float32", "numpy.float32", "jax.numpy.float32",
+})
+
+#: (module relpath suffix, unit qualname) pairs where float32 is the
+#: point: the kernel-dispatch layer that owns the guard-band contract.
+ALLOWLIST: Set[Tuple[str, str]] = {
+    ("core/merging.py", "fast_merging_masked"),
+    ("core/grids.py", "build_grids_device"),
+    ("index/grit_index.py", "GritIndex._predict_kernel"),
+    ("index/device_state.py", "DeviceState.refresh_rows"),
+    ("index/device_state.py", "DeviceState.mirror_matches"),
+    ("index/device_state.py", "_d2_flat_res"),
+    ("index/device_state.py", "_anchors"),
+    ("index/device_state.py", "predict_device_async"),
+}
+
+
+def _in_scope(mod: ModuleInfo) -> bool:
+    parts = mod.path_parts()
+    return "core" in parts or "index" in parts
+
+
+def _allowlisted(mod: ModuleInfo, unit: FunctionUnit) -> bool:
+    for suffix, qual in ALLOWLIST:
+        if mod.relpath.endswith(suffix) and unit.qualname == qual:
+            return True
+    return False
+
+
+def _mentions_f32(node: ast.AST) -> bool:
+    for sub in ast.walk(node):
+        if isinstance(sub, ast.Attribute) and \
+                dotted_name(sub) in _F32_NAMES:
+            return True
+        if isinstance(sub, ast.Call):
+            if isinstance(sub.func, ast.Attribute) and \
+                    sub.func.attr == "astype":
+                for arg in sub.args:
+                    if isinstance(arg, ast.Constant) and \
+                            arg.value == "float32":
+                        return True
+    return False
+
+
+@register_rule
+class F64Discipline(Rule):
+    name = "f64-discipline"
+    description = ("float32 cast or mixed f32/f64 comparison in core/ "
+                   "or index/ outside the kernel-dispatch allowlist")
+
+    def check_module(self, mod: ModuleInfo,
+                     ctx: ProjectContext) -> List[Violation]:
+        if not _in_scope(mod):
+            return []
+        out: List[Violation] = []
+        for unit in mod.units:
+            if _allowlisted(mod, unit):
+                continue
+            out.extend(self._check_unit(mod, unit))
+        return out
+
+    def _check_unit(self, mod: ModuleInfo,
+                    unit: FunctionUnit) -> List[Violation]:
+        out: List[Violation] = []
+        flagged_funcs: Set[int] = set()
+        for node in ast.walk(unit.node):
+            if isinstance(node, ast.Call):
+                v = self._check_call(mod, node, flagged_funcs)
+                if v is not None:
+                    out.append(v)
+        for node in ast.walk(unit.node):
+            if isinstance(node, ast.Attribute) and \
+                    id(node) not in flagged_funcs and \
+                    dotted_name(node) in _F32_NAMES:
+                out.append(Violation(
+                    rule=self.name, path=mod.path, line=node.lineno,
+                    col=node.col_offset,
+                    message=f"float32 dtype '{dotted_name(node)}' in "
+                            "exactness-critical code; f64 is the "
+                            "reference here (guard-band contract)"))
+        out.extend(self._check_mixed_compares(mod, unit))
+        return out
+
+    def _check_call(self, mod: ModuleInfo, node: ast.Call,
+                    flagged_funcs: Set[int]) -> Optional[Violation]:
+        func_name = dotted_name(node.func)
+        if func_name in _F32_NAMES:
+            flagged_funcs.add(id(node.func))
+            return Violation(
+                rule=self.name, path=mod.path, line=node.lineno,
+                col=node.col_offset,
+                message=f"float32 cast via {func_name}() in "
+                        "exactness-critical code; keep core/index "
+                        "decisions in f64 or move this into an "
+                        "allowlisted dispatch function")
+        if isinstance(node.func, ast.Attribute) and \
+                node.func.attr == "astype":
+            for arg in node.args:
+                if isinstance(arg, ast.Constant) and \
+                        arg.value == "float32":
+                    return Violation(
+                        rule=self.name, path=mod.path,
+                        line=node.lineno, col=node.col_offset,
+                        message="astype('float32') in "
+                                "exactness-critical code")
+        for kw in node.keywords:
+            if kw.arg == "dtype" and \
+                    isinstance(kw.value, ast.Constant) and \
+                    kw.value.value == "float32":
+                return Violation(
+                    rule=self.name, path=mod.path, line=node.lineno,
+                    col=node.col_offset,
+                    message="dtype='float32' in exactness-critical "
+                            "code")
+        return None
+
+    def _check_mixed_compares(self, mod: ModuleInfo,
+                              unit: FunctionUnit) -> List[Violation]:
+        tainted: Set[str] = set()
+        for names, value, _line in sorted(
+                iter_assignments(unit.node), key=lambda t: t[2]):
+            if _mentions_f32(value) or any(
+                    isinstance(s, ast.Name) and s.id in tainted
+                    for s in ast.walk(value)):
+                tainted.update(names)
+
+        def side_f32(expr: ast.AST) -> bool:
+            if _mentions_f32(expr):
+                return True
+            return any(isinstance(s, ast.Name) and s.id in tainted
+                       for s in ast.walk(expr))
+
+        out: List[Violation] = []
+        for node in ast.walk(unit.node):
+            if not isinstance(node, ast.Compare):
+                continue
+            if len(node.comparators) != 1:
+                continue
+            lhs, rhs = node.left, node.comparators[0]
+            if side_f32(lhs) != side_f32(rhs):
+                out.append(Violation(
+                    rule=self.name, path=mod.path, line=node.lineno,
+                    col=node.col_offset,
+                    message="comparison mixes an f32-tainted operand "
+                            "with an untainted one; mixed-precision "
+                            "thresholds break the exactness contract"))
+        return out

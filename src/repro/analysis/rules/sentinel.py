@@ -1,0 +1,124 @@
+"""``sentinel-mask``: reductions over padded buffers must mask first.
+
+Kernel inputs are padded to pow2 capacities with FAR/PAD sentinels
+(``FAR = 1e15``, squared ``FAR_D2 ~ 1e29``); a ``min``/``argmin``
+straight over such a buffer happily returns a sentinel slot whenever
+the valid prefix is empty -- or, worse, a *wrong* argmin when sentinel
+rows compare equal.  The kernel wrappers therefore fold a validity mask
+(``jnp.where(valid, d2, inf)``) before every reduction.
+
+This rule flags, in ``kernels/``, any ``min`` / ``argmin`` (function or
+method form) whose operand does not derive from a ``jnp.where`` /
+``np.where`` fold -- directly, or via a name assigned (with one
+propagation step) from such a fold.  Pallas kernel *bodies* (functions
+taking ``*_ref`` parameters) are exempt: their operands are FAR-folded
+by the wrapper contract before the kernel launches, and ``where``
+inside the grid loop is exactly what the tiling is avoiding.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import List, Optional, Set
+
+from ..context import (FunctionUnit, ModuleInfo, ProjectContext,
+                       dotted_name, iter_assignments)
+from ..registry import Rule, register_rule
+from ..report import Violation
+
+_REDUCERS = frozenset({"min", "argmin", "nanmin", "nanargmin"})
+_REDUCER_MODULES = ("jnp.", "np.", "jax.numpy.", "numpy.")
+
+
+def _in_scope(mod: ModuleInfo) -> bool:
+    return "kernels" in mod.path_parts()
+
+
+def _is_kernel_body(unit: FunctionUnit) -> bool:
+    return any(p.endswith("_ref") for p in unit.param_names())
+
+
+def _has_where(node: ast.AST) -> bool:
+    for sub in ast.walk(node):
+        if isinstance(sub, ast.Call):
+            callee = sub.func
+            simple = (callee.id if isinstance(callee, ast.Name)
+                      else callee.attr
+                      if isinstance(callee, ast.Attribute) else "")
+            if simple == "where":
+                return True
+    return False
+
+
+def _masked_names(unit: FunctionUnit) -> Set[str]:
+    """Names assigned from a where-fold, plus one propagation step
+    (a name assigned from an expression mentioning a masked name)."""
+    masked: Set[str] = set()
+    assignments = sorted(iter_assignments(unit.node),
+                         key=lambda t: t[2])
+    for _pass in range(2):
+        for names, value, _line in assignments:
+            if _has_where(value) or any(
+                    isinstance(s, ast.Name) and s.id in masked
+                    for s in ast.walk(value)):
+                masked.update(n for n in names if "." not in n)
+    return masked
+
+
+def _operand_masked(operand: ast.AST, masked: Set[str]) -> bool:
+    if _has_where(operand):
+        return True
+    return any(isinstance(s, ast.Name) and s.id in masked
+               for s in ast.walk(operand))
+
+
+@register_rule
+class SentinelMask(Rule):
+    name = "sentinel-mask"
+    description = ("raw min/argmin over a PAD/FAR-padded buffer in "
+                   "kernels/ without a preceding validity-mask fold")
+
+    def check_module(self, mod: ModuleInfo,
+                     ctx: ProjectContext) -> List[Violation]:
+        if not _in_scope(mod):
+            return []
+        out: List[Violation] = []
+        for unit in mod.units:
+            if _is_kernel_body(unit):
+                continue
+            out.extend(self._check_unit(mod, unit))
+        return out
+
+    def _check_unit(self, mod: ModuleInfo,
+                    unit: FunctionUnit) -> List[Violation]:
+        masked = _masked_names(unit)
+        out: List[Violation] = []
+        for node in ast.walk(unit.node):
+            if not isinstance(node, ast.Call):
+                continue
+            operand = self._reduction_operand(node)
+            if operand is None:
+                continue
+            if not _operand_masked(operand, masked):
+                out.append(Violation(
+                    rule=self.name, path=mod.path, line=node.lineno,
+                    col=node.col_offset,
+                    message=("raw reduction over a possibly "
+                             "FAR/PAD-padded buffer; fold the validity "
+                             "mask first (jnp.where(valid, d2, inf)) "
+                             "or the sentinel slots can win")))
+        return out
+
+    @staticmethod
+    def _reduction_operand(node: ast.Call) -> Optional[ast.expr]:
+        callee = node.func
+        if isinstance(callee, ast.Attribute) and \
+                callee.attr in _REDUCERS:
+            dn = dotted_name(callee)
+            if dn is not None and any(
+                    dn.startswith(p) for p in _REDUCER_MODULES):
+                return node.args[0] if node.args else None
+            # method form: buf.min() / buf.argmin()
+            if not node.args:
+                return callee.value
+        return None

@@ -41,7 +41,6 @@ import dataclasses
 from functools import partial
 from typing import ClassVar, Optional, Tuple
 
-import numpy as np
 import jax
 import jax.numpy as jnp
 
@@ -322,7 +321,6 @@ def device_dbscan(points: jnp.ndarray, eps, min_pts: int, caps: GritCaps,
         merge_block, (pg.reshape(n_pb, PB), ph.reshape(n_pb, PB),
                       pvalid.reshape(n_pb, PB)))
     merged = merged.reshape(-1)
-    kappa = jnp.max(jnp.where(pvalid, iters.reshape(-1), 0))
 
     edges = jnp.stack([pg, ph], axis=1)
     grid_label = label_propagation(G, edges, merged, core_grid)

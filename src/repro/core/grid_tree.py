@@ -31,7 +31,7 @@ from __future__ import annotations
 import dataclasses
 import math
 from functools import partial
-from typing import Optional, Tuple
+from typing import Tuple
 
 import numpy as np
 import jax

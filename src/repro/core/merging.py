@@ -29,7 +29,6 @@ evaluations so the benchmarks can reproduce the paper's efficiency story.
 from __future__ import annotations
 
 from functools import partial
-from typing import Tuple
 
 import numpy as np
 import jax

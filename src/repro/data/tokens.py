@@ -12,7 +12,6 @@ a per-(host, cursor) seeded generator, so
 from __future__ import annotations
 
 import dataclasses
-from typing import Iterator, Optional, Tuple
 
 import numpy as np
 

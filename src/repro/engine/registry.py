@@ -28,7 +28,7 @@ either resolve overflow itself (adaptive retry) or surface it in
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Dict, Optional, Tuple
+from typing import Callable, Dict, Tuple
 
 import numpy as np
 

@@ -546,7 +546,6 @@ def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
         return jnp.concatenate(
             [x, jnp.full((x.shape[0], tgt - s, D), fill, x.dtype)], axis=1)
 
-    sq_pad = ((Sq + block_q - 1) // block_q) * block_q
     qf = pad_seq(qf, block_q, 0.0)
     kf = pad_seq(kf, block_k, 0.0)
     vf = pad_seq(vf, block_k, 0.0)

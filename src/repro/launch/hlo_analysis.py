@@ -18,7 +18,7 @@ roofline term  T_coll = bytes / 50 GB/s (serial per-link ICI model).
 from __future__ import annotations
 
 import re
-from typing import Dict, List, Tuple
+from typing import Dict
 
 _DTYPE_BYTES = {
     "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,

@@ -21,7 +21,7 @@ from __future__ import annotations
 
 import dataclasses
 import re
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Optional
 
 from .hlo_analysis import _DTYPE_BYTES, _GROUPS_RE, _GROUPS_IOTA_RE
 

@@ -12,7 +12,7 @@ from __future__ import annotations
 import argparse
 import dataclasses
 import time
-from typing import List, Optional
+from typing import List
 
 
 @dataclasses.dataclass
@@ -21,6 +21,12 @@ class Request:
     prompt: list
     max_new: int
     out: list = dataclasses.field(default_factory=list)
+
+
+def _pow2_at_least(n: int) -> int:
+    """Smallest power of two >= n (prefill shapes bucket to pow2 so the
+    jit cache converges instead of recompiling per prompt length)."""
+    return 1 << max(0, int(n) - 1).bit_length()
 
 
 def main() -> None:
@@ -62,8 +68,9 @@ def main() -> None:
         reqs = reqs[B:]
         if not active:
             break
-        # left-pad prompts to a common length -> one batched prefill
-        plen = max(len(r.prompt) for r in active)
+        # left-pad prompts to a common pow2-bucketed length -> one
+        # batched prefill per bucket, not one compile per length
+        plen = _pow2_at_least(max(len(r.prompt) for r in active))
         toks = np.zeros((B, plen), np.int32)
         for i, r in enumerate(active):
             toks[i, plen - len(r.prompt):] = r.prompt

@@ -23,10 +23,9 @@ Everything returns ``NamedSharding`` bound to the target mesh so AOT
 from __future__ import annotations
 
 import re
-from typing import Any, Dict, Optional
+from typing import Any, Dict
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 

@@ -12,21 +12,19 @@ with concrete arrays.
 
 from __future__ import annotations
 
-import dataclasses
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Optional
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs import get_config, get_shape, canonical
-from repro.models import (init_params, init_cache, loss_fn, prefill,
+from repro.models import (init_params, init_cache, prefill,
                           decode_step)
 from repro.models.config import LMConfig
 from repro.models import sharding_ctx
 from repro.train import TrainCfg, make_train_step, init_state, \
     get_optimizer, warmup_cosine
-from .mesh import batch_axes, axis_size
 from . import sharding as shd
 
 

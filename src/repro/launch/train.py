@@ -11,7 +11,6 @@ from __future__ import annotations
 import argparse
 import time
 
-import numpy as np
 
 
 def main() -> None:

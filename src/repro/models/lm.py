@@ -17,8 +17,7 @@ Batch dict keys: "tokens" [B, S+1] int32 always; "frames" [B, T, d]
 from __future__ import annotations
 
 import math
-from functools import partial
-from typing import Optional, Tuple
+from typing import Optional
 
 import jax
 import jax.numpy as jnp

@@ -18,7 +18,7 @@ Load-balancing auxiliary loss follows the switch-transformer formulation.
 
 from __future__ import annotations
 
-from typing import Optional, Tuple
+from typing import Tuple
 
 import numpy as np
 import jax
@@ -163,7 +163,6 @@ def moe_forward_shardmap_ep(cfg: LMConfig, p: dict, x: jnp.ndarray,
         n_data *= sizes[a]
     assert E % n_data == 0 and m.d_ff % n_model == 0
     E_loc = E // n_data
-    ff_loc = m.d_ff // n_model
     assert B % n_data == 0
     B_loc = B // n_data
     T_loc = B_loc * S

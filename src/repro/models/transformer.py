@@ -18,7 +18,6 @@ rect / direct attention paths stay structurally fixed inside the scan.
 
 from __future__ import annotations
 
-from functools import partial
 from typing import Optional, Tuple
 
 import jax

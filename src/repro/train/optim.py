@@ -15,8 +15,7 @@ keep master weights in f32 regardless of the compute dtype.
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
-from typing import Callable, NamedTuple, Optional
+from typing import Callable
 
 import jax
 import jax.numpy as jnp

@@ -15,8 +15,7 @@ the dry-run.  Structure:
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
-from typing import Callable, Optional
+from typing import Callable
 
 import jax
 import jax.numpy as jnp
