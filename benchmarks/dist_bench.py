@@ -132,3 +132,77 @@ def bench_dist_serve(n: int = 50_000, scenario: str = "blobs-2d",
                      bytes=int(sum(v.nbytes for v in snap.values()))))
     assert ShardedGritIndex.restore(snap).num_shards == sidx.num_shards
     return rows
+
+
+def bench_traced_fit(n: int = 50_000, scenario: str = "blobs-2d",
+                     seed: int = 0,
+                     trace_out: str = "BENCH_7_trace.json") -> List[Dict]:
+    """Traced distributed fit: where does the fit wall-clock go?
+
+    Runs ``cluster(engine="distributed")`` with ``repro.obs`` tracing
+    on (the staged SPMD step: pack / halo exchange / local cluster /
+    reconcile as separately-synced spans), once cold (jit compiles
+    included) and once warm, and attributes each fit's wall-clock to
+    its stages plus the recompile and padding-waste counters -- the
+    instrumentation ROADMAP item 2 (the ~20x distributed-fit gap)
+    needs.  Exports the cold run's Perfetto-loadable Chrome trace to
+    ``trace_out`` and prints the ``repro.obs.view`` attribution table.
+
+    Each row carries ``coverage``: the fraction of the ``dist.fit``
+    span accounted for by its stage children (the >= 0.9 acceptance
+    bar BENCH_7.json gates on).
+    """
+    import jax
+    from repro import obs
+    from repro.obs import view as obs_view
+    from repro.data.scenarios import get_scenario
+    from repro.engine import cluster
+
+    mesh = jax.make_mesh((jax.device_count(),), ("shard",))
+    n_shards = int(mesh.devices.size)
+    sc = get_scenario(scenario)
+    eps = sc.eps * (sc.n / n) ** (1.0 / sc.d)
+    pts = sc.points(n=n)
+
+    obs.enable(clear=True)
+    obs.install_jax_hooks()
+    reg = obs.registry()
+    rows: List[Dict] = []
+    compiles_before = sum(obs.recompile_counts().values())
+    cold_events = None
+    for phase in ("cold", "warm"):
+        obs.get_tracer().clear()
+        t0 = time.perf_counter()
+        cluster(pts, eps, sc.min_pts, engine="distributed", mesh=mesh)
+        wall = time.perf_counter() - t0
+        events = obs.get_tracer().snapshot_events()
+        if phase == "cold":
+            cold_events = events
+        att = obs_view.attribution(events, root="dist.fit")
+        compiles = sum(obs.recompile_counts().values())
+        snap = reg.snapshot()
+        row = dict(bench="traced_fit", op=phase, scenario=scenario,
+                   n=n, d=sc.d, n_shards=n_shards,
+                   cluster_wall_s=round(wall, 4),
+                   fit_wall_s=round(att["wall_us"] / 1e6, 4),
+                   coverage=round(att["coverage"], 4),
+                   recompiles=compiles - compiles_before,
+                   halo_padding_waste=round(
+                       snap.get("dist.halo.padding_waste",
+                                {}).get("value", 0.0), 4),
+                   pack_padding_waste=round(
+                       snap.get("dist.pack.padding_waste",
+                                {}).get("value", 0.0), 4))
+        for name, us in att["children"].items():
+            row[f"stage_{name.rsplit('.', 1)[-1]}_s"] = round(us / 1e6, 4)
+        rows.append(row)
+        compiles_before = compiles
+    obs.export.write_chrome_trace(
+        trace_out, cold_events, metrics=reg.snapshot(),
+        meta=obs.bench_meta())
+    print(f"wrote {trace_out} ({len(cold_events)} events; open in "
+          f"ui.perfetto.dev)")
+    print(obs_view.render(cold_events, reg.snapshot(), obs.bench_meta(),
+                          root="dist.fit"))
+    obs.disable()
+    return rows

@@ -1,0 +1,71 @@
+"""Observability overhead benchmark: serve throughput with tracing on
+vs off (the CI overhead gate).
+
+The ``repro.obs`` contract is that a disabled tracer is a shared no-op
+(zero events, zero host syncs) and an enabled tracer syncs only at
+span close -- so tracing a serving stream must cost little.  This
+bench replays the same BENCH_3-shaped query stream through a
+:class:`~repro.serve.driver.ClusterServer` twice, tracing off then on,
+best-of-``reps`` each, and reports the throughput ratio.  CI gates on
+``on/off >= 0.9``.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Dict, List, Tuple
+
+import numpy as np
+
+
+def bench_obs_overhead(n: int = 20_000, scenario: str = "blobs-2d",
+                       n_requests: int = 48, q_max: int = 64,
+                       reps: int = 3, seed: int = 0
+                       ) -> Tuple[List[Dict], float]:
+    """(rows, on/off throughput ratio) for the overhead gate."""
+    from repro import obs
+    from repro.data.scenarios import get_scenario
+    from repro.engine import cluster
+    from repro.serve.driver import ClusterServer
+
+    sc = get_scenario(scenario)
+    eps = sc.eps * (sc.n / n) ** (1.0 / sc.d)
+    pts = sc.points(n=n)
+    res = cluster(pts, eps, sc.min_pts, engine="grit", return_index=True)
+    idx = res.index
+
+    rng = np.random.default_rng(seed)
+    requests = []
+    for _ in range(n_requests):
+        m = int(rng.integers(4, q_max + 1))
+        requests.append(pts[rng.integers(0, len(pts), m)] + rng.normal(
+            scale=0.3 * eps, size=(m, sc.d)))
+
+    def run_stream() -> float:
+        srv = ClusterServer(idx, slots=4)
+        for q in requests:
+            srv.submit(q)
+        t0 = time.perf_counter()
+        srv.run()
+        dt = time.perf_counter() - t0
+        return srv.summary()["queries"] / dt
+
+    run_stream()                                  # warm (jit, caches)
+    was_enabled = obs.enabled()
+    obs.disable()
+    qps_off = max(run_stream() for _ in range(reps))
+    obs.enable(clear=True)
+    qps_on = max(run_stream() for _ in range(reps))
+    events = len(obs.get_tracer().snapshot_events())
+    if not was_enabled:
+        obs.disable()
+    ratio = qps_on / qps_off if qps_off else 0.0
+
+    rows = [
+        dict(bench="obs_overhead", tracing="off", scenario=scenario,
+             n=n, requests=n_requests, queries_per_s=round(qps_off, 1)),
+        dict(bench="obs_overhead", tracing="on", scenario=scenario,
+             n=n, requests=n_requests, queries_per_s=round(qps_on, 1),
+             span_events=events, ratio_vs_off=round(ratio, 4)),
+    ]
+    return rows, ratio

@@ -63,6 +63,21 @@ def _print_csv(rows) -> str:
     return out.getvalue()
 
 
+def _stamp(payload: dict) -> dict:
+    """Provenance + metrics block shared by every BENCH_* artifact:
+    ``meta`` (jax/device/git provenance -- what makes a perf row
+    comparable across runs) and, when any instrument recorded,
+    ``metrics`` (the process-wide registry snapshot: recompile
+    counters, kernel dispatch/occupancy, halo census)."""
+    from repro.obs import bench_meta, registry
+
+    payload["meta"] = bench_meta()
+    snap = registry().snapshot()
+    if snap:
+        payload["metrics"] = snap
+    return payload
+
+
 def _write_bench3(path: str, rows) -> bool:
     """Dump the serve rows + verdict as BENCH_3.json.
 
@@ -80,7 +95,7 @@ def _write_bench3(path: str, rows) -> bool:
         "checks": {"predict_10x_faster_than_refit_per_batch": verdict},
     }
     with open(path, "w") as f:
-        json.dump(payload, f, indent=2)
+        json.dump(_stamp(payload), f, indent=2)
         f.write("\n")
     print(f"wrote {path} ({len(rows)} rows)")
     return verdict
@@ -104,7 +119,7 @@ def _write_bench5(path: str, rows) -> bool:
         "checks": {"churn_step_10x_faster_than_refit_per_batch": verdict},
     }
     with open(path, "w") as f:
-        json.dump(payload, f, indent=2)
+        json.dump(_stamp(payload), f, indent=2)
         f.write("\n")
     print(f"wrote {path} ({len(rows)} rows)")
     return verdict
@@ -131,7 +146,7 @@ def _write_bench6(path: str, rows) -> bool:
                    "device_bitwise_equal_host": exact},
     }
     with open(path, "w") as f:
-        json.dump(payload, f, indent=2)
+        json.dump(_stamp(payload), f, indent=2)
         f.write("\n")
     print(f"wrote {path} ({len(rows)} rows)")
     return ge_host and exact
@@ -158,7 +173,56 @@ def _write_bench4(path: str, rows) -> bool:
         },
     }
     with open(path, "w") as f:
-        json.dump(payload, f, indent=2)
+        json.dump(_stamp(payload), f, indent=2)
+        f.write("\n")
+    print(f"wrote {path} ({len(rows)} rows)")
+    return verdict
+
+
+def _write_bench7(path: str, rows) -> bool:
+    """Dump the traced-distributed-fit rows + verdict as BENCH_7.json.
+
+    Verdict: the per-stage span totals of every traced fit (pack /
+    transfer / halo exchange / local cluster / reconcile / unpack,
+    with the recompile + padding-waste counters riding along in the
+    rows and the ``metrics`` block) account for >= 90% of the
+    ``dist.fit`` wall-clock -- the attribution quality bar for the
+    ROADMAP item 2 (20x distributed-fit gap) investigation."""
+    import jax
+
+    traced = [r for r in rows if r.get("bench") == "traced_fit"]
+    verdict = bool(traced) and all(
+        r["coverage"] >= 0.9 for r in traced)
+    payload = {
+        "bench": "BENCH_7",
+        "backend": jax.default_backend(),
+        "devices": jax.device_count(),
+        "rows": rows,
+        "checks": {"stage_spans_cover_90pct_of_fit_wall": verdict},
+    }
+    with open(path, "w") as f:
+        json.dump(_stamp(payload), f, indent=2)
+        f.write("\n")
+    print(f"wrote {path} ({len(rows)} rows)")
+    return verdict
+
+
+def _write_bench_obs(path: str, rows, ratio: float) -> bool:
+    """Dump the tracing-overhead rows + verdict as BENCH_OBS.json.
+
+    Verdict: tracing-enabled serve throughput >= 0.9x tracing-off on
+    the same stream (the obs overhead budget)."""
+    import jax
+
+    verdict = ratio >= 0.9
+    payload = {
+        "bench": "BENCH_OBS",
+        "backend": jax.default_backend(),
+        "rows": rows,
+        "checks": {"tracing_on_ge_090x_tracing_off_throughput": verdict},
+    }
+    with open(path, "w") as f:
+        json.dump(_stamp(payload), f, indent=2)
         f.write("\n")
     print(f"wrote {path} ({len(rows)} rows)")
     return verdict
@@ -188,7 +252,7 @@ def _write_bench2(path: str, rows, smoke: bool) -> bool:
         "checks": {"kernelized_beats_naive_on_largest_blobs": verdict},
     }
     with open(path, "w") as f:
-        json.dump(payload, f, indent=2)
+        json.dump(_stamp(payload), f, indent=2)
         f.write("\n")
     print(f"wrote {path} ({len(kv)} rows)")
     return bool(verdict)
@@ -233,6 +297,15 @@ def main() -> int:
     ap.add_argument("--dist-shards", type=int, default=4,
                     help="host devices to force for --distributed when "
                          "the platform has only one")
+    ap.add_argument("--trace-n", type=int, default=None,
+                    help="fit-set size for the traced-fit attribution "
+                         "half of --distributed (default: --dist-n)")
+    ap.add_argument("--obs-overhead", action="store_true",
+                    help="tracing-overhead gate only (serve throughput "
+                         "with tracing on vs off, BENCH_3-shaped "
+                         "stream); writes BENCH_OBS.json")
+    ap.add_argument("--obs-overhead-n", type=int, default=20_000,
+                    help="fit-set size for --obs-overhead")
     ap.add_argument("--out", default=None)
     ap.add_argument("--json-out", default=None,
                     help="where to write the JSON artifact (default "
@@ -267,6 +340,23 @@ def main() -> int:
         print(f"[{'PASS' if ok else 'FAIL'}] sharded predict >= 10x "
               f"faster than a distributed refit per query batch "
               f"(n={args.dist_n})")
+        # traced-fit attribution (BENCH_7): same mesh, obs tracing on
+        trows = DS.bench_traced_fit(n=args.trace_n or args.dist_n)
+        _print_csv(trows)
+        ok7 = _write_bench7("BENCH_7.json", trows)
+        print(f"[{'PASS' if ok7 else 'FAIL'}] traced fit stage spans "
+              f"cover >= 90% of the dist.fit wall-clock")
+        return 0 if (ok and ok7) else 1
+
+    if args.obs_overhead:
+        from benchmarks import obs_bench as OB
+        rows, ratio = OB.bench_obs_overhead(n=args.obs_overhead_n)
+        _print_csv(rows)
+        ok = _write_bench_obs(
+            args.json_out if args.json_out != "BENCH_2.json"
+            else "BENCH_OBS.json", rows, ratio)
+        print(f"[{'PASS' if ok else 'FAIL'}] tracing-enabled serve "
+              f"throughput >= 0.9x tracing-off (ratio {ratio:.3f})")
         return 0 if ok else 1
 
     if args.serve_device:

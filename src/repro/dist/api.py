@@ -20,10 +20,13 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro import obs
 from repro.core.device_dbscan import OverflowReport
 
+from .halo import halo_census
 from .sharding import pack_slabs, slab_cuts, unshard_by_perm
-from .step import ClusterCaps, cached_cluster_step
+from .step import (ClusterCaps, cached_cluster_step,
+                   cached_staged_cluster_steps)
 
 
 @dataclasses.dataclass
@@ -44,44 +47,104 @@ class DistributedFitResult:
     report: OverflowReport   # per-cap flags OR-ed over shards
 
 
+def _census_metrics(pts_sh, valid_sh, eps, caps, n_shards, cap) -> None:
+    """Padding-waste counters of one traced fit: how much of the halo
+    exchange and of the packed slab slots carries real points."""
+    reg = obs.registry()
+    reg.counter("dist.fit.count").inc()
+    sel, slots = halo_census(pts_sh, valid_sh, eps, caps.halo_cap)
+    reg.counter("dist.halo.points_selected").inc(sel)
+    reg.counter("dist.halo.buffer_slots").inc(slots)
+    reg.gauge("dist.halo.padding_waste").set(
+        1.0 - sel / slots if slots else 0.0)
+    valid_total = int(np.sum(valid_sh))
+    reg.counter("dist.pack.points").inc(valid_total)
+    reg.counter("dist.pack.slots").inc(n_shards * cap)
+    reg.gauge("dist.pack.padding_waste").set(
+        1.0 - valid_total / (n_shards * cap) if cap else 0.0)
+
+
 def distributed_fit(points: np.ndarray, eps: float, min_pts: int,
                     mesh: Mesh, caps: Optional[ClusterCaps] = None,
-                    pad_to: Optional[int] = None) -> DistributedFitResult:
+                    pad_to: Optional[int] = None,
+                    traced: Optional[bool] = None) -> DistributedFitResult:
     """Pre-shard, run the SPMD cluster step, unpermute (vectorized).
 
     The report is truthy iff any static cap overflowed on any shard; a
     truthy report means every array is a truncated artifact and must
     not be trusted (the adaptive driver in ``repro.engine`` grows the
     caps and retries before letting that escape).
+
+    ``traced`` (default: ``repro.obs`` tracing state) selects the
+    *staged* SPMD step -- halo exchange / local cluster / reconcile as
+    three dispatches with a span sync at each boundary -- so the trace
+    attributes the fit's wall-clock per stage.  Staged and fused
+    produce identical results; fused stays the untraced default
+    because it saves two dispatch round-trips.
     """
+    if traced is None:
+        traced = obs.enabled()
     caps = caps or ClusterCaps()
     pts = np.asarray(points, np.float64)
     n = pts.shape[0]
     axes = tuple(mesh.axis_names)
     n_shards = int(np.prod([mesh.shape[a] for a in axes]))
-    order, cut_idx, cut_coords = slab_cuts(pts, eps, n_shards)
-    pts_sh, valid_sh, perm = pack_slabs(pts, order, cut_idx,
-                                        pad_to=pad_to)
-    cap = pts_sh.shape[1]
-    step = cached_cluster_step(mesh, eps, min_pts, caps, cap,
-                               pts.shape[1])
-    flat_pts = jnp.asarray(pts_sh.reshape(n_shards * cap, -1))
-    flat_valid = jnp.asarray(valid_sh.reshape(-1))
-    sharding = NamedSharding(mesh, P(axes))
-    flat_pts = jax.device_put(flat_pts, NamedSharding(mesh, P(axes, None)))
-    flat_valid = jax.device_put(flat_valid, sharding)
-    labels, core, point_grid, report = step(flat_pts, flat_valid)
+    with obs.span("dist.fit", n=n, shards=n_shards, staged=traced):
+        with obs.span("dist.fit.pack"):
+            order, cut_idx, cut_coords = slab_cuts(pts, eps, n_shards)
+            pts_sh, valid_sh, perm = pack_slabs(pts, order, cut_idx,
+                                                pad_to=pad_to)
+        cap = pts_sh.shape[1]
+        if traced:
+            _census_metrics(pts_sh, valid_sh, eps, caps, n_shards, cap)
+        with obs.span("dist.fit.transfer") as sp:
+            flat_pts = jnp.asarray(pts_sh.reshape(n_shards * cap, -1))
+            flat_valid = jnp.asarray(valid_sh.reshape(-1))
+            sharding = NamedSharding(mesh, P(axes))
+            flat_pts = jax.device_put(
+                flat_pts, NamedSharding(mesh, P(axes, None)))
+            flat_valid = jax.device_put(flat_valid, sharding)
+            sp.sync(flat_pts, flat_valid)
 
-    labels = unshard_by_perm(np.asarray(labels), perm, n).astype(np.int64)
-    core = unshard_by_perm(np.asarray(core), perm, n, fill=False)
-    point_grid = unshard_by_perm(np.asarray(point_grid), perm, n)
-    shard_row = np.repeat(np.arange(n_shards, dtype=np.int64)[:, None],
-                          cap, axis=1)
-    shard_of = unshard_by_perm(shard_row, perm, n)
+        if traced:
+            halo_fn, local_fn, reconcile_fn = cached_staged_cluster_steps(
+                mesh, eps, min_pts, caps, cap, pts.shape[1])
+            with obs.span("dist.fit.halo_exchange") as sp:
+                gl, gr, lo_idx, hi_idx, hov = halo_fn(flat_pts,
+                                                      flat_valid)
+                sp.sync(gl, gr, lo_idx, hi_idx, hov)
+            with obs.span("dist.fit.local_cluster") as sp:
+                (labels, core, point_grid, gl_lab, gl_core, gr_lab,
+                 gr_core, flags) = local_fn(flat_pts, flat_valid, gl, gr)
+                sp.sync(labels, core, point_grid, flags)
+            with obs.span("dist.fit.reconcile") as sp:
+                labels = reconcile_fn(labels, core, gl_lab, gl_core,
+                                      gr_lab, gr_core, lo_idx, hi_idx)
+                sp.sync(labels)
+            vec = np.asarray(jax.device_get(flags), bool).any(axis=0)
+            vec[OverflowReport.FIELDS.index("halo")] |= bool(
+                np.asarray(jax.device_get(hov), bool).any())
+            report = OverflowReport.from_vector(vec)
+        else:
+            step = cached_cluster_step(mesh, eps, min_pts, caps, cap,
+                                       pts.shape[1])
+            with obs.span("dist.fit.spmd_step") as sp:
+                labels, core, point_grid, report = step(flat_pts,
+                                                        flat_valid)
+                sp.sync(labels, core, point_grid)
+            report = jax.device_get(report)
+
+        with obs.span("dist.fit.unpack"):
+            labels = unshard_by_perm(np.asarray(labels), perm,
+                                     n).astype(np.int64)
+            core = unshard_by_perm(np.asarray(core), perm, n, fill=False)
+            point_grid = unshard_by_perm(np.asarray(point_grid), perm, n)
+            shard_row = np.repeat(
+                np.arange(n_shards, dtype=np.int64)[:, None], cap, axis=1)
+            shard_of = unshard_by_perm(shard_row, perm, n)
     return DistributedFitResult(labels=labels, core=core,
                                 point_grid=point_grid, shard_of=shard_of,
-                                cut_coords=cut_coords,
-                                report=jax.device_get(report))
+                                cut_coords=cut_coords, report=report)
 
 
 def distributed_dbscan(points: np.ndarray, eps: float, min_pts: int,

@@ -13,6 +13,9 @@ silently truncated (the adaptive driver grows the cap and retries).
 
 from __future__ import annotations
 
+from typing import Tuple
+
+import numpy as np
 import jax.numpy as jnp
 
 from repro.core.device_dbscan import PAD_COORD
@@ -54,3 +57,30 @@ def halo_buffer(pts, valid, eps, side: str, cap: int):
     idx = jnp.where(sel, order, -1)
     overflow = jnp.sum(near) > cap
     return buf.astype(jnp.float32), idx.astype(jnp.int32), overflow
+
+
+def halo_census(pts_sh: np.ndarray, valid_sh: np.ndarray, eps: float,
+                cap: int) -> Tuple[int, int]:
+    """Host-side mirror of :func:`halo_buffer`'s selection predicate,
+    summed over all shards and both sides.
+
+    Returns ``(points_selected, buffer_slots)`` where ``buffer_slots =
+    2 * n_shards * cap`` -- the fraction not selected is the halo
+    exchange's padding waste, one of the traced distributed fit's
+    attribution metrics (``repro.obs``).  Pure numpy on the pre-packed
+    slabs; never dispatches to the device.
+    """
+    pts_sh = np.asarray(pts_sh)
+    valid_sh = np.asarray(valid_sh, bool)
+    n_shards = pts_sh.shape[0]
+    selected = 0
+    for s in range(n_shards):
+        v = valid_sh[s]
+        if not v.any():
+            continue
+        x0 = pts_sh[s, :, 0]
+        xv = x0[v]
+        lo, hi = float(xv.min()), float(xv.max())
+        selected += int(np.sum(v & (x0 <= lo + 2 * eps)))
+        selected += int(np.sum(v & (x0 >= hi - 2 * eps)))
+    return selected, 2 * n_shards * cap

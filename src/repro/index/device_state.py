@@ -59,6 +59,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+from repro import obs
 from repro.core.grids import group_rows
 from repro.engine.adaptive import ResidentCaps, _pow2_at_least
 from repro.kernels import ops as kernel_ops
@@ -155,6 +156,7 @@ def _d2_flat_res(ds, ra: np.ndarray, rb: np.ndarray, gg: np.ndarray,
     ``np.asarray`` and slices ``[:len(ra)]``."""
     T = len(ra)
     tcap = _pow2_at_least(T, lo=8)
+    obs.note_flat_dispatch("res", T, tcap)
     ra_p = np.empty(tcap, np.int32)       # tail-fill only: the pads
     ra_p[:T] = ra                         # alias row 0 / anchor 0 and
     ra_p[T:] = 0                          # their distances are sliced
@@ -249,6 +251,7 @@ class DeviceState:
         self.alive_res = jnp.asarray(alive)
         self.core_res = jnp.asarray(core)
         self.uploads += 1
+        obs.counter("device_state.uploads.rows").inc()
 
     def refresh_small(self, index) -> None:
         """Re-ship the CSR / merge-edge mirrors (cheap, per mutation)."""
@@ -273,6 +276,7 @@ class DeviceState:
         self.merge_edges_res = jnp.asarray(edges)
         self.n_edges = e
         self.uploads += 1
+        obs.counter("device_state.uploads.small").inc()
 
     def mark_dead(self, rows: np.ndarray) -> None:
         """Donated tombstone scatter (delete stage 1)."""
@@ -282,6 +286,7 @@ class DeviceState:
         self.alive_res, self.core_res = _scatter_dead(
             self.alive_res, self.core_res, idx)
         self.donations += 1
+        obs.counter("device_state.donations").inc()
 
     def flip_core(self, rows: np.ndarray, value: bool) -> None:
         """Donated core-flag scatter (core recompute flips)."""
@@ -290,6 +295,7 @@ class DeviceState:
         idx = _pad_pow2(rows, self.caps.row_cap)
         self.core_res = _scatter_core(self.core_res, idx, value=value)
         self.donations += 1
+        obs.counter("device_state.donations").inc()
 
     # -- differential pinning ---------------------------------------------
 
@@ -395,6 +401,7 @@ def predict_device_async(index, ds, q: np.ndarray,
     # anchors host-gathered per element: jit key = (tcap, mcap) only
     av_p = np.zeros((tcap, index.d), np.float32)
     av_p[:T] = np.repeat(anch32[group_of], csz, axis=0)
+    obs.note_flat_dispatch("predict", T, tcap)
     d2dev = kernel_ops.pairwise_d2_flat(
         ds.points_res, jnp.asarray(qa_p), jnp.asarray(rr_p),
         jnp.asarray(qo_p), jnp.asarray(av_p))

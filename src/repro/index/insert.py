@@ -11,6 +11,15 @@ merge graph -> border reconciliation).  Import from
 name importable (same pattern as ``repro.core.distributed``).
 """
 
+import warnings
+
 from repro.index.delta import insert_batch  # noqa: F401
+
+warnings.warn(
+    "repro.index.insert is deprecated; import insert_batch from "
+    "repro.index.delta (the unified mutation plane) instead.",
+    DeprecationWarning,
+    stacklevel=2,
+)
 
 __all__ = ["insert_batch"]

@@ -50,6 +50,8 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from repro import obs
+
 from . import ref
 from .pairwise import (eps_count_pallas, row_min_pallas,
                        eps_count_batch_pallas, row_min_batch_pallas,
@@ -477,6 +479,7 @@ def pairwise_d2_flat(points_res, qa, rr, qo, av):
     caller).  Pure jnp (gather + map): XLA-native on every backend, so
     there is no pallas/interpret variant.
     """
+    obs.counter("kernels.dispatch.pairwise_d2_flat").inc()
     return _pairwise_d2_flat_jit(points_res, qa, rr, qo, av)
 
 
@@ -500,6 +503,7 @@ def pairwise_d2_flat_res(points_res, ra, rb, av):
     core-recount / merge-decide / border stages, where every operand
     already lives in the resident buffer.
     """
+    obs.counter("kernels.dispatch.pairwise_d2_flat_res").inc()
     return _pairwise_d2_flat_res_jit(points_res, ra, rb, av)
 
 

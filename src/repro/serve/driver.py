@@ -54,7 +54,9 @@ from typing import Any, Deque, Dict, List, Optional
 
 import numpy as np
 
+from repro import obs
 from repro.engine.adaptive import _pow2_at_least
+from repro.obs.metrics import MetricsRegistry
 
 
 @dataclasses.dataclass
@@ -71,6 +73,7 @@ class ClusterRequest:
     ids: Optional[np.ndarray] = None      # delete requests: arrival ids
     labels: Optional[np.ndarray] = None   # [m] int64 once served
     result: Optional[Dict[str, Any]] = None   # mutation stats once applied
+    t_admit: float = 0.0                  # popped from the queue
     t_done: float = 0.0
 
     @property
@@ -92,6 +95,10 @@ class ClusterServer:
         self.growth_events: List[Dict[str, Any]] = []
         self.step_log: List[Dict[str, Any]] = []
         self.rejected_ids: List[np.ndarray] = []   # delete telemetry
+        # per-server books (a process may run many servers; the shared
+        # default registry keeps only cross-cutting counters) -- the
+        # summary() aggregates are a view over these instruments
+        self.metrics = MetricsRegistry()
         self._next_rid = 0
         # double-buffered admission: the batch packed while the previous
         # step's kernels were executing (device path), served next step
@@ -163,8 +170,11 @@ class ClusterServer:
         ``query_cap`` growth included) -- the host-packing half of a
         step, so it can run while the previous step's kernels execute."""
         active: List[ClusterRequest] = []
+        now = time.perf_counter()
         while self.pending and len(active) < self.slots:
-            active.append(self.pending.popleft())
+            req = self.pending.popleft()
+            req.t_admit = now
+            active.append(req)
         need = max((len(r.points) for r in active
                     if r.kind == "predict"), default=0)
         if need > self.query_cap:
@@ -198,61 +208,87 @@ class ClusterServer:
             return []
         predicts = [r for r in active if r.kind == "predict"]
 
+        reg = self.metrics
         t0 = time.perf_counter()
-        inserted = deleted = rejected = 0
-        kernel_s = pack_s = 0.0
-        for r in active:
-            if r.kind == "insert":
-                r.result = self.index.insert(r.points)
-                inserted += r.result["inserted"]
-            elif r.kind == "delete":
-                r.result = self.index.delete(r.ids)
-                deleted += r.result["deleted"]
-                if r.result["rejected"]:
-                    rejected += r.result["rejected"]
-                    self.rejected_ids.append(r.result["rejected_ids"])
-            if r.result is not None:
-                kernel_s += r.result.get("t_kernel", 0.0)
-                pack_s += r.result.get("t_pack", 0.0)
-        pstats: Dict[str, Any] = {}
-        flat = (np.concatenate([r.points for r in predicts])
-                if predicts else np.zeros((0, self.index.d)))
-        dispatch = getattr(self.index, "predict_async", None)
-        if len(flat) == 0:
-            resolve = lambda: np.empty(0, np.int64)
-        elif dispatch is not None:
-            resolve = dispatch(flat, mode=self.mode, stats=pstats)
-        else:
-            out = self.index.predict(flat, mode=self.mode, stats=pstats)
-            resolve = lambda: out
-        # admit the next step's batch while the dispatched work runs
-        staged = self._admit()
-        self._staged = staged if staged else None
-        flat_labels = resolve()
-        kernel_s += pstats.get("t_kernel", 0.0)
-        pack_s += pstats.get("t_pack", 0.0)
-        t_step = time.perf_counter() - t0
-        if pstats.get("caps_grew"):
-            self.growth_events.append(
-                {"step": len(self.step_log), "cap": "predict_caps",
-                 "now": pstats.get("caps")})
+        with obs.span("serve.step", requests=len(active)):
+            inserted = deleted = rejected = 0
+            kernel_s = pack_s = 0.0
+            with obs.span("serve.step.mutate"):
+                for r in active:
+                    if r.kind == "insert":
+                        r.result = self.index.insert(r.points)
+                        inserted += r.result["inserted"]
+                    elif r.kind == "delete":
+                        r.result = self.index.delete(r.ids)
+                        deleted += r.result["deleted"]
+                        if r.result["rejected"]:
+                            rejected += r.result["rejected"]
+                            self.rejected_ids.append(
+                                r.result["rejected_ids"])
+                    if r.result is not None:
+                        kernel_s += r.result.get("t_kernel", 0.0)
+                        pack_s += r.result.get("t_pack", 0.0)
+            pstats: Dict[str, Any] = {}
+            flat = (np.concatenate([r.points for r in predicts])
+                    if predicts else np.zeros((0, self.index.d)))
+            dispatch = getattr(self.index, "predict_async", None)
+            # queue wait: admission (queue pop) -> this batch's dispatch
+            t_disp = time.perf_counter()
+            qw_ms = [(t_disp - r.t_admit) * 1e3 for r in active]
+            for w in qw_ms:
+                reg.histogram("serve.queue_wait_ms").observe(w)
+            with obs.span("serve.step.dispatch", queries=len(flat)):
+                if len(flat) == 0:
+                    resolve = lambda: np.empty(0, np.int64)
+                elif dispatch is not None:
+                    resolve = dispatch(flat, mode=self.mode, stats=pstats)
+                else:
+                    out = self.index.predict(flat, mode=self.mode,
+                                             stats=pstats)
+                    resolve = lambda: out
+            # admit the next step's batch while the dispatched work runs
+            with obs.span("serve.step.admit_next"):
+                staged = self._admit()
+                self._staged = staged if staged else None
+            with obs.span("serve.step.resolve"):
+                flat_labels = resolve()
+            kernel_s += pstats.get("t_kernel", 0.0)
+            pack_s += pstats.get("t_pack", 0.0)
+            t_step = time.perf_counter() - t0
+            if pstats.get("caps_grew"):
+                self.growth_events.append(
+                    {"step": len(self.step_log), "cap": "predict_caps",
+                     "now": pstats.get("caps")})
 
-        off = 0
-        now = time.perf_counter()
-        for r in active:
-            if r.kind == "predict":
-                m = len(r.points)
-                r.labels = flat_labels[off:off + m]
-                off += m
-            r.t_done = now
-            self.done.append(r)
-        self.step_log.append(
-            {"requests": len(active), "queries": len(flat),
-             "slot_fill": len(flat) / (self.slots * self.query_cap),
-             "inserted": inserted, "deleted": deleted,
-             "rejected": rejected,
-             "seconds": t_step, "kernel_s": kernel_s, "pack_s": pack_s,
-             "predict": pstats})
+            off = 0
+            now = time.perf_counter()
+            for r in active:
+                if r.kind == "predict":
+                    m = len(r.points)
+                    r.labels = flat_labels[off:off + m]
+                    off += m
+                r.t_done = now
+                self.done.append(r)
+                reg.histogram("serve.latency_ms").observe(r.latency_ms)
+            slot_fill = len(flat) / (self.slots * self.query_cap)
+            reg.counter("serve.steps").inc()
+            reg.counter("serve.requests").inc(len(active))
+            reg.counter("serve.queries").inc(len(flat))
+            reg.counter("serve.inserted").inc(inserted)
+            reg.counter("serve.deleted").inc(deleted)
+            reg.counter("serve.rejected").inc(rejected)
+            reg.histogram("serve.slot_fill").observe(slot_fill)
+            reg.histogram("serve.step_seconds").observe(t_step)
+            reg.histogram("serve.kernel_seconds").observe(kernel_s)
+            reg.histogram("serve.pack_seconds").observe(pack_s)
+            self.step_log.append(
+                {"requests": len(active), "queries": len(flat),
+                 "slot_fill": slot_fill,
+                 "inserted": inserted, "deleted": deleted,
+                 "rejected": rejected,
+                 "queue_wait_ms": float(np.mean(qw_ms)),
+                 "seconds": t_step, "kernel_s": kernel_s,
+                 "pack_s": pack_s, "predict": pstats})
         return active
 
     def run(self) -> List[ClusterRequest]:
@@ -266,26 +302,37 @@ class ClusterServer:
     # ------------------------------------------------------------------
 
     def summary(self) -> Dict[str, Any]:
-        lat = np.asarray([r.latency_ms for r in self.done], np.float64)
-        served_s = sum(s["seconds"] for s in self.step_log)
-        queries = sum(s["queries"] for s in self.step_log)
+        """Aggregate serving stats: a thin view over the per-server
+        metrics registry (``self.metrics``) -- every number here is
+        read back from the instruments ``step()`` feeds, so the same
+        figures flow to trace exports (``repro.obs``) unchanged.  The
+        registry's exact-percentile histograms reproduce the
+        ``np.percentile`` values this summary historically computed
+        from the request list."""
+        reg = self.metrics
+        lat = reg.histogram("serve.latency_ms")
+        qw = reg.histogram("serve.queue_wait_ms")
+        served_s = reg.histogram("serve.step_seconds").total
+        queries = reg.counter("serve.queries").value
         rejected = (np.concatenate(self.rejected_ids)
                     if self.rejected_ids else np.empty(0, np.int64))
         return {
             "requests": len(self.done),
             "queries": queries,
-            "inserted": sum(s["inserted"] for s in self.step_log),
-            "deleted": sum(s["deleted"] for s in self.step_log),
+            "inserted": reg.counter("serve.inserted").value,
+            "deleted": reg.counter("serve.deleted").value,
             "rejected": int(len(rejected)),
             "rejected_ids": rejected,
             "steps": len(self.step_log),
-            "latency_ms_p50": float(np.percentile(lat, 50)) if len(lat) else 0.0,
-            "latency_ms_p95": float(np.percentile(lat, 95)) if len(lat) else 0.0,
-            "latency_ms_mean": float(lat.mean()) if len(lat) else 0.0,
+            "latency_ms_p50": lat.percentile(50),
+            "latency_ms_p95": lat.percentile(95),
+            "latency_ms_p99": lat.percentile(99),
+            "latency_ms_mean": lat.mean,
+            "queue_wait_ms_p50": qw.percentile(50),
+            "queue_wait_ms_p95": qw.percentile(95),
+            "queue_wait_ms_mean": qw.mean,
             "queries_per_s": queries / served_s if served_s else 0.0,
-            "mean_slot_fill": float(np.mean(
-                [s["slot_fill"] for s in self.step_log])) if self.step_log
-            else 0.0,
+            "mean_slot_fill": reg.histogram("serve.slot_fill").mean,
             "query_cap": self.query_cap,
             "growth_events": list(self.growth_events),
         }
@@ -375,6 +422,8 @@ def main() -> None:
               f"rejected {s['rejected_ids'][:4].tolist()}...")
     print(f"  latency p50 {s['latency_ms_p50']:.2f}ms  "
           f"p95 {s['latency_ms_p95']:.2f}ms  "
+          f"p99 {s['latency_ms_p99']:.2f}ms  "
+          f"queue wait p50 {s['queue_wait_ms_p50']:.2f}ms  "
           f"slot fill {s['mean_slot_fill']:.2f}  "
           f"cap growth events: {len(s['growth_events'])}")
     noise = sum(int((r.labels < 0).sum()) for r in srv.done

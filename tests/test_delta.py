@@ -472,10 +472,19 @@ def test_unified_mutation_stats_schema():
 
 
 def test_insert_batch_compat_shim():
-    """`insert_batch` stays importable from its pre-refactor home."""
-    from repro.index.insert import insert_batch as shim
+    """`insert_batch` stays importable from its pre-refactor home, now
+    behind a DeprecationWarning pointing at the unified mutation
+    plane."""
+    import importlib
+    import sys
+
+    sys.modules.pop("repro.index.insert", None)
+    with pytest.warns(DeprecationWarning, match=r"repro\.index\.delta"):
+        shim_mod = importlib.import_module("repro.index.insert")
+    shim = shim_mod.insert_batch
     from repro.index.delta import insert_batch as real
     assert shim is real
+    assert shim_mod.__all__ == ["insert_batch"]
     rng = np.random.default_rng(37)
     idx = _fit_index(rng.uniform(0, 40, size=(50, 2)), 4.0, 4)
     st = shim(idx, rng.uniform(0, 40, size=(5, 2)))
