@@ -206,3 +206,82 @@ def bench_traced_fit(n: int = 50_000, scenario: str = "blobs-2d",
                           root="dist.fit"))
     obs.disable()
     return rows
+
+
+def bench_dist_vs_host(n: int = 50_000, scenario: str = "blobs-2d",
+                       reps: int = 5, seed: int = 0) -> List[Dict]:
+    """Distributed fit vs host grit fit at equal total n (BENCH_8).
+
+    ROADMAP item 2's wall-clock gate: after the occupancy-packed
+    dispatch + census-sized halo work, a warm distributed fit on a
+    forced multi-device mesh must come in at or under the *host* grit
+    fit on the same points -- i.e. the SPMD plane pays for itself even
+    when every "device" timeshares one CPU.  Both sides are measured
+    as the min over ``reps`` warm repetitions (the box is noisy; min
+    is the stable statistic).  A traced warm fit rides along to carry
+    the BENCH_7-style coverage and the ``dist.halo.padding_waste``
+    gauge (worst-boundary-side census vs halo_cap -- the <= 25%
+    over-provisioning bound of the quarter-pow2 cap ladder).
+    """
+    import jax
+    from repro import obs
+    from repro.obs import view as obs_view
+    from repro.data.scenarios import get_scenario
+    from repro.engine import cluster
+
+    mesh = jax.make_mesh((jax.device_count(),), ("shard",))
+    n_shards = int(mesh.devices.size)
+    sc = get_scenario(scenario)
+    eps = sc.eps * (sc.n / n) ** (1.0 / sc.d)   # occupancy-preserving
+    pts = sc.points(n=n)
+    rows: List[Dict] = []
+
+    def timed(fn):
+        t0 = time.perf_counter()
+        fn()
+        return time.perf_counter() - t0
+
+    # host baseline: dynamic-shape host pipeline, warm = min over reps
+    # (first call includes one-off jit of the small device helpers)
+    cluster(pts, eps, sc.min_pts, engine="grit")
+    host_s = min(timed(lambda: cluster(pts, eps, sc.min_pts,
+                                       engine="grit"))
+                 for _ in range(reps))
+    rows.append(dict(bench="dist_vs_host", op="host_grit_fit",
+                     scenario=scenario, n=n, d=sc.d, n_shards=1,
+                     wall_s=round(host_s, 4)))
+
+    # distributed: cold (compiles + caps estimation), then warm reps
+    cold_s = timed(lambda: cluster(pts, eps, sc.min_pts,
+                                   engine="distributed", mesh=mesh))
+    dist_s = min(timed(lambda: cluster(pts, eps, sc.min_pts,
+                                       engine="distributed", mesh=mesh))
+                 for _ in range(reps))
+    ratio = dist_s / host_s if host_s else float("inf")
+    rows.append(dict(bench="dist_vs_host", op="dist_fit_cold",
+                     scenario=scenario, n=n, d=sc.d, n_shards=n_shards,
+                     wall_s=round(cold_s, 4)))
+    rows.append(dict(bench="dist_vs_host", op="dist_fit_warm",
+                     scenario=scenario, n=n, d=sc.d, n_shards=n_shards,
+                     wall_s=round(dist_s, 4),
+                     dist_over_host=round(ratio, 4)))
+
+    # traced warm fit: coverage + halo padding-waste ride-alongs
+    obs.enable(clear=True)
+    reg = obs.registry()
+    traced_s = timed(lambda: cluster(pts, eps, sc.min_pts,
+                                     engine="distributed", mesh=mesh))
+    att = obs_view.attribution(obs.get_tracer().snapshot_events(),
+                               root="dist.fit")
+    snap = reg.snapshot()
+    obs.disable()
+    rows.append(dict(
+        bench="dist_vs_host", op="dist_fit_traced",
+        scenario=scenario, n=n, d=sc.d, n_shards=n_shards,
+        wall_s=round(traced_s, 4),
+        coverage=round(att["coverage"], 4),
+        halo_padding_waste=round(
+            snap.get("dist.halo.padding_waste", {}).get("value", 0.0), 4),
+        halo_fill=round(
+            snap.get("dist.halo.fill", {}).get("value", 0.0), 4)))
+    return rows

@@ -39,7 +39,11 @@ per query batch, on a mesh over every visible device) and writes
 ``BENCH_4.json``; the >= 10x sharded-predict-vs-distributed-refit
 check gates the run.  On single-device hosts it forces a 4-way host
 mesh via XLA_FLAGS (set before jax is first imported, which is why the
-flag must be handled before any benchmark module loads).
+flag must be handled before any benchmark module loads).  The same
+invocation then writes ``BENCH_7.json`` (traced-fit stage attribution,
+coverage >= 90%) and ``BENCH_8.json`` (warm distributed fit <= host
+grit fit at equal total n, with the halo padding-waste <= 25% and
+coverage checks riding along -- ROADMAP item 2's wall-clock gate).
 """
 
 from __future__ import annotations
@@ -207,6 +211,44 @@ def _write_bench7(path: str, rows) -> bool:
     return verdict
 
 
+def _write_bench8(path: str, rows) -> bool:
+    """Dump the dist-vs-host fit rows + verdict as BENCH_8.json.
+
+    Verdict (ROADMAP item 2's wall-clock gate, all three together):
+
+    * warm distributed fit <= host grit fit at equal total n on the
+      forced multi-device mesh (occupancy-packed dispatch paying for
+      the SPMD plane's padding + reconcile overhead);
+    * traced-fit stage coverage >= 90% (the BENCH_7 attribution bar
+      stays green on the same artifact);
+    * ``dist.halo.padding_waste`` <= 25% (census-sized halo_cap on the
+      quarter-pow2 ladder; worst boundary side vs cap)."""
+    import jax
+
+    warm = [r for r in rows if r.get("op") == "dist_fit_warm"]
+    traced = [r for r in rows if r.get("op") == "dist_fit_traced"]
+    wall_ok = bool(warm) and all(r["dist_over_host"] <= 1.0 for r in warm)
+    cov_ok = bool(traced) and all(r["coverage"] >= 0.9 for r in traced)
+    halo_ok = bool(traced) and all(
+        r["halo_padding_waste"] <= 0.25 for r in traced)
+    payload = {
+        "bench": "BENCH_8",
+        "backend": jax.default_backend(),
+        "devices": jax.device_count(),
+        "rows": rows,
+        "checks": {
+            "dist_fit_le_host_fit_at_equal_n": wall_ok,
+            "stage_spans_cover_90pct_of_fit_wall": cov_ok,
+            "halo_padding_waste_le_25pct": halo_ok,
+        },
+    }
+    with open(path, "w") as f:
+        json.dump(_stamp(payload), f, indent=2)
+        f.write("\n")
+    print(f"wrote {path} ({len(rows)} rows)")
+    return wall_ok and cov_ok and halo_ok
+
+
 def _write_bench_obs(path: str, rows, ratio: float) -> bool:
     """Dump the tracing-overhead rows + verdict as BENCH_OBS.json.
 
@@ -346,7 +388,15 @@ def main() -> int:
         ok7 = _write_bench7("BENCH_7.json", trows)
         print(f"[{'PASS' if ok7 else 'FAIL'}] traced fit stage spans "
               f"cover >= 90% of the dist.fit wall-clock")
-        return 0 if (ok and ok7) else 1
+        # dist-vs-host wall-clock gate (BENCH_8): same mesh, equal n
+        vrows = DS.bench_dist_vs_host(n=args.dist_n)
+        _print_csv(vrows)
+        ok8 = _write_bench8("BENCH_8.json", vrows)
+        print(f"[{'PASS' if ok8 else 'FAIL'}] warm distributed fit <= "
+              f"host grit fit at n={args.dist_n} "
+              f"({args.dist_shards}-way mesh), coverage >= 90%, halo "
+              f"padding waste <= 25%")
+        return 0 if (ok and ok7 and ok8) else 1
 
     if args.obs_overhead:
         from benchmarks import obs_bench as OB

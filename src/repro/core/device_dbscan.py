@@ -13,6 +13,26 @@ Static caps replace the dynamic data structures of the paper; every cap
 has an ``overflow`` flag so a driver can retry with larger caps (the
 standard static-shape discipline on TPU).
 
+``GritCaps.packed`` (default True) selects *occupancy-packed* dispatch
+for the three cap-proportional stages.  The dense strategy maps
+``core_block`` / ``border_block`` over every ``grid_cap`` slot and the
+merge step over every ``pair_cap`` slot, so work scales with the caps
+even when most slots are dead.  The packed strategy keeps the paper's
+work-proportional claim: live small grids are compacted to a prefix
+sorted by candidate total, and three ``lax.while_loop`` tiers with
+data-dependent trip counts sweep that prefix at pow2 sub-caps
+(``c_cap/4``, ``c_cap/2``, ``c_cap`` -- the flat pow2-bucket discipline
+of ``kernels.ops``), the widest tier doubling as the dense-tail path
+for the few heavy grids; merge blocks run only up to the number of
+valid pairs.  Outputs are bit-identical to the dense path: a grid in a
+tier has candidate total <= the tier width, so no candidate is
+truncated, the per-row distance rows are elementwise the same values,
+and the result scatters (max for core flags, min for border labels)
+are order-independent.  Overflow flags are computed from the global
+per-grid candidate totals, never from what a tier dispatched, so the
+``OverflowReport`` semantics are unchanged (pinned packed-vs-dense by
+``tests/test_packed_dispatch.py``).
+
 ``GritCaps.use_kernels`` selects the distance plane for the two
 distance-heavy stages.  ``False`` (default) materializes the naive
 ``[B, P, C, d]`` broadcast difference tensor -- the in-graph oracle.
@@ -129,6 +149,21 @@ class GritCaps:
     pair_block: int = 512      # chunk over merge pairs
     merge_iters: int = 64      # FastMerging max iterations (paper kappa<=11)
     use_kernels: bool = False  # kernelized distance plane (see module doc)
+    packed: bool = True        # occupancy-packed dispatch (see module doc)
+
+    def __post_init__(self):
+        # the dense maps reshape [grid_cap] -> [-1, grid_block] and
+        # [pair_cap] -> [-1, pair_block]; an indivisible cap used to
+        # crash deep inside the pipeline at pg.reshape -- fail loudly
+        # at construction instead
+        if self.grid_block <= 0 or self.grid_cap % self.grid_block != 0:
+            raise ValueError(
+                f"grid_cap ({self.grid_cap}) must be a positive multiple "
+                f"of grid_block ({self.grid_block})")
+        if self.pair_block <= 0 or self.pair_cap % self.pair_block != 0:
+            raise ValueError(
+                f"pair_cap ({self.pair_cap}) must be a positive multiple "
+                f"of pair_block ({self.pair_block})")
 
     @classmethod
     def for_dim(cls, d: int, **kw) -> "GritCaps":
@@ -156,10 +191,16 @@ class DeviceDBSCANResult:
     num_clusters: jnp.ndarray  # [] int32
     overflow: jnp.ndarray      # [] bool -- any static cap exceeded
     report: OverflowReport     # which cap(s) overflowed
+    dispatch_tiers: jnp.ndarray  # [4] int32 dispatch telemetry: grids
+                               # swept by the three packed occupancy
+                               # tiers (c_cap/4, c_cap/2, c_cap) and, in
+                               # slot 3, the dense-path grid slots (0
+                               # when packed); their sum is the total
+                               # dispatched grid work
 
     def tree_flatten(self):
         return (self.labels, self.core, self.point_grid, self.num_clusters,
-                self.overflow, self.report), None
+                self.overflow, self.report, self.dispatch_tiers), None
 
     @classmethod
     def tree_unflatten(cls, aux, ch):
@@ -212,7 +253,7 @@ def device_dbscan(points: jnp.ndarray, eps, min_pts: int, caps: GritCaps,
     dg = build_grids_device(pts, eps, caps.grid_cap)
     nbr, nbr_off, ovf_frontier, ovf_k = device_neighbor_table(
         dg.ids, dg.num_grids, frontier_cap=caps.frontier_cap,
-        k_cap=caps.k_cap, include_self=False)
+        k_cap=caps.k_cap, include_self=False, packed=caps.packed)
     G = caps.grid_cap
     live = jnp.arange(G, dtype=jnp.int32) < dg.num_grids
     sorted_valid = point_valid[dg.order]
@@ -237,13 +278,29 @@ def device_dbscan(points: jnp.ndarray, eps, min_pts: int, caps: GritCaps,
         for the kernelized distance plane (module docstring)."""
         return spts[jnp.minimum(dg.starts[gsel], n - 1)][:, None, :]
 
-    def core_block(gsel):
-        cand_idx, cand_grid, cand_valid, total = _candidates_for_grids(
-            dg, nbr, gsel, caps.c_cap)
+    # per-grid candidate totals (own + neighbor occupancies): the same
+    # numbers _candidates_for_grids derives per block, computed once for
+    # every grid -- they drive the candidates overflow flag and, under
+    # packed dispatch, the occupancy-tier assignment
+    cg_all = jnp.concatenate(
+        [jnp.arange(G, dtype=jnp.int32)[:, None], nbr], axis=1)
+    total_all = jnp.sum(
+        jnp.where(cg_all >= 0, dg.counts[jnp.maximum(cg_all, 0)], 0),
+        axis=1)                                               # [G]
+    small_all = (~big) & occupied
+    ovf_candidates = jnp.any((total_all > caps.c_cap) & small_all)
+
+    def core_rows(gsel, width, active):
+        """Core test of one grid block at candidate width ``width``:
+        identical values to the full-width pass for any grid whose
+        candidate total fits (no truncation, same candidate prefix
+        order, same distance rows)."""
+        cand_idx, _, cand_valid, _ = _candidates_for_grids(
+            dg, nbr, gsel, width)
         cand_valid = cand_valid & sorted_valid[cand_idx]
         own_slot = jnp.arange(p_cap, dtype=jnp.int32)[None, :]
         own_idx = dg.starts[gsel][:, None] + own_slot
-        small = (~big[gsel]) & occupied[gsel]
+        small = (~big[gsel]) & occupied[gsel] & active
         own_valid = (own_slot < dg.counts[gsel][:, None]) & small[:, None]
         own_idx = jnp.where(own_valid, own_idx, 0)
         a = spts[own_idx]                       # [B, P, d]
@@ -262,15 +319,61 @@ def device_dbscan(points: jnp.ndarray, eps, min_pts: int, caps: GritCaps,
             d2 = jnp.sum((a[:, :, None, :] - b[:, None, :, :]) ** 2, axis=-1)
             hit = (d2 <= eps2) & cand_valid[:, None, :]
             cnt = hit.sum(axis=2)
-        is_core = (cnt >= min_pts) & own_valid
-        c_overflow = jnp.any((total > caps.c_cap) & small)
-        return own_idx, is_core, own_valid, c_overflow
+        return own_idx, (cnt >= min_pts) & own_valid
 
-    gsel_all = jnp.arange(G, dtype=jnp.int32).reshape(-1, caps.grid_block)
-    own_idx, is_core, own_valid, c_ovf = jax.lax.map(core_block, gsel_all)
-    core_sorted = core_sorted.at[own_idx.reshape(-1)].max(
-        (is_core & own_valid).reshape(-1))
-    ovf_candidates = jnp.any(c_ovf)
+    GB = caps.grid_block
+    if caps.packed:
+        # occupancy-packed dispatch: live small grids compacted to a
+        # prefix sorted by candidate total (stable, so equal totals keep
+        # grid order), swept tier by tier at pow2 sub-caps.  A grid's
+        # tier width bounds its candidate total, so every tier sees the
+        # exact candidate set; grids whose total exceeds c_cap run (and
+        # truncate) in the widest tier exactly as the dense path does,
+        # with the candidates flag raised from total_all above.
+        tier_w = sorted({max(8, caps.c_cap // 4),
+                         max(8, caps.c_cap // 2), caps.c_cap})
+        pperm = jnp.argsort(jnp.where(small_all, total_all,
+                                      jnp.int32(2 ** 30)), stable=True)
+        n_small = jnp.sum(small_all.astype(jnp.int32))
+        cuts = [jnp.sum((small_all
+                         & (total_all <= w)).astype(jnp.int32))
+                for w in tier_w[:-1]] + [n_small]
+        tier_bounds = list(zip([jnp.int32(0)] + cuts[:-1], cuts))
+        tier_counts = [hi - lo for lo, hi in tier_bounds]
+
+        def sweep_tiers(row_fn, init, scatter):
+            def one_tier(acc, lo, hi, width):
+                nblk = (hi - lo + GB - 1) // GB
+
+                def body(state):
+                    b, acc = state
+                    pos = lo + b * GB + jnp.arange(GB, dtype=jnp.int32)
+                    active = pos < hi
+                    gsel = pperm[jnp.where(active, pos, 0)]
+                    oi, val = row_fn(gsel, width, active)
+                    return b + 1, scatter(acc, oi, val)
+
+                return jax.lax.while_loop(
+                    lambda s: s[0] < nblk, body, (jnp.int32(0), acc))[1]
+
+            for (lo, hi), width in zip(tier_bounds, tier_w):
+                init = one_tier(init, lo, hi, width)
+            return init
+
+        core_sorted = sweep_tiers(
+            core_rows, core_sorted,
+            lambda acc, oi, v: acc.at[oi.reshape(-1)].max(v.reshape(-1)))
+        dispatch_tiers = jnp.zeros((4,), jnp.int32)
+        for t, cnt in enumerate(tier_counts):
+            dispatch_tiers = dispatch_tiers.at[t].set(cnt)
+    else:
+        gsel_all = jnp.arange(G, dtype=jnp.int32).reshape(-1, GB)
+        ones = jnp.ones((GB,), bool)
+        own_idx, is_core = jax.lax.map(
+            lambda gsel: core_rows(gsel, caps.c_cap, ones), gsel_all)
+        core_sorted = core_sorted.at[own_idx.reshape(-1)].max(
+            is_core.reshape(-1))
+        dispatch_tiers = jnp.zeros((4,), jnp.int32).at[3].set(G)
 
     core_per_grid = jnp.zeros((G,), jnp.int32).at[dg.point_grid].add(
         core_sorted.astype(jnp.int32))
@@ -290,8 +393,19 @@ def device_dbscan(points: jnp.ndarray, eps, min_pts: int, caps: GritCaps,
     pg = gg.reshape(-1)[take]
     ph = jnp.maximum(g2.reshape(-1), 0)[take]
     pvalid = flat_valid[take]
+    if take.shape[0] < caps.pair_cap:
+        # pair_cap exceeds the G*K pair universe: pad the compacted
+        # prefix back up to the cap (all padding invalid) so the block
+        # reshape below keeps its static shape
+        pad = caps.pair_cap - take.shape[0]
+        pg = jnp.pad(pg, (0, pad))
+        ph = jnp.pad(ph, (0, pad))
+        pvalid = jnp.pad(pvalid, (0, pad))
     ovf_pairs = jnp.sum(flat_valid) > caps.pair_cap
 
+    # compacted core set of EVERY grid, computed once: each core grid
+    # takes part in ~k_cap merge pairs, so hoisting the compaction out
+    # of the pair blocks removes the dominant per-pair gather cost
     def gather_core_set(g):
         w = jnp.arange(caps.m_cap, dtype=jnp.int32)
         pidx = dg.starts[g] + w
@@ -305,22 +419,46 @@ def device_dbscan(points: jnp.ndarray, eps, min_pts: int, caps: GritCaps,
         setv = jnp.arange(caps.m_cap) < m
         return jnp.where(setv, out, 0), setv
 
+    core_set_idx, core_set_valid = jax.vmap(gather_core_set)(
+        jnp.arange(G, dtype=jnp.int32))                  # [G, m_cap]
+
     def merge_block(args):
         a_g, b_g, pv = args
-        ai, av = jax.vmap(gather_core_set)(a_g)
-        bi, bv = jax.vmap(gather_core_set)(b_g)
-        av = av & pv[:, None]
-        bv = bv & pv[:, None]
-        yes, iters = fast_merging_batch(spts[ai], av, spts[bi], bv, eps,
-                                        max_iters=caps.merge_iters)
+        av = core_set_valid[a_g] & pv[:, None]
+        bv = core_set_valid[b_g] & pv[:, None]
+        yes, iters = fast_merging_batch(
+            spts[core_set_idx[a_g]], av, spts[core_set_idx[b_g]], bv,
+            eps, max_iters=caps.merge_iters)
         return yes & pv, iters
 
     PB = caps.pair_block
     n_pb = caps.pair_cap // PB
-    merged, iters = jax.lax.map(
-        merge_block, (pg.reshape(n_pb, PB), ph.reshape(n_pb, PB),
-                      pvalid.reshape(n_pb, PB)))
-    merged = merged.reshape(-1)
+    if caps.packed:
+        # the valid pairs are argsort-compacted to a prefix above, so
+        # only ceil(n_valid / PB) blocks carry work; blocks past the
+        # prefix would compute all-False rows, which is exactly the
+        # initial value of ``merged`` -- skipping them is bit-identical
+        n_valid_pairs = jnp.minimum(
+            jnp.sum(flat_valid.astype(jnp.int32)), caps.pair_cap)
+        nblk_m = (n_valid_pairs + PB - 1) // PB
+
+        def merge_body(state):
+            b, acc = state
+            s = b * PB
+            yes, _ = merge_block((
+                jax.lax.dynamic_slice(pg, (s,), (PB,)),
+                jax.lax.dynamic_slice(ph, (s,), (PB,)),
+                jax.lax.dynamic_slice(pvalid, (s,), (PB,))))
+            return b + 1, jax.lax.dynamic_update_slice(acc, yes, (s,))
+
+        merged = jax.lax.while_loop(
+            lambda s: s[0] < nblk_m, merge_body,
+            (jnp.int32(0), jnp.zeros((caps.pair_cap,), bool)))[1]
+    else:
+        merged, _ = jax.lax.map(
+            merge_block, (pg.reshape(n_pb, PB), ph.reshape(n_pb, PB),
+                          pvalid.reshape(n_pb, PB)))
+        merged = merged.reshape(-1)
 
     edges = jnp.stack([pg, ph], axis=1)
     grid_label = label_propagation(G, edges, merged, core_grid)
@@ -328,13 +466,13 @@ def device_dbscan(points: jnp.ndarray, eps, min_pts: int, caps: GritCaps,
     num_clusters = jnp.sum((grid_label == jnp.arange(G)) & core_grid)
 
     # ---- step 4: border / noise ----------------------------------------
-    def border_block(gsel):
-        cand_idx, cand_grid, cand_valid, total = _candidates_for_grids(
-            dg, nbr, gsel, caps.c_cap)
+    def border_rows(gsel, width, active):
+        cand_idx, cand_grid, cand_valid, _ = _candidates_for_grids(
+            dg, nbr, gsel, width)
         cand_valid = cand_valid & core_sorted[cand_idx]
         own_slot = jnp.arange(p_cap, dtype=jnp.int32)[None, :]
         own_idx = dg.starts[gsel][:, None] + own_slot
-        small = (~big[gsel]) & occupied[gsel]
+        small = (~big[gsel]) & occupied[gsel] & active
         own_valid = (own_slot < dg.counts[gsel][:, None]) & small[:, None]
         own_idx_s = jnp.where(own_valid, own_idx, 0)
         noncore = own_valid & ~core_sorted[own_idx_s]
@@ -357,11 +495,17 @@ def device_dbscan(points: jnp.ndarray, eps, min_pts: int, caps: GritCaps,
             gbest = jnp.take_along_axis(cand_grid, jbest, axis=1)
         lab = jnp.where((dbest <= eps2) & noncore,
                         grid_label[gbest], jnp.int32(G))
-        return own_idx_s, jnp.where(noncore, lab, G), noncore
+        return own_idx_s, jnp.where(noncore, lab, G)
 
-    b_own_idx, b_lab, b_nc = jax.lax.map(border_block, gsel_all)
-    border_sorted = jnp.full((n,), jnp.int32(G)).at[
-        b_own_idx.reshape(-1)].min(b_lab.reshape(-1))
+    if caps.packed:
+        border_sorted = sweep_tiers(
+            border_rows, jnp.full((n,), jnp.int32(G)),
+            lambda acc, oi, v: acc.at[oi.reshape(-1)].min(v.reshape(-1)))
+    else:
+        b_own_idx, b_lab = jax.lax.map(
+            lambda gsel: border_rows(gsel, caps.c_cap, ones), gsel_all)
+        border_sorted = jnp.full((n,), jnp.int32(G)).at[
+            b_own_idx.reshape(-1)].min(b_lab.reshape(-1))
 
     lab_sorted = jnp.where(core_sorted, grid_label[dg.point_grid],
                            border_sorted)
@@ -378,4 +522,5 @@ def device_dbscan(points: jnp.ndarray, eps, min_pts: int, caps: GritCaps,
     return DeviceDBSCANResult(labels=labels, core=core,
                               point_grid=point_grid,
                               num_clusters=num_clusters,
-                              overflow=report.any(), report=report)
+                              overflow=report.any(), report=report,
+                              dispatch_tiers=dispatch_tiers)

@@ -6,8 +6,11 @@ compaction (``repro.dist.halo``), cross-shard label reconciliation
 (``repro.dist.reconcile``), the shard_map SPMD step + caps
 (``repro.dist.step``) and the host-facing entry points
 (``repro.dist.api``).  Import from ``repro.dist`` in new code; this
-module keeps the historical names importable.
+module keeps the historical names importable (same pattern as
+``repro.index.insert``).
 """
+
+import warnings
 
 from repro.dist import (ClusterCaps, DistributedFitResult,  # noqa: F401
                         distributed_dbscan, distributed_fit,
@@ -15,6 +18,14 @@ from repro.dist import (ClusterCaps, DistributedFitResult,  # noqa: F401
 from repro.dist.halo import halo_buffer as _halo_buffer  # noqa: F401
 from repro.dist.step import (_STEP_CACHE,  # noqa: F401
                              cached_cluster_step as _cached_cluster_step)
+
+warnings.warn(
+    "repro.core.distributed is deprecated; import ClusterCaps, "
+    "distributed_fit, distributed_dbscan, ... from repro.dist (the "
+    "distributed serving subsystem) instead.",
+    DeprecationWarning,
+    stacklevel=2,
+)
 
 __all__ = [
     "ClusterCaps", "DistributedFitResult", "distributed_dbscan",

@@ -277,10 +277,11 @@ def _bsearch(col: jnp.ndarray, value: jnp.ndarray, lo: jnp.ndarray,
     return lo
 
 
-@partial(jax.jit, static_argnames=("frontier_cap", "k_cap", "include_self"))
+@partial(jax.jit, static_argnames=("frontier_cap", "k_cap", "include_self",
+                                   "packed"))
 def device_neighbor_table(sorted_ids: jnp.ndarray, num_grids: jnp.ndarray,
                           frontier_cap: int = 128, k_cap: int = 64,
-                          include_self: bool = True):
+                          include_self: bool = True, packed: bool = True):
     """In-graph Algorithm 3 for every non-empty grid simultaneously.
 
     Args:
@@ -288,6 +289,13 @@ def device_neighbor_table(sorted_ids: jnp.ndarray, num_grids: jnp.ndarray,
       num_grids:  [] actual number of grids.
       frontier_cap: static cap on per-level surviving prefix ranges.
       k_cap: static cap on returned neighbors per grid.
+      packed: sweep only the live-grid prefix in fixed-size blocks
+        (the lex sort parks every live grid in rows [0, num_grids), so
+        a blocked ``while_loop`` skips the dead tail entirely); the
+        dense path traverses every ``G_cap`` row.  Bit-identical: live
+        rows run the same per-row query either way, and dead rows are
+        ``-1`` in both (the dense path masks them, the packed path
+        never writes them).
 
     Returns:
       nbr:     [G_cap, k_cap] int32 neighbor grid rows (-1 padded),
@@ -304,20 +312,21 @@ def device_neighbor_table(sorted_ids: jnp.ndarray, num_grids: jnp.ndarray,
 
     def one_query(qid_row):
         q = sorted_ids[qid_row]
-        lo0 = jnp.zeros((1,), jnp.int32)
-        hi0 = jnp.asarray([num_grids], jnp.int32)
-        off0 = jnp.zeros((1,), jnp.int32)
-        valid0 = jnp.ones((1,), bool)
-
-        def pad(x, fill):
-            return jnp.concatenate(
-                [x, jnp.full((frontier_cap - x.shape[0],), fill, x.dtype)])
-
-        lo, hi = pad(lo0, 0), pad(hi0, 0)
-        off, valid = pad(off0, BIG), pad(valid0, False)
+        lo = jnp.zeros((1,), jnp.int32)
+        hi = jnp.asarray([num_grids], jnp.int32)
+        off = jnp.zeros((1,), jnp.int32)
+        valid = jnp.ones((1,), bool)
         ovf_frontier = jnp.zeros((), bool)
 
         for j in range(d):
+            # the traversal starts from ONE root range and multiplies
+            # by at most n_k per level, so level j holds <= n_k^j live
+            # ranges -- size the level's arrays to that bound instead
+            # of a flat frontier_cap (the dead-lane padding dominated
+            # this stage's wall).  Same entries, same compaction order,
+            # same overflow predicate: width only drops provably-dead
+            # lanes, so the output is bit-identical.
+            W = lo.shape[0]
             col = sorted_ids[:, j]
             # one left-bsearch over the n_k+1 consecutive keys
             # [q_j-r .. q_j+r+1]; since keys are consecutive integers,
@@ -326,30 +335,30 @@ def device_neighbor_table(sorted_ids: jnp.ndarray, num_grids: jnp.ndarray,
             ks1 = q[j] + jnp.arange(-r, r + 2, dtype=jnp.int32)    # [n_k+1]
             lo_e1 = jnp.repeat(lo, n_k + 1)
             hi_e1 = jnp.repeat(hi, n_k + 1)
-            k_e1 = jnp.tile(ks1, frontier_cap)
+            k_e1 = jnp.tile(ks1, W)
             pos = _bsearch(col, k_e1, lo_e1, hi_e1, "left", steps)
-            pos = pos.reshape(frontier_cap, n_k + 1)
+            pos = pos.reshape(W, n_k + 1)
             nlo = pos[:, :-1].reshape(-1)
             nhi = pos[:, 1:].reshape(-1)
             off_e = jnp.repeat(off, n_k)
             val_e = jnp.repeat(valid, n_k)
-            k_e = jnp.tile(ks1[:-1], frontier_cap)
+            k_e = jnp.tile(ks1[:-1], W)
             doff = jnp.maximum(jnp.abs(k_e - q[j]) - 1, 0) ** 2
             noff = off_e + doff
             nval = val_e & (nlo < nhi) & (noff < d) & (k_e >= 0)
             # compact: valid entries first, offset ascending within valid
             key = jnp.where(nval, noff, BIG)
             order = jnp.argsort(key, stable=True)
-            take = order[:frontier_cap]
+            take = order[:min(W * n_k, frontier_cap)]
             ovf_frontier = ovf_frontier | (jnp.sum(nval) > frontier_cap)
             lo, hi = nlo[take], nhi[take]
             off, valid = noff[take], nval[take]
 
         # leaves: each surviving range is a single grid row (full id fixed)
-        if k_cap > frontier_cap:
-            # leaf arrays are frontier-wide; widen so the promised
-            # [., k_cap] output shape holds when k_cap > frontier_cap
-            ext = k_cap - frontier_cap
+        if k_cap > lo.shape[0]:
+            # leaf arrays are level-d wide; widen so the promised
+            # [., k_cap] output shape holds
+            ext = k_cap - lo.shape[0]
             lo = jnp.concatenate([lo, jnp.full((ext,), 0, lo.dtype)])
             off = jnp.concatenate([off, jnp.full((ext,), BIG, off.dtype)])
             valid = jnp.concatenate([valid, jnp.zeros((ext,), bool)])
@@ -365,9 +374,38 @@ def device_neighbor_table(sorted_ids: jnp.ndarray, num_grids: jnp.ndarray,
         return (grid[:k_cap], jnp.where(valid, off, -1)[:k_cap],
                 ovf_frontier, ovf_k)
 
-    rows = jnp.arange(G_cap, dtype=jnp.int32)
-    nbr, nbr_off, ovf_f, ovf_k = jax.vmap(one_query)(rows)
-    live = rows < num_grids
-    nbr = jnp.where(live[:, None], nbr, -1)
-    nbr_off = jnp.where(live[:, None], nbr_off, -1)
-    return nbr, nbr_off, jnp.any(ovf_f & live), jnp.any(ovf_k & live)
+    if not packed:
+        rows = jnp.arange(G_cap, dtype=jnp.int32)
+        nbr, nbr_off, ovf_f, ovf_k = jax.vmap(one_query)(rows)
+        live = rows < num_grids
+        nbr = jnp.where(live[:, None], nbr, -1)
+        nbr_off = jnp.where(live[:, None], nbr_off, -1)
+        return nbr, nbr_off, jnp.any(ovf_f & live), jnp.any(ovf_k & live)
+
+    # packed: blocked sweep over the live prefix only.  Block starts
+    # are clamped so the last block stays in bounds when GB does not
+    # divide G_cap; overlapped rows recompute the same per-row values,
+    # so the double write is benign.
+    GB = min(64, G_cap)
+    nblk = (jnp.minimum(num_grids, G_cap) + GB - 1) // GB
+
+    def body(state):
+        b, nbr, nbr_off, ovf_f, ovf_k = state
+        s = jnp.minimum(b * GB, G_cap - GB)
+        rows = s + jnp.arange(GB, dtype=jnp.int32)
+        live = rows < num_grids
+        g, o, of, ok = jax.vmap(one_query)(rows)
+        g = jnp.where(live[:, None], g, -1)
+        o = jnp.where(live[:, None], o, -1)
+        nbr = jax.lax.dynamic_update_slice(nbr, g, (s, 0))
+        nbr_off = jax.lax.dynamic_update_slice(nbr_off, o, (s, 0))
+        return (b + 1, nbr, nbr_off,
+                ovf_f | jnp.any(of & live), ovf_k | jnp.any(ok & live))
+
+    init = (jnp.int32(0),
+            jnp.full((G_cap, k_cap), -1, jnp.int32),
+            jnp.full((G_cap, k_cap), -1, jnp.int32),
+            jnp.zeros((), bool), jnp.zeros((), bool))
+    _, nbr, nbr_off, ovf_f, ovf_k = jax.lax.while_loop(
+        lambda st: st[0] < nblk, body, init)
+    return nbr, nbr_off, ovf_f, ovf_k

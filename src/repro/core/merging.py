@@ -148,23 +148,40 @@ def center_prune_merge(si: np.ndarray, sj: np.ndarray, eps: float,
 # --------------------------------------------------------------------------
 
 def _masked_prune_jnp(A, va, B, vb, p, q, eps):
-    """Algorithm 4 on masks: returns updated validity mask for A."""
+    """Algorithm 4 on masks: returns updated validity mask for A.
+
+    The angular test runs entirely in cosine space: with
+    ``lam_y = arcsin(eps/d(p,y)) + arccos(cos_b)`` and
+    ``theta_x = arccos(cos_g)`` all in [0, pi] where cosine is strictly
+    decreasing, ``theta_x > max_y lam_y`` is equivalent to
+    ``cos_g < min_y cos(lam_y)`` with
+    ``cos(a + b) = cos_a cos_b - sin_a sin_b`` (sum identity), unless
+    some ``lam_y`` exceeds pi -- detected as ``cos_b < -cos_a`` (since
+    ``a <= pi/2``), in which case ``lam >= pi >= theta`` and no point
+    is angle-pruned.  This removes every ``arcsin``/``arccos`` from
+    the merge hot loop (they dominated its wall on CPU)."""
     dpq = jnp.linalg.norm(p - q)
     sigma = dpq - eps
     py = B - p[None, :]
     dpy = jnp.linalg.norm(py, axis=1)
     safe_dpy = jnp.maximum(dpy, 1e-30)
-    cos_t1 = jnp.clip((py @ (q - p)) / (safe_dpy * jnp.maximum(dpq, 1e-30)), -1., 1.)
-    lam_y = jnp.arcsin(jnp.clip(eps / safe_dpy, -1., 1.)) + jnp.arccos(cos_t1)
-    lam = jnp.max(jnp.where(vb, lam_y, -jnp.inf))
+    cos_b = jnp.clip((py @ (q - p)) / (safe_dpy * jnp.maximum(dpq, 1e-30)), -1., 1.)
+    sin_a = jnp.clip(eps / safe_dpy, 0., 1.)
+    cos_a = jnp.sqrt(1. - sin_a * sin_a)
+    sin_b = jnp.sqrt(1. - cos_b * cos_b)
+    cos_ab = cos_a * cos_b - sin_a * sin_b
+    over_pi = jnp.any(vb & (cos_b < -cos_a))
+    # empty B: min over nothing -> +inf, so every x is angle-pruned
+    # (matching the lam = -inf behavior of the angle-space form)
+    cos_lam = jnp.min(jnp.where(vb, cos_ab, jnp.inf))
 
     px = A - p[None, :]
     dpx = jnp.linalg.norm(px, axis=1)
     tri = dpx < sigma
     cos_g = jnp.clip((px @ (q - p)) /
                      (jnp.maximum(dpx, 1e-30) * jnp.maximum(dpq, 1e-30)), -1., 1.)
-    theta = jnp.where(dpx == 0.0, 0.0, jnp.arccos(cos_g))
-    ang = theta > lam
+    cos_g = jnp.where(dpx == 0.0, 1.0, cos_g)   # theta(p) = 0
+    ang = (cos_g < cos_lam) & ~over_pi
     return va & ~(tri | ang)
 
 

@@ -23,7 +23,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from repro import obs
 from repro.core.device_dbscan import OverflowReport
 
-from .halo import halo_census
+from .halo import census_halo_cap, halo_census
 from .sharding import pack_slabs, slab_cuts, unshard_by_perm
 from .step import (ClusterCaps, cached_cluster_step,
                    cached_staged_cluster_steps)
@@ -52,11 +52,15 @@ def _census_metrics(pts_sh, valid_sh, eps, caps, n_shards, cap) -> None:
     exchange and of the packed slab slots carries real points."""
     reg = obs.registry()
     reg.counter("dist.fit.count").inc()
-    sel, slots = halo_census(pts_sh, valid_sh, eps, caps.halo_cap)
+    sel, slots, worst = halo_census(pts_sh, valid_sh, eps, caps.halo_cap)
     reg.counter("dist.halo.points_selected").inc(sel)
     reg.counter("dist.halo.buffer_slots").inc(slots)
+    # cap-sizing waste: slack of the worst-populated side's buffer (the
+    # shared SPMD cap must cover it; lighter sides' slack is irreducible
+    # -- see halo_census)
     reg.gauge("dist.halo.padding_waste").set(
-        1.0 - sel / slots if slots else 0.0)
+        1.0 - worst / caps.halo_cap if caps.halo_cap else 0.0)
+    reg.gauge("dist.halo.fill").set(sel / slots if slots else 0.0)
     valid_total = int(np.sum(valid_sh))
     reg.counter("dist.pack.points").inc(valid_total)
     reg.counter("dist.pack.slots").inc(n_shards * cap)
@@ -84,11 +88,15 @@ def distributed_fit(points: np.ndarray, eps: float, min_pts: int,
     """
     if traced is None:
         traced = obs.enabled()
-    caps = caps or ClusterCaps()
     pts = np.asarray(points, np.float64)
     n = pts.shape[0]
     axes = tuple(mesh.axis_names)
     n_shards = int(np.prod([mesh.shape[a] for a in axes]))
+    if caps is None:
+        # default grit caps, but a halo cap sized from the actual
+        # boundary-band census (the adaptive engine additionally sizes
+        # the grit caps per shard; see repro.engine.estimate_shard_caps)
+        caps = ClusterCaps(halo_cap=census_halo_cap(pts, eps, n_shards))
     with obs.span("dist.fit", n=n, shards=n_shards, staged=traced):
         with obs.span("dist.fit.pack"):
             order, cut_idx, cut_coords = slab_cuts(pts, eps, n_shards)

@@ -59,21 +59,74 @@ def halo_buffer(pts, valid, eps, side: str, cap: int):
     return buf.astype(jnp.float32), idx.astype(jnp.int32), overflow
 
 
-def halo_census(pts_sh: np.ndarray, valid_sh: np.ndarray, eps: float,
-                cap: int) -> Tuple[int, int]:
-    """Host-side mirror of :func:`halo_buffer`'s selection predicate,
-    summed over all shards and both sides.
+def boundary_census(points: np.ndarray, eps: float, n_shards: int) -> int:
+    """Worst per-side 2*eps boundary-band population of the slab
+    partition: the exact host-side mirror of :func:`halo_buffer`'s
+    selection predicate, maximized over every shard and both sides.
 
-    Returns ``(points_selected, buffer_slots)`` where ``buffer_slots =
-    2 * n_shards * cap`` -- the fraction not selected is the halo
-    exchange's padding waste, one of the traced distributed fit's
-    attribution metrics (``repro.obs``).  Pure numpy on the pre-packed
-    slabs; never dispatches to the device.
+    ``slab_cuts`` is deterministic, so a ``halo_cap >= boundary_census``
+    can never overflow on the fit that sized it -- unlike the
+    ``halo_bound`` densest-window estimate, which bounds *any* window
+    and historically left halo buffers ~76% padding."""
+    from .sharding import slab_cuts
+    pts = np.asarray(points, np.float64)
+    order, cut_idx, _ = slab_cuts(pts, eps, n_shards)
+    starts = np.concatenate([[0], cut_idx]).astype(np.int64)
+    ends = np.concatenate([cut_idx, [len(pts)]]).astype(np.int64)
+    x = pts[order, 0]
+    worst = 0
+    for s in range(n_shards):
+        seg = x[starts[s]:ends[s]]
+        if not seg.size:
+            continue
+        worst = max(worst,
+                    int(np.sum(seg <= seg.min() + 2 * eps)),
+                    int(np.sum(seg >= seg.max() - 2 * eps)))
+    return worst
+
+
+def _quarter_pow2_at_least(x: int, lo: int = 8) -> int:
+    """Smallest value >= x on the quarter-pow2 ladder (1, 1.25, 1.5,
+    1.75 x 2^e): few distinct shapes like a plain pow2 bucket, but the
+    over-provisioning is bounded at 25% instead of 100% -- what keeps
+    the halo padding-waste gate (<= 25%, BENCH_8) honest."""
+    x = max(int(x), lo, 8)
+    e = max((x - 1).bit_length() - 1, 3)
+    for m in (5, 6, 7, 8):
+        v = (1 << e) * m // 4
+        if v >= x:
+            return v
+    return 1 << (e + 1)
+
+
+def census_halo_cap(points: np.ndarray, eps: float, n_shards: int,
+                    lo: int = 32) -> int:
+    """Halo cap sized from the actual boundary-band census (see
+    :func:`boundary_census`), bucket-quantized so similarly-sized fits
+    share one compiled SPMD step."""
+    return _quarter_pow2_at_least(boundary_census(points, eps, n_shards),
+                                  lo=lo)
+
+
+def halo_census(pts_sh: np.ndarray, valid_sh: np.ndarray, eps: float,
+                cap: int) -> Tuple[int, int, int]:
+    """Host-side mirror of :func:`halo_buffer`'s selection predicate
+    over all shards and both sides.
+
+    Returns ``(points_selected, buffer_slots, worst_side)`` where
+    ``buffer_slots = 2 * n_shards * cap`` and ``worst_side`` is the
+    largest single side's selection.  The cap-sizing padding waste is
+    ``1 - worst_side / cap``: SPMD needs one shared buffer shape, so
+    the cap must cover the worst side and the slack on lighter sides
+    is irreducible -- only the worst-side slack is the cap estimator's
+    to close (the ``dist.halo.padding_waste`` gauge, gated <= 25% by
+    BENCH_8 via the quarter-pow2 cap ladder).  Pure numpy on the
+    pre-packed slabs; never dispatches to the device.
     """
     pts_sh = np.asarray(pts_sh)
     valid_sh = np.asarray(valid_sh, bool)
     n_shards = pts_sh.shape[0]
-    selected = 0
+    selected, worst = 0, 0
     for s in range(n_shards):
         v = valid_sh[s]
         if not v.any():
@@ -81,6 +134,8 @@ def halo_census(pts_sh: np.ndarray, valid_sh: np.ndarray, eps: float,
         x0 = pts_sh[s, :, 0]
         xv = x0[v]
         lo, hi = float(xv.min()), float(xv.max())
-        selected += int(np.sum(v & (x0 <= lo + 2 * eps)))
-        selected += int(np.sum(v & (x0 >= hi - 2 * eps)))
-    return selected, 2 * n_shards * cap
+        n_lo = int(np.sum(v & (x0 <= lo + 2 * eps)))
+        n_hi = int(np.sum(v & (x0 >= hi - 2 * eps)))
+        selected += n_lo + n_hi
+        worst = max(worst, n_lo, n_hi)
+    return selected, 2 * n_shards * cap, worst

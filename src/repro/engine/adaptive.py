@@ -111,6 +111,99 @@ def grid_stats(points: np.ndarray, eps: float,
     return int(len(counts)), int(counts.max())
 
 
+def _lex_rows(a: np.ndarray) -> np.ndarray:
+    """Rows of an int array as a lexicographically sortable structured
+    view (for vectorized row membership via searchsorted)."""
+    a = np.ascontiguousarray(np.asarray(a, np.int64))
+    return a.view([("", a.dtype)] * a.shape[1]).ravel()
+
+
+def candidate_census(points: np.ndarray, eps: float, min_pts: int,
+                     point_valid: Optional[np.ndarray] = None) -> int:
+    """Exact host-side upper bound on any *small* grid's candidate
+    total: for every non-empty grid with occupancy < MinPts, the sum of
+    occupancies over its offset stencil (a superset of the grid tree's
+    exact MinDist <= eps neighbor set, so the device pipeline's
+    per-grid totals can never exceed it).  All-core grids skip the
+    candidate scan entirely, so they don't constrain ``c_cap``.
+
+    Vectorized: one ``searchsorted`` over the lex-sorted grid ids per
+    stencil offset -- O(|stencil| * G log G), vanishing next to the
+    fit."""
+    pts = np.asarray(points, np.float64)
+    if point_valid is not None:
+        pts = pts[np.asarray(point_valid, bool)]
+    if len(pts) == 0:
+        return 1
+    d = pts.shape[1]
+    ids, _, _ = identifiers(pts, eps)
+    uids, counts = np.unique(np.asarray(ids, np.int64), axis=0,
+                             return_counts=True)
+    small = counts < min_pts
+    if not small.any():
+        return 1
+    keys = _lex_rows(uids)                       # sorted (np.unique)
+    totals = np.zeros(int(small.sum()), np.int64)
+    deltas, _ = offset_stencil(d)
+    for delta in np.asarray(deltas, np.int64):
+        probe = _lex_rows(uids[small] + delta)
+        pos = np.searchsorted(keys, probe)
+        pos = np.minimum(pos, len(keys) - 1)
+        hit = keys[pos] == probe
+        totals += np.where(hit, counts[pos], 0)
+    return int(totals.max())
+
+
+def _caps_from_stats(n: int, d: int, num_grids: int, max_occ: int,
+                     cand_max: int, margin: float, extra_grids: int,
+                     use_kernels: bool) -> GritCaps:
+    """``GritCaps`` from (grid count, max occupancy, max small-grid
+    candidate total) -- the quantization/clamp discipline shared by the
+    global and the per-shard estimators."""
+    grid_cap = _pow2_at_least(
+        int(math.ceil(num_grids * margin)) + extra_grids, lo=8)
+    grid_block = min(64, grid_cap)
+
+    # 3^d - 1 stencil heuristic, clamped to the exact offset-stencil
+    # size (the provable per-grid neighbor maximum); at low d the exact
+    # bound is small enough to just provision outright
+    bound = stencil_neighbor_bound(d)
+    k_est = bound if bound <= 32 else max(3 ** d - 1, 8)
+    k_cap = _mult8(min(k_est, bound, max(grid_cap - 1, 1)))
+
+    m_cap = _mult8(max_occ)
+    # candidate list of a small grid: the census is the exact stencil
+    # occupancy sum, an upper bound on what the device's (possibly
+    # tighter) MinDist neighbor set can produce
+    c_cap = _pow2_at_least(min(n, cand_max), lo=32)
+
+    # deduped (g < g') merge pairs are bounded by G * k / 2; density
+    # rarely reaches it, but a half-bound start avoids a recompile on
+    # blob-like data where most neighbor pairs are core-core
+    pair_cap = _pow2_at_least(num_grids * k_cap // 2 + 8, lo=64)
+    pair_block = min(256, pair_cap)
+
+    # the per-level surviving prefix count depends on the id
+    # distribution, not just geometry; the r^(d-1) fanout regularly
+    # undershoots by one pow2 step on blob-like data, and a too-small
+    # frontier costs a full overflow fit + retry on EVERY caps=None
+    # call -- double it up front (a [frontier_cap] working set, so the
+    # headroom is nearly free)
+    r = 2 * radius(d) + 1
+    frontier_cap = _pow2_at_least(
+        2 * min(int(r ** max(d - 1, 1)), 256), lo=32)
+
+    # paper Theorem 3: FastMerging terminates within |s_i| + |s_j|
+    # iterations; lax.while_loop makes a generous bound free at runtime
+    merge_iters = 2 * m_cap + 4
+
+    return GritCaps(grid_cap=grid_cap, frontier_cap=frontier_cap,
+                    k_cap=k_cap, c_cap=c_cap, m_cap=m_cap,
+                    pair_cap=pair_cap, grid_block=grid_block,
+                    pair_block=pair_block, merge_iters=merge_iters,
+                    use_kernels=use_kernels)
+
+
 def estimate_caps(points: np.ndarray, eps: float, min_pts: int,
                   point_valid: Optional[np.ndarray] = None,
                   margin: float = 1.25,
@@ -126,42 +219,71 @@ def estimate_caps(points: np.ndarray, eps: float, min_pts: int,
     pts = np.asarray(points)
     n, d = pts.shape
     num_grids, max_occ = grid_stats(pts, eps, point_valid)
+    cand_max = candidate_census(pts, eps, min_pts, point_valid)
+    return _caps_from_stats(n, d, num_grids, max_occ, cand_max,
+                            margin, extra_grids, use_kernels)
 
-    grid_cap = _pow2_at_least(
-        int(math.ceil(num_grids * margin)) + extra_grids, lo=8)
-    grid_block = min(64, grid_cap)
 
-    # 3^d - 1 stencil heuristic, clamped to the exact offset-stencil
-    # size (the provable per-grid neighbor maximum); at low d the exact
-    # bound is small enough to just provision outright
-    bound = stencil_neighbor_bound(d)
-    k_est = bound if bound <= 32 else max(3 ** d - 1, 8)
-    k_cap = _mult8(min(k_est, bound, max(grid_cap - 1, 1)))
+def _shard_point_sets(points: np.ndarray, eps: float, n_shards: int):
+    """The exact per-shard point set of a distributed fit: the shard's
+    own slab plus the 2*eps boundary bands its neighbors ship as ghosts
+    (the same selection predicate as ``repro.dist.halo.halo_buffer``)."""
+    from repro.dist.sharding import slab_cuts  # deferred: dist is optional
+    pts = np.asarray(points, np.float64)
+    order, cut_idx, _ = slab_cuts(pts, eps, n_shards)
+    starts = np.concatenate([[0], cut_idx]).astype(np.int64)
+    ends = np.concatenate([cut_idx, [len(pts)]]).astype(np.int64)
+    spts = pts[order]
 
-    m_cap = _mult8(max_occ)
-    # candidate list of a small grid: its own < MinPts points plus the
-    # points of up to k_cap neighbor grids (which may be all-core grids
-    # at full occupancy)
-    c_cap = _pow2_at_least(min(n, (min_pts - 1) + k_cap * max_occ), lo=32)
+    def ship(s: int, side: str) -> np.ndarray:
+        seg = spts[starts[s]:ends[s]]
+        if not len(seg):
+            return seg
+        x0 = seg[:, 0]
+        if side == "hi":
+            return seg[x0 >= x0.max() - 2 * eps]
+        return seg[x0 <= x0.min() + 2 * eps]
 
-    # deduped (g < g') merge pairs are bounded by G * k / 2; density
-    # rarely reaches it, but a half-bound start avoids a recompile on
-    # blob-like data where most neighbor pairs are core-core
-    pair_cap = _pow2_at_least(num_grids * k_cap // 2 + 8, lo=64)
-    pair_block = min(256, pair_cap)
+    for s in range(n_shards):
+        parts = [spts[starts[s]:ends[s]]]
+        if s > 0:
+            parts.append(ship(s - 1, "hi"))
+        if s < n_shards - 1:
+            parts.append(ship(s + 1, "lo"))
+        sub = np.concatenate(parts)
+        if len(sub):
+            yield sub
 
-    r = 2 * radius(d) + 1
-    frontier_cap = _pow2_at_least(min(int(r ** max(d - 1, 1)), 256), lo=16)
 
-    # paper Theorem 3: FastMerging terminates within |s_i| + |s_j|
-    # iterations; lax.while_loop makes a generous bound free at runtime
-    merge_iters = 2 * m_cap + 4
+def estimate_shard_caps(points: np.ndarray, eps: float, min_pts: int,
+                        n_shards: int, margin: float = 1.25,
+                        extra_grids: int = 2,
+                        use_kernels: bool = False) -> GritCaps:
+    """Per-shard ``GritCaps`` for the distributed fit.
 
-    return GritCaps(grid_cap=grid_cap, frontier_cap=frontier_cap,
-                    k_cap=k_cap, c_cap=c_cap, m_cap=m_cap,
-                    pair_cap=pair_cap, grid_block=grid_block,
-                    pair_block=pair_block, merge_iters=merge_iters,
-                    use_kernels=use_kernels)
+    Global grid statistics are a valid but wasteful bound for the
+    shard-local pipelines: slab cuts land on grid lines, so the worst
+    *shard's* grid count is roughly ``1 / n_shards`` of the global one,
+    yet shard-max caps derived globally inflate every shard to the
+    whole dataset's table.  This runs :func:`grid_stats` /
+    :func:`candidate_census` per shard over the exact per-shard point
+    set (own slab + the neighbors' 2*eps ghost bands) and takes the max
+    over shards -- still one shared static shape for the SPMD step,
+    but sized to the worst shard instead of the union."""
+    pts = np.asarray(points, np.float64)
+    n, d = pts.shape
+    if n_shards <= 1:
+        return estimate_caps(pts, eps, min_pts, margin=margin,
+                             extra_grids=extra_grids,
+                             use_kernels=use_kernels)
+    num_grids, max_occ, cand_max, n_max = 1, 1, 1, 1
+    for sub in _shard_point_sets(pts, eps, n_shards):
+        g, o = grid_stats(sub, eps)
+        c = candidate_census(sub, eps, min_pts)
+        num_grids, max_occ = max(num_grids, g), max(max_occ, o)
+        cand_max, n_max = max(cand_max, c), max(n_max, len(sub))
+    return _caps_from_stats(n_max, d, num_grids, max_occ, cand_max,
+                            margin, extra_grids, use_kernels)
 
 
 def grow_caps(caps: GritCaps, overflowed: Tuple[str, ...], *,
@@ -275,7 +397,19 @@ def adaptive_device_dbscan(points, eps: float, min_pts: int,
         res = device_dbscan(pts, eps, min_pts, c, point_valid=point_valid)
         return res, jax.device_get(res.report)
 
-    return adaptive_loop(
+    result, attempts = adaptive_loop(
         run,
         lambda c, flags: grow_caps(c, flags, n=n, d=d, growth=growth),
         dataclasses.asdict, caps, max_retries)
+    # occupancy-packed dispatch telemetry (device_dbscan module doc):
+    # grids actually swept per tier vs the grid_cap slots the dense
+    # strategy would sweep -- the work-proportionality regression gauge
+    tiers = np.asarray(jax.device_get(result.dispatch_tiers), np.int64)
+    reg = obs.registry()
+    for i in range(3):
+        reg.gauge(f"device.dispatch.tier{i + 1}_grids").set(float(tiers[i]))
+    reg.gauge("device.dispatch.dense_slots").set(float(tiers[3]))
+    reg.gauge("device.dispatch.grids_swept").set(float(tiers.sum()))
+    reg.gauge("device.dispatch.grid_cap").set(
+        float(attempts[-1]["caps"]["grid_cap"]))
+    return result, attempts

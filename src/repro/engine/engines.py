@@ -45,7 +45,8 @@ from repro.core.dbscan import brute_dbscan, grit_dbscan
 from repro.core.validate import core_flags
 
 from .adaptive import (adaptive_device_dbscan, adaptive_loop,
-                       estimate_caps, grow_caps, _pow2_at_least)
+                       estimate_caps, estimate_shard_caps, grow_caps,
+                       _pow2_at_least)
 from .registry import register_engine
 from .result import ClusterResult
 
@@ -176,10 +177,13 @@ def _distributed_engine(points, eps, min_pts, *, mesh=None, caps=None,
     """Multi-device SPMD engine.
 
     ``mesh`` defaults to a 1-D mesh over every visible jax device.  Caps
-    are estimated from *global* grid statistics: slab boundaries align
-    with grid lines, so any per-shard grid count / occupancy / pair
-    count is bounded by its global counterpart, and the halo cap by the
-    densest 2*eps-wide slab window.
+    are estimated from *per-shard* grid statistics
+    (:func:`repro.engine.estimate_shard_caps`): slab cuts land on grid
+    lines, so the worst shard's own + ghost-band point set bounds every
+    shard-local table without inflating each shard to the global one;
+    the halo cap comes from the boundary-band census
+    (``repro.dist.halo.census_halo_cap``) instead of the densest-window
+    upper bound that historically left halo buffers ~76% padding.
 
     ``use_kernels`` selects the shard-local distance plane (it rides on
     ``ClusterCaps.grit`` -- the same static jit key as the caps): None
@@ -189,7 +193,7 @@ def _distributed_engine(points, eps, min_pts, *, mesh=None, caps=None,
     including over the plane carried by a caller-provided ``caps``.
     """
     import jax
-    from repro.dist import ClusterCaps, distributed_fit, halo_bound
+    from repro.dist import ClusterCaps, census_halo_cap, distributed_fit
 
     t0 = time.perf_counter()
     pts = np.asarray(points, np.float64)
@@ -200,8 +204,10 @@ def _distributed_engine(points, eps, min_pts, *, mesh=None, caps=None,
     if caps is None:
         uk = (jax.default_backend() == "tpu") if use_kernels is None \
             else bool(use_kernels)
-        grit = estimate_caps(pts, eps, min_pts, use_kernels=uk)
-        halo = _pow2_at_least(min(halo_bound(pts, eps), n), lo=32)
+        n_shards = int(mesh.devices.size)
+        grit = estimate_shard_caps(pts, eps, min_pts, n_shards,
+                                   use_kernels=uk)
+        halo = min(census_halo_cap(pts, eps, n_shards), _pow2_at_least(n))
         caps = ClusterCaps(grit=grit, halo_cap=halo)
     elif use_kernels is not None and \
             caps.grit.use_kernels != bool(use_kernels):

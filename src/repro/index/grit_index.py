@@ -649,11 +649,13 @@ class GritIndex:
         caps = np.zeros(0, np.int64)
         if self.caps is not None:
             f = dataclasses.asdict(self.caps)
+            # the 11th slot (dispatch strategy) is appended after the
+            # original fixed-10 layout; restore accepts both lengths
             caps = np.asarray(
                 [f["grid_cap"], f["frontier_cap"], f["k_cap"], f["c_cap"],
                  f["m_cap"], f["pair_cap"], f["grid_block"],
                  f["pair_block"], f["merge_iters"],
-                 int(f["use_kernels"])], np.int64)
+                 int(f["use_kernels"]), int(f["packed"])], np.int64)
         return {
             "version": np.asarray([_SNAPSHOT_VERSION], np.int64),
             "points": self.points, "arrival": self.arrival,
@@ -690,7 +692,11 @@ class GritIndex:
             caps = GritCaps(grid_cap=v[0], frontier_cap=v[1], k_cap=v[2],
                             c_cap=v[3], m_cap=v[4], pair_cap=v[5],
                             grid_block=v[6], pair_block=v[7],
-                            merge_iters=v[8], use_kernels=bool(v[9]))
+                            merge_iters=v[8], use_kernels=bool(v[9]),
+                            # pre-packed-dispatch snapshots carry 10
+                            # slots; packed defaults on for them (a
+                            # dispatch strategy, not fitted state)
+                            packed=bool(v[10]) if len(v) > 10 else True)
         sf = np.asarray(snap["scalars_f"], np.float64)
         si = np.asarray(snap["scalars_i"], np.int64)
         merge_edges = None

@@ -37,7 +37,7 @@ def test_distributed_dbscan_exact_vs_brute():
         import numpy as np, jax
         from repro.data.seed_spreader import seed_spreader
         from repro.core.dbscan import brute_dbscan
-        from repro.core.distributed import distributed_dbscan, ClusterCaps
+        from repro.dist import distributed_dbscan, ClusterCaps
         from repro.core.device_dbscan import GritCaps
         from repro.core.validate import assert_dbscan_equivalent
 
@@ -65,7 +65,7 @@ def test_cluster_spanning_all_shards():
     out = _run("""
         import numpy as np, jax
         from repro.core.dbscan import brute_dbscan
-        from repro.core.distributed import distributed_dbscan, ClusterCaps
+        from repro.dist import distributed_dbscan, ClusterCaps
         from repro.core.device_dbscan import GritCaps
         from repro.core.validate import assert_dbscan_equivalent
 
@@ -138,7 +138,7 @@ def test_cluster_step_lowers_on_production_mesh():
     out = _run("""
         import numpy as np, jax, jax.numpy as jnp
         from repro.launch.mesh import make_production_mesh
-        from repro.core.distributed import make_cluster_step, ClusterCaps
+        from repro.dist import make_cluster_step, ClusterCaps
         from repro.core.device_dbscan import GritCaps
         from jax.sharding import NamedSharding, PartitionSpec as P
 
