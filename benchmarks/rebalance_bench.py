@@ -1,0 +1,273 @@
+"""BENCH_9: load-adaptive shard topology + replicated reads.
+
+Two serving-plane gates (ISSUE 10 acceptance):
+
+**Part A -- rebalanced vs static topology.**  The adversarial stream
+is skewed + drifting: a narrow insert/query window sweeps one long
+slab of the fitted index, depositing jittered copies of fit-time core
+points (bounded jitter keeps every label decision bit-identical to a
+never-sharded single index -- the correctness reference).  The slab
+topology was count-balanced at fit time, so the hot slab balloons:
+the delta engine's mutation cost has an O(n_shard) re-splice term,
+and every step pays it on the ballooned shard.  The rebalancer splits
+the hot slab as the load concentrates, bounding the per-step touch to
+the window's footprint (window + ghost bands + one sub-slab) instead
+of the whole slab extent -- that extent-over-footprint ratio is the
+mechanism, and the gate asks for >= 1.5x steady-state step throughput
+with every predict stream and the final ``labels_arrival``
+bit-identical to the single-index reference.
+
+**Part B -- replicated reads.**  Epoch-structured read-heavy traffic
+(one mutation batch, then many read batches) against one index vs a
+primary + R=2 :class:`~repro.index.ReplicaIndex`.  The single index
+serializes reads behind writes: wall = T_write + T_read.  Replicas
+catch up by replaying the primary's mutation log (cost ~= T_write)
+then each serves half the reads; with per-worker wall accounting
+(workers run on their own cores; the epoch pipeline overlaps the
+primary's next write with replica serving) the system wall is
+max(T_write, T_replay + T_read/2).  Read-heavy traffic (T_read >>
+T_write) pushes the throughput ratio toward R; the gate asks >= 1.8x
+at R=2, with every replica read bit-identical to the single index.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Any, Dict, List, Optional, Tuple
+
+import numpy as np
+
+EPS_A, MIN_PTS = 0.15, 6
+HOT_LEN = 24.0          # hot slab extent in x0 (the static pathology)
+WINDOW = 1.0            # drifting hot-window width
+
+# The mechanism, quantitatively: a static hot slab pays the delta
+# engine's O(n_shard) re-splice over the slab's full extent every
+# step, while a split topology pays it only over the insert window's
+# footprint (window + ghost bands + ~one sub-slab).  The steady-state
+# win is ~ extent / footprint, degraded by the density-proportional
+# decide/merge work that ghost copies duplicate -- so the geometry
+# wants a LONG hot slab, a NARROW window, and a small eps (thin ghost
+# bands, few candidates per grid).
+
+
+def _part_a_base(rng) -> np.ndarray:
+    """One long hot block (becomes slab 0: count-balancing puts 1/4 of
+    the points there) + three cold blobs."""
+    hot = np.column_stack([rng.uniform(0.0, HOT_LEN, 45000),
+                           rng.uniform(-10.0, 10.0, 45000)])
+    cold = [np.column_stack([rng.uniform(c, c + 6.0, 45000),
+                             rng.uniform(-8.0, 8.0, 45000)])
+            for c in (32.0, 42.0, 52.0)]
+    return np.concatenate([hot] + cold)
+
+
+def _mk_stream(rng, base, hot_core, S, m, mq):
+    """S steps of (insert batch, query batch): inserts jitter fit-time
+    core points inside a drifting window (85% of queries too), so no
+    step ever mints a fresh cluster id -- the bit-identity regime."""
+    xh = base[hot_core, 0]
+    out = []
+    for s in range(S):
+        w = 1.5 + (HOT_LEN - 3.0) * ((s * 0.37) % 1.0)
+        win = hot_core[(xh >= w - WINDOW / 2) & (xh <= w + WINDOW / 2)]
+        b = base[rng.choice(win, m)] + rng.normal(
+            scale=0.3 * EPS_A, size=(m, 2))
+        mh = int(mq * 0.7)
+        qh = base[rng.choice(win, mh)] + rng.normal(
+            scale=0.4 * EPS_A, size=(mh, 2))
+        qr = base[rng.integers(0, len(base), mq - mh)] + rng.normal(
+            scale=0.4 * EPS_A, size=(mq - mh, 2))
+        out.append((b, np.concatenate([qh, qr])))
+    return out
+
+
+def _slab_loads(idx, ins_stats, pred_stats) -> Optional[np.ndarray]:
+    """The serve driver's slab-load signal: owned routed queries +
+    mutated rows per shard (what the ``serve.slab.load`` gauges carry)."""
+    K = int(getattr(idx, "num_shards", 0))
+    if not K:
+        return None
+    load = np.zeros(K, np.float64)
+    owned = pred_stats.get("owned_per_shard")
+    if owned is not None:
+        load[:len(owned)] += owned
+    for s in ins_stats.get("per_shard", ()):
+        if s["shard"] < K:
+            load[s["shard"]] += s["own"] + s["ghost"]
+    return load
+
+
+def _run_stream(idx, warm, meas, rb=None):
+    """Serve warm + measured phases; returns (t_warm, t_meas, predict
+    outputs, hot/median ratios over the measured phase)."""
+    t_warm = t_meas = 0.0
+    preds: List[np.ndarray] = []
+    hot_over_med: List[float] = []
+    for phase, stream in (("warm", warm), ("meas", meas)):
+        for b, q in stream:
+            t0 = time.perf_counter()
+            ist = idx.insert(b)
+            pst: Dict[str, Any] = {}
+            preds.append(idx.predict(q, stats=pst))
+            load = _slab_loads(idx, ist, pst)
+            if load is not None:
+                if phase == "meas":
+                    hot_over_med.append(
+                        float(load.max()) / max(float(np.median(load)),
+                                                1e-9))
+                if rb is not None:
+                    rb.observe(load)
+                    rb.maybe_rebalance(idx)
+            dt = time.perf_counter() - t0
+            if phase == "warm":
+                t_warm += dt
+            else:
+                t_meas += dt
+    return t_warm, t_meas, preds, hot_over_med
+
+
+def bench_rebalance_serving(*, warm_steps: int = 24, warm_m: int = 30000,
+                            meas_steps: int = 20, meas_m: int = 600,
+                            mq: int = 50, seed: int = 0,
+                            n_shards: int = 4) -> List[Dict[str, Any]]:
+    """Part A: static vs rebalanced sharded serving on the skewed +
+    drifting stream, with a single-index bit-identity reference."""
+    from repro.dist.rebalance import RebalancePolicy, Rebalancer
+    from repro.index import fit_index, fit_sharded
+
+    rng = np.random.default_rng(seed)
+    base = _part_a_base(rng)
+    single = fit_index(base, EPS_A, MIN_PTS, engine="grit")
+    hot_core = np.flatnonzero(single.core_arrival()[:45000])
+    warm = _mk_stream(rng, base, hot_core, warm_steps, warm_m, mq)
+    meas = _mk_stream(rng, base, hot_core, meas_steps, meas_m, mq)
+    served = meas_steps * (meas_m + mq)   # rows+queries, measured phase
+
+    _, t_single, p_ref, _ = _run_stream(single, warm, meas)
+
+    static = fit_sharded(base, EPS_A, MIN_PTS, n_shards=n_shards)
+    tw_s, t_static, p_s, hot_med = _run_stream(static, warm, meas)
+
+    reb = fit_sharded(base, EPS_A, MIN_PTS, n_shards=n_shards)
+    # cold_factor=0: the adversarial window keeps the hot trigger
+    # saturated, so a nonzero merge threshold would thrash
+    # (merge-coldest frees capacity, split-hottest immediately spends
+    # it); the warm phase must SETTLE the topology so the measured
+    # phase is steady-state serving, not op transients
+    rb = Rebalancer(RebalancePolicy(period=2, max_shards=14,
+                                    hot_factor=2.0, cold_factor=0.0))
+    tw_r, t_reb, p_r, _ = _run_stream(reb, rb=rb, warm=warm, meas=meas)
+
+    bit_static = all(np.array_equal(a, b) for a, b in zip(p_ref, p_s))
+    bit_reb = all(np.array_equal(a, b) for a, b in zip(p_ref, p_r))
+    labels_static = np.array_equal(single.labels_arrival(),
+                                   static.labels_arrival())
+    labels_reb = np.array_equal(single.labels_arrival(),
+                                reb.labels_arrival())
+    return [{
+        "op": "rebalance_serving",
+        "n_base": int(len(base)),
+        "n_final": int(single.n_live),
+        "warm_steps": warm_steps, "meas_steps": meas_steps,
+        "warm_static_s": round(tw_s, 4), "warm_rebalanced_s": round(tw_r, 4),
+        "meas_single_s": round(t_single, 4),
+        "meas_static_s": round(t_static, 4),
+        "meas_rebalanced_s": round(t_reb, 4),
+        "static_rows_per_s": round(served / t_static, 1),
+        "rebalanced_rows_per_s": round(served / t_reb, 1),
+        "speedup_vs_static": round(t_static / t_reb, 3),
+        "hot_over_median_load": round(float(np.mean(hot_med)), 1),
+        "shards_static": int(static.num_shards),
+        "shards_rebalanced": int(reb.num_shards),
+        "topology_ops": len(rb.history),
+        "max_shard_n_static": int(max(s.n for s in static.shards)),
+        "max_shard_n_rebalanced": int(max(s.n for s in reb.shards)),
+        "predicts_bitwise_static": bool(bit_static),
+        "predicts_bitwise_rebalanced": bool(bit_reb),
+        "labels_bitwise_static": bool(labels_static),
+        "labels_bitwise_rebalanced": bool(labels_reb),
+    }]
+
+
+def bench_replicated_reads(*, n: int = 40000, epochs: int = 6,
+                           write_m: int = 30, read_batches: int = 40,
+                           read_q: int = 400, r: int = 2,
+                           seed: int = 0) -> List[Dict[str, Any]]:
+    """Part B: R replicated readers vs one read+write index, per-worker
+    wall accounting on epoch-structured read-heavy traffic."""
+    from repro.index import fit_index, make_replicas
+
+    eps, mp = 0.6, 6
+    rng = np.random.default_rng(seed)
+    base = np.concatenate([
+        rng.normal((c * 12.0, 0.0), 2.0, (n // 4, 2)) for c in range(4)])
+    single = fit_index(base, eps, mp, engine="grit")
+    primary = fit_index(base, eps, mp, engine="grit")
+    replicas = make_replicas(primary, r, auto_catch_up=False)
+    # steady-state measurement: the one-time lazy merge-graph build
+    # (paid by the first mutation on each index) is warmup, not traffic
+    for idx in (single, primary, *replicas):
+        (idx.index if hasattr(idx, "index") else idx).ensure_merge_graph()
+    core = np.flatnonzero(single.core_arrival())
+
+    stream: List[Tuple[np.ndarray, List[np.ndarray]]] = []
+    for _ in range(epochs):
+        w = base[rng.choice(core, write_m)] + rng.normal(
+            scale=0.3 * eps, size=(write_m, 2))
+        reads = [base[rng.integers(0, len(base), read_q)] + rng.normal(
+            scale=0.4 * eps, size=(read_q, 2)) for _ in range(read_batches)]
+        stream.append((w, reads))
+
+    wall_single = 0.0
+    # per-worker walls: primary (writes) + each replica (replay + its
+    # half of the reads); the epoch wall on separate cores is the max
+    wall_primary = 0.0
+    wall_replica = np.zeros(r)
+    wall_rep_total = 0.0
+    bitwise = True
+    for w_batch, reads in stream:
+        t0 = time.perf_counter()
+        single.insert(w_batch)
+        t_w = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        ref_out = [single.predict(q) for q in reads]
+        t_r = time.perf_counter() - t0
+        wall_single += t_w + t_r
+
+        t0 = time.perf_counter()
+        primary.insert(w_batch)
+        wall_primary += time.perf_counter() - t0
+        walls = []
+        for i, rep in enumerate(replicas):
+            t0 = time.perf_counter()
+            rep.catch_up()
+            share = reads[i::r]
+            out = [rep.predict(q) for q in share]
+            walls.append(time.perf_counter() - t0)
+            wall_replica[i] += walls[-1]
+            bitwise &= all(np.array_equal(a, b)
+                           for a, b in zip(out, ref_out[i::r]))
+        wall_rep_total += max(walls)
+
+    reads_total = epochs * read_batches * read_q
+    return [{
+        "op": "replicated_reads",
+        "n_base": int(len(base)), "replicas": r, "epochs": epochs,
+        "reads": reads_total,
+        "wall_single_s": round(wall_single, 4),
+        "wall_primary_s": round(wall_primary, 4),
+        "wall_replica_max_s": round(float(wall_replica.max()), 4),
+        "wall_replicated_s": round(wall_rep_total, 4),
+        "single_reads_per_s": round(reads_total / wall_single, 1),
+        "replicated_reads_per_s": round(reads_total / wall_rep_total, 1),
+        "speedup_vs_single": round(wall_single / wall_rep_total, 3),
+        "reads_bitwise_identical": bool(bitwise),
+        "replica_lag_after": [int(rep.lag) for rep in replicas],
+    }]
+
+
+def bench_rebalance(**kw) -> List[Dict[str, Any]]:
+    """Both BENCH_9 parts, one row each."""
+    return (bench_rebalance_serving(seed=kw.get("seed", 0)) +
+            bench_replicated_reads(seed=kw.get("seed", 0)))

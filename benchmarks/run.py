@@ -44,6 +44,14 @@ invocation then writes ``BENCH_7.json`` (traced-fit stage attribution,
 coverage >= 90%) and ``BENCH_8.json`` (warm distributed fit <= host
 grit fit at equal total n, with the halo padding-waste <= 25% and
 coverage checks riding along -- ROADMAP item 2's wall-clock gate).
+
+``--rebalance`` runs the load-adaptive topology benchmark (rebalanced
+vs static sharded serving on an adversarially skewed + drifting mixed
+stream, plus R=2 replicated reads vs a single read+write index) and
+writes ``BENCH_9.json``; four checks gate the run: rebalanced step
+throughput >= 1.5x static, hot slab >= 4x median load, replicated
+reads >= 1.8x single-index, and every read-out bit-identical to the
+single-index reference.
 """
 
 from __future__ import annotations
@@ -249,6 +257,50 @@ def _write_bench8(path: str, rows) -> bool:
     return wall_ok and cov_ok and halo_ok
 
 
+def _write_bench9(path: str, rows) -> bool:
+    """Dump the topology-rebalance + replica rows as BENCH_9.json.
+
+    Verdict (ISSUE 10's load-adaptive topology gate, all together):
+
+    * on the adversarially skewed + drifting mixed stream (hot slab
+      >= 4x the median shard load), load-triggered split/merge
+      rebalancing reaches >= 1.5x the static-topology step throughput;
+    * R=2 replicated reads reach >= 1.8x the single-index read
+      throughput (per-worker wall accounting);
+    * every predict stream and the final ``labels_arrival`` is
+      bit-identical to the static single-index reference, topology
+      ops and replica replay included."""
+    reb = [r for r in rows if r.get("op") == "rebalance_serving"]
+    rep = [r for r in rows if r.get("op") == "replicated_reads"]
+    reb_ok = bool(reb) and all(
+        r["speedup_vs_static"] >= 1.5 for r in reb)
+    skew_ok = bool(reb) and all(
+        r["hot_over_median_load"] >= 4.0 for r in reb)
+    rep_ok = bool(rep) and all(
+        r["speedup_vs_single"] >= 1.8 for r in rep)
+    bit_ok = (bool(reb) and bool(rep)
+              and all(r["predicts_bitwise_static"]
+                      and r["predicts_bitwise_rebalanced"]
+                      and r["labels_bitwise_static"]
+                      and r["labels_bitwise_rebalanced"] for r in reb)
+              and all(r["reads_bitwise_identical"] for r in rep))
+    payload = {
+        "bench": "BENCH_9",
+        "rows": rows,
+        "checks": {
+            "rebalanced_ge_1_5x_static_step_throughput": reb_ok,
+            "hot_slab_ge_4x_median_load": skew_ok,
+            "replicated_reads_ge_1_8x_single": rep_ok,
+            "predict_and_labels_bitwise_identical": bit_ok,
+        },
+    }
+    with open(path, "w") as f:
+        json.dump(_stamp(payload), f, indent=2)
+        f.write("\n")
+    print(f"wrote {path} ({len(rows)} rows)")
+    return reb_ok and skew_ok and rep_ok and bit_ok
+
+
 def _write_bench_obs(path: str, rows, ratio: float) -> bool:
     """Dump the tracing-overhead rows + verdict as BENCH_OBS.json.
 
@@ -342,6 +394,11 @@ def main() -> int:
     ap.add_argument("--trace-n", type=int, default=None,
                     help="fit-set size for the traced-fit attribution "
                          "half of --distributed (default: --dist-n)")
+    ap.add_argument("--rebalance", action="store_true",
+                    help="load-adaptive topology benchmark: rebalanced "
+                         "vs static sharded serving on a skewed + "
+                         "drifting stream, plus R=2 replicated reads; "
+                         "writes BENCH_9.json")
     ap.add_argument("--obs-overhead", action="store_true",
                     help="tracing-overhead gate only (serve throughput "
                          "with tracing on vs off, BENCH_3-shaped "
@@ -356,6 +413,7 @@ def main() -> int:
     args = ap.parse_args()
     if args.json_out is None:
         args.json_out = ("BENCH_4.json" if args.distributed
+                         else "BENCH_9.json" if args.rebalance
                          else "BENCH_5.json" if args.churn
                          else "BENCH_6.json" if args.serve_device
                          else "BENCH_3.json" if args.serve
@@ -397,6 +455,21 @@ def main() -> int:
               f"({args.dist_shards}-way mesh), coverage >= 90%, halo "
               f"padding waste <= 25%")
         return 0 if (ok and ok7 and ok8) else 1
+
+    if args.rebalance:
+        # host-side plane (numpy index + policy): no mesh flags needed
+        from benchmarks import rebalance_bench as RB
+        rows = RB.bench_rebalance()
+        csv_text = _print_csv(rows)
+        if args.out:
+            with open(args.out, "w") as f:
+                f.write(csv_text)
+        ok = _write_bench9(args.json_out, rows)
+        print(f"[{'PASS' if ok else 'FAIL'}] rebalanced serving >= "
+              f"1.5x static topology on the skewed drifting stream, "
+              f"R=2 replicated reads >= 1.8x single-index, all "
+              f"read-outs bit-identical")
+        return 0 if ok else 1
 
     if args.obs_overhead:
         from benchmarks import obs_bench as OB

@@ -8,6 +8,9 @@ shim) is now a package with one module per concern:
   cuts along dim 0, vectorized shard packing/unpacking, halo bound.
 * :mod:`repro.dist.halo`      -- device-side halo compaction (the fixed
   cap buffers exchanged between neighbor shards).
+* :mod:`repro.dist.rebalance` -- load-triggered topology policy: EWMA
+  per-shard load, bounded split-hottest / merge-coldest actuation on a
+  :class:`repro.index.ShardedGritIndex`.
 * :mod:`repro.dist.reconcile` -- cross-shard label reconciliation: edge
   construction over shared core points + the replicated global
   component map.
@@ -26,12 +29,14 @@ See DESIGN.md §5 for the sharding strategy and exactness argument.
 from .sharding import (halo_bound, owner_of_slab, shard_points_by_slab,
                        slab_cuts)
 from .halo import boundary_census, census_halo_cap, halo_buffer
+from .rebalance import RebalancePolicy, Rebalancer
 from .step import ClusterCaps, cached_cluster_step, make_cluster_step
 from .api import DistributedFitResult, distributed_dbscan, distributed_fit
 
 __all__ = [
-    "ClusterCaps", "DistributedFitResult", "boundary_census",
-    "cached_cluster_step", "census_halo_cap", "distributed_dbscan",
-    "distributed_fit", "halo_bound", "halo_buffer", "make_cluster_step",
-    "owner_of_slab", "shard_points_by_slab", "slab_cuts",
+    "ClusterCaps", "DistributedFitResult", "RebalancePolicy", "Rebalancer",
+    "boundary_census", "cached_cluster_step", "census_halo_cap",
+    "distributed_dbscan", "distributed_fit", "halo_bound", "halo_buffer",
+    "make_cluster_step", "owner_of_slab", "shard_points_by_slab",
+    "slab_cuts",
 ]

@@ -20,13 +20,16 @@ graph.  See DESIGN.md §7 for the state layouts and exactness
 arguments.
 """
 
-from .delta import build_merge_graph, compact, delete_ids, insert_batch
+from .delta import (MutationLog, build_merge_graph, compact, delete_ids,
+                    insert_batch)
 from .grit_index import GritIndex, PredictCaps
+from .replica import ReplicaIndex, make_replicas
 from .sharded import LabelMap, ShardedGritIndex, fit_sharded
 
-__all__ = ["GritIndex", "LabelMap", "PredictCaps", "ShardedGritIndex",
-           "build_merge_graph", "compact", "delete_ids", "fit_index",
-           "fit_sharded", "insert_batch"]
+__all__ = ["GritIndex", "LabelMap", "MutationLog", "PredictCaps",
+           "ReplicaIndex", "ShardedGritIndex", "build_merge_graph",
+           "compact", "delete_ids", "fit_index", "fit_sharded",
+           "insert_batch", "make_replicas"]
 
 
 def fit_index(points, eps: float, min_pts: int, *, engine: str = "auto",

@@ -60,7 +60,7 @@ from-scratch ``cluster()`` on the surviving set.
 from __future__ import annotations
 
 import time
-from typing import Any, Dict, Optional
+from typing import Any, Dict, List, Optional, Tuple
 
 import numpy as np
 
@@ -68,8 +68,79 @@ from repro import obs
 from repro.core.grids import group_rows
 from repro.core.merging import fast_merging
 
-__all__ = ["build_merge_graph", "grid_components", "insert_batch",
-           "delete_ids", "compact", "relabel_local_components"]
+__all__ = ["MutationLog", "build_merge_graph", "grid_components",
+           "insert_batch", "delete_ids", "compact",
+           "relabel_local_components"]
+
+
+# --------------------------------------------------------------------------
+# mutation log (replica replay)
+# --------------------------------------------------------------------------
+
+class MutationLog:
+    """Ordered record of an index's *top-level* mutation batches.
+
+    The delta engine is deterministic: applying the same ``(insert,
+    delete)`` batches in the same order to the same starting state
+    reproduces the fitted state bit for bit.  That makes the mutation
+    *arguments* a sufficient replication log -- no per-row state diffs
+    on the wire -- and the engine itself the replay operator.  A
+    read-only :class:`~repro.index.replica.ReplicaIndex` clones the
+    primary's snapshot and then replays ``since(cursor)``.
+
+    Records are ``(op, payload)`` with ``op`` in ``{"insert",
+    "delete", "split", "merge"}`` and ``payload`` the verbatim batch
+    (``[m, d]`` float64 coordinates / raw requested arrival ids --
+    rejected ids replay to the same rejections, so they stay in the
+    record / the ``[1]`` shard index of a sharded topology op, which
+    must replay too: in the localized regime a topology op re-mints
+    label ids, and a replica that skipped it would drift in the id
+    space even though the partition agrees).  ``base`` is the
+    op sequence number of the first retained record: :meth:`truncate`
+    drops a replayed prefix without renumbering, so replica cursors
+    stay valid as long as they are >= ``base``.
+    """
+
+    def __init__(self, base: int = 0):
+        self.base = int(base)
+        self.records: List[Tuple[str, np.ndarray]] = []
+
+    @property
+    def end(self) -> int:
+        """Sequence number one past the last recorded op."""
+        return self.base + len(self.records)
+
+    def __len__(self) -> int:
+        return len(self.records)
+
+    def append(self, op: str, payload: np.ndarray) -> None:
+        if op not in ("insert", "delete", "split", "merge"):
+            raise ValueError(f"unknown mutation-log op {op!r}")
+        self.records.append((op, np.asarray(payload).copy()))
+
+    def since(self, cursor: int) -> List[Tuple[str, np.ndarray]]:
+        """The records a replica at ``cursor`` still has to replay.
+
+        Raises ``ValueError`` when the prefix up to ``cursor`` was
+        already truncated away -- the replica is too stale to catch up
+        and must re-clone from a fresh snapshot.
+        """
+        if cursor < self.base:
+            raise ValueError(
+                f"mutation-log cursor {cursor} predates the log base "
+                f"{self.base}: the prefix was truncated; re-clone the "
+                f"replica from a fresh snapshot")
+        return self.records[cursor - self.base:]
+
+    def truncate(self, keep_from: int) -> int:
+        """Drop records before op ``keep_from`` (bounded retention);
+        returns how many were dropped.  Sequence numbers are stable:
+        ``base`` advances instead of renumbering."""
+        drop = min(max(keep_from - self.base, 0), len(self.records))
+        if drop:
+            del self.records[:drop]
+            self.base += drop
+        return drop
 
 
 # --------------------------------------------------------------------------
@@ -462,10 +533,20 @@ def _reconcile_noncore(index, grid_of: np.ndarray, changed: np.ndarray,
     if len(nc):
         mapped = remap[lab[nc]]
         if direction > 0:
-            # insertion never splits or vanishes a cluster: every
-            # labeled border remaps directly; only noise can flip
-            ctr["relabeled"] += int((mapped != lab[nc]).sum())
-            lab[nc] = mapped
+            # insertion never splits or vanishes a cluster within one
+            # fit lineage, so labeled borders remap directly -- EXCEPT
+            # in a shard freshly built by a topology op (split/merge
+            # pools a slab-local view), where one pooled cluster id can
+            # span several *local* components: those borders arrive
+            # here with a negative remap and must take the
+            # from-scratch nearest-core test instead of inheriting the
+            # sentinel verbatim
+            risky = mapped < 0
+            ctr["relabeled"] += int((mapped[~risky]
+                                     != lab[nc[~risky]]).sum())
+            lab[nc[~risky]] = mapped[~risky]
+            if risky.any():
+                suspects.append(nc[risky])
         else:
             risky = (mapped < 0) | in_stencil[grid_of[nc]]
             ctr["relabeled"] += int((mapped[~risky]

@@ -43,6 +43,7 @@ from repro.core.grid_tree import GridTree
 from repro.core.device_dbscan import GritCaps
 from repro.engine.adaptive import _pow2_at_least
 
+from .delta import MutationLog
 from .snapshot_io import (check_version, load_snapshot, save_snapshot)
 
 # v2 adds the mutation-plane state: ``alive`` tombstone flags,
@@ -144,6 +145,17 @@ class GritIndex:
     # ensure_device_state().  Host numpy stays authoritative -- the
     # mirror is derived state (like _tree), never snapshotted.
     device_state: Optional[Any] = dataclasses.field(
+        default=None, repr=False, compare=False)
+    # Replication plane (repro.index.replica): ops_applied counts the
+    # top-level insert/delete batches this index has absorbed -- the
+    # cursor a read replica replays from -- and, once a MutationLog is
+    # attached (enable_mutation_log), every such batch is appended
+    # verbatim after it applies.  The log is runtime state shared with
+    # the replicas, never snapshotted; a restored clone starts its own
+    # count from the cursor its snapshot schema carries (0 here: the
+    # single-host snapshot stays v2).
+    ops_applied: int = 0
+    mutation_log: Optional[MutationLog] = dataclasses.field(
         default=None, repr=False, compare=False)
 
     def __post_init__(self):
@@ -614,19 +626,42 @@ class GritIndex:
         """Detach the resident mirror (serving falls back to host)."""
         self.device_state = None
 
+    def enable_mutation_log(self) -> MutationLog:
+        """Attach (or return) the replication log.
+
+        From this call on, every top-level :meth:`insert` /
+        :meth:`delete` batch is appended verbatim; the log base is the
+        current :attr:`ops_applied`, so a replica cloned from a
+        snapshot taken *now* starts exactly at the log base."""
+        if self.mutation_log is None:
+            self.mutation_log = MutationLog(base=self.ops_applied)
+        return self.mutation_log
+
+    def _log_mutation(self, op: str, payload: np.ndarray) -> None:
+        self.ops_applied += 1
+        if self.mutation_log is not None:
+            self.mutation_log.append(op, payload)
+
     def insert(self, points) -> Dict[str, Any]:
         """Micro-batch incremental insert (stats schema: see
         :func:`repro.index.delta.insert_batch`)."""
         from .delta import insert_batch
-        return insert_batch(self, points)
+        pts = np.asarray(points, np.float64)
+        st = insert_batch(self, pts)
+        self._log_mutation("insert", pts)
+        return st
 
     def delete(self, arrival_ids) -> Dict[str, Any]:
         """Exact micro-batch delete by arrival id (stats schema: see
         :func:`repro.index.delta.delete_ids`).  Unknown or already
         deleted ids are rejected, not raised -- serving traffic carries
-        them routinely (double deletes, TTL races)."""
+        them routinely (double deletes, TTL races); they stay in the
+        mutation-log record (a replay rejects them identically)."""
         from .delta import delete_ids
-        return delete_ids(self, arrival_ids)
+        ids = np.asarray(arrival_ids, np.int64)
+        st = delete_ids(self, ids)
+        self._log_mutation("delete", ids)
+        return st
 
     def compact(self) -> Dict[str, Any]:
         """Re-pack the flat arrays, dropping tombstoned rows (called

@@ -60,26 +60,53 @@ survived the delete is still witnessed by a shared core near a cut
 anything no longer witnessed falls apart into the per-shard components
 the delta engine already split.  The registries are boundary-sized, so
 the rebuild costs O(ghost copies), not O(n).
+
+**Topology ops** (split / merge).  The slab partition itself is
+mutable: :meth:`split_shard` re-cuts one slab at a fresh interior
+grid line and :meth:`merge_shards` concatenates two adjacent slabs --
+the load-adaptive rebalancing primitive (``repro.dist.rebalance``).
+Both are *pure re-partitions of existing physical copies*: shard k's
+own points plus its ghost band cover every sub-slab's coverage
+([sub - 2eps, sub + 2eps) ⊂ [slab - 2eps, slab + 2eps)), so the new
+shard(s) are built by ``GritIndex.from_fit`` over the pooled copies
+with their *canonical* (map-resolved) labels and owner-exact core
+flags -- no distance work, no identity change.  Cross-shard identity
+is then re-derived by the same witness-edge map rebuild the delete
+path uses: exhaustive in the insert-only regime because witnesses only
+accumulate (so read-outs stay **bit-identical**), and exhaustive under
+the localization invariant otherwise (the new shards re-mint per local
+component, so the partition is preserved while ids may re-mint, same
+as any delete).  Every op is recorded in ``cut_history`` (snapshot v3).
+
+**Mutation log.**  ``enable_mutation_log()`` attaches a
+:class:`~repro.index.delta.MutationLog`: every top-level insert /
+delete / topology batch is appended verbatim, and ``ops_applied`` is
+the replay cursor a read-only :class:`~repro.index.replica.ReplicaIndex`
+catches up from.  The delta engine is deterministic, so a replica that
+cloned this index's snapshot and replayed the log serves ``predict``
+bit-identically to the primary.
 """
 
 from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Any, Dict, List, Optional
+from typing import Any, Dict, List, Optional, Tuple
 
 import numpy as np
 
 from repro.dist.sharding import owner_of_slab, slab_cuts
 
+from .delta import MutationLog
 from .grit_index import GritIndex
 from .snapshot_io import check_version, load_snapshot, save_snapshot
 
 # v2 carries deletions (tombstoned global ids appear as owner_shard ==
-# -1 and the per-shard sub-snapshots are v2); v1 snapshots restore
-# unchanged.
-_SHARDED_SNAPSHOT_VERSION = 2
-_SHARDED_ACCEPTED = (1, 2)
+# -1 and the per-shard sub-snapshots are v2); v3 adds the topology-op
+# cut history and the mutation-log cursor (``ops_applied``); v1/v2
+# snapshots restore unchanged (empty history, cursor 0).
+_SHARDED_SNAPSHOT_VERSION = 3
+_SHARDED_ACCEPTED = (1, 2, 3)
 
 
 class LabelMap:
@@ -167,6 +194,18 @@ class ShardedGritIndex:
     # True once per-shard labels are per-local-component with disjoint
     # arenas (the invariant deletion needs; see _ensure_localized)
     localized: bool = False
+    # Topology-op provenance: ("split" | "merge", shard, cut coordinate)
+    # in application order.  Snapshot v3 carries it (with the mutation-
+    # log cursor below), so a restored index knows how its cuts evolved
+    # from the fit-time partition.
+    cut_history: List[Tuple[str, int, float]] = dataclasses.field(
+        default_factory=list)
+    # Replication plane: ops_applied counts the top-level mutation /
+    # topology batches absorbed (the replica replay cursor, snapshot
+    # v3); the attached log itself is runtime state, never snapshotted.
+    ops_applied: int = 0
+    mutation_log: Optional[MutationLog] = dataclasses.field(
+        default=None, repr=False, compare=False)
 
     # ------------------------------------------------------------------
     # construction
@@ -288,6 +327,26 @@ class ShardedGritIndex:
         """Sorted global ids of the surviving points (what
         :meth:`labels_arrival` rows correspond to)."""
         return np.flatnonzero(self.owner_shard >= 0)
+
+    # ------------------------------------------------------------------
+    # mutation log (replica replay)
+    # ------------------------------------------------------------------
+
+    def enable_mutation_log(self) -> MutationLog:
+        """Attach (or return) the replication log.
+
+        From this call on, every top-level :meth:`insert` /
+        :meth:`delete` / topology batch is appended verbatim; the log
+        base is the current :attr:`ops_applied`, so a replica cloned
+        from a snapshot taken *now* starts exactly at the log base."""
+        if self.mutation_log is None:
+            self.mutation_log = MutationLog(base=self.ops_applied)
+        return self.mutation_log
+
+    def _log_mutation(self, op: str, payload: np.ndarray) -> None:
+        self.ops_applied += 1
+        if self.mutation_log is not None:
+            self.mutation_log.append(op, payload)
 
     # ------------------------------------------------------------------
     # predict
@@ -442,6 +501,7 @@ class ShardedGritIndex:
         self.owner_row = np.concatenate([self.owner_row, owner_row_new])
         self.label_map.grow(self.next_label)
         unions = self._reconcile(touched)
+        self._log_mutation("insert", B)
         return {"op": "insert", "inserted": m, "n": self.n,
                 "n_live": self.n_live,
                 **{f: sum(s[f] for s in per_shard)
@@ -598,6 +658,7 @@ class ShardedGritIndex:
         self.owner_shard[gids] = -1
         self.owner_row[gids] = -1
         unions = self._rebuild_label_map()
+        self._log_mutation("delete", ids)
         return {"op": "delete", "requested": int(len(ids)),
                 "deleted": int(len(gids)),
                 "rejected": int(len(rejected)), "rejected_ids": rejected,
@@ -625,6 +686,187 @@ class ShardedGritIndex:
         return unions
 
     # ------------------------------------------------------------------
+    # topology ops (split / merge -- see module docstring)
+    # ------------------------------------------------------------------
+
+    def _copy_state(self, k: int):
+        """Every physical copy shard k holds (own block first, then
+        ghosts): global ids, coordinates, *canonical* (map-resolved)
+        labels and owner-exact core flags -- the pooled state a
+        topology op re-partitions.  Labels and core flags come from the
+        authoritative (owner) copy of each point, so they are exact for
+        ghosts too."""
+        shard = self.shards[k]
+        gids = np.concatenate([self.own_gids[k], self.ghost_gids[k]])
+        arr = np.concatenate([self.own_rows[k], self.ghost_rows[k]])
+        # registries are pruned on delete, so every registered copy is
+        # live and rows_of_arrival cannot return -1 here
+        pts = shard.points[shard.rows_of_arrival(arr)]
+        labels = np.full(len(gids), -1, np.int64)
+        core = np.zeros(len(gids), bool)
+        own_s = self.owner_shard[gids]
+        for o in np.unique(own_s):
+            sel = own_s == o
+            orow = self.owner_row[gids[sel]]
+            labels[sel] = self.shards[int(o)].labels_at(orow)
+            core[sel] = self.shards[int(o)].core_at(orow)
+        return gids, pts, self.label_map.resolve(labels), core
+
+    def _install_shards(self, k: int, j: int, subs, pools) -> None:
+        """Replace shards ``k..j`` with ``subs`` (built from ``pools``
+        of (gids, oidx, gidx) selections): splice the shard list and
+        registries, rewrite the owner router, re-localize the new
+        shards when the localization invariant is on, and rebuild the
+        global map from the surviving witness edges."""
+        delta_k = len(subs) - (j - k + 1)
+        shift = self.owner_shard > j
+        self.shards[k:j + 1] = subs
+        self.own_rows[k:j + 1] = [np.arange(len(oidx), dtype=np.int64)
+                                  for _, oidx, _ in pools]
+        self.own_gids[k:j + 1] = [gids[oidx] for gids, oidx, _ in pools]
+        self.ghost_rows[k:j + 1] = [
+            len(oidx) + np.arange(len(gidx), dtype=np.int64)
+            for _, oidx, gidx in pools]
+        self.ghost_gids[k:j + 1] = [gids[gidx] for gids, _, gidx in pools]
+        # router: shift the shards beyond the spliced range first (the
+        # -1 tombstones are excluded by the > j mask), then point the
+        # re-partitioned owners at their new shard / arrival id
+        self.owner_shard[shift] += delta_k
+        for h, (gids, oidx, _) in enumerate(pools):
+            og = gids[oidx]
+            self.owner_shard[og] = k + h
+            self.owner_row[og] = np.arange(len(oidx), dtype=np.int64)
+        if self.localized:
+            # the sub-shards carry canonical labels; re-mint per local
+            # component so the localization invariant (one raw label ==
+            # one local component, disjoint arenas) survives the op
+            from .delta import relabel_local_components
+            for sub in subs:
+                sub.next_label = self.next_label
+                relabel_local_components(sub)
+                self.next_label = sub.next_label
+
+    def split_shard(self, k: int) -> Dict[str, Any]:
+        """Split shard ``k`` at a fresh interior grid-line cut.
+
+        The cut comes from :func:`repro.dist.sharding.slab_cuts` over
+        the slab's *own* points (the same equal-count-on-grid-lines
+        policy as the fit-time partition), so both halves are
+        non-empty; a slab whose own points share a single dim-0 grid
+        column has no interior grid line and raises ``ValueError``
+        (the caller -- e.g. the rebalancer -- treats that slab as
+        unsplittable).  Pure re-partition of existing physical copies:
+        read-outs are bit-identical in the insert-only regime and
+        partition-identical under localization (module docstring).
+
+        Returns an op-stats dict (``op="split"``, the new ``cut``, the
+        two half sizes, ``reconcile_unions`` of the map rebuild).
+        """
+        t0 = time.perf_counter()
+        K = self.num_shards
+        if not 0 <= k < K:
+            raise ValueError(f"split_shard: no shard {k} (have {K})")
+        lo, hi = self._slab_bounds(k)
+        n_own = len(self.own_gids[k])
+        gids, pts, labels, core = self._copy_state(k)
+        if n_own >= 2:
+            _, cut_idx, cut_coords = slab_cuts(pts[:n_own], self.eps, 2)
+        if n_own < 2 or not np.isfinite(cut_coords[0]) \
+                or not 0 < int(cut_idx[0]) < n_own:
+            raise ValueError(
+                f"split_shard({k}): slab has no interior grid-line cut "
+                f"({n_own} own points"
+                + ("" if n_own < 2 else " in one dim-0 grid column")
+                + "); shard is unsplittable")
+        c = float(cut_coords[0])
+        band = 2.0 * self.eps
+        x0 = pts[:, 0]
+        is_own = np.zeros(len(gids), bool)
+        is_own[:n_own] = True
+        subs, pools = [], []
+        for slo, shi in ((lo, c), (c, hi)):
+            own_sel = is_own & (x0 >= slo) & (x0 < shi)
+            ghost_sel = (~own_sel) & (x0 >= slo - band) & (x0 < shi + band)
+            oidx = np.flatnonzero(own_sel)
+            gidx = np.flatnonzero(ghost_sel)
+            sel = np.concatenate([oidx, gidx])
+            sub = GritIndex.from_fit(
+                pts[sel], self.eps, self.min_pts, labels=labels[sel],
+                core=core[sel])
+            # eager: a topology op is amortized by the rebalance period,
+            # so the merge-graph build belongs here, not in the first
+            # serving-path insert to touch the fresh shard
+            sub.ensure_merge_graph()
+            subs.append(sub)
+            pools.append((gids, oidx, gidx))
+        self.cuts = np.concatenate(
+            [self.cuts[:k], np.asarray([c], np.float64), self.cuts[k:]])
+        self._install_shards(k, k, subs, pools)
+        unions = self._rebuild_label_map()
+        self.cut_history.append(("split", int(k), c))
+        self._log_mutation("split", np.asarray([k], np.int64))
+        return {"op": "split", "shard": int(k), "cut": c,
+                "n_left": int(len(pools[0][1])),
+                "n_right": int(len(pools[1][1])),
+                "num_shards": self.num_shards,
+                "reconcile_unions": unions,
+                "t_total": time.perf_counter() - t0}
+
+    def merge_shards(self, k: int, j: Optional[int] = None
+                     ) -> Dict[str, Any]:
+        """Merge adjacent shards ``k`` and ``k + 1`` (the split
+        inverse): pool both shards' physical copies (deduplicated by
+        global id -- a point can be own in one and ghost in the other),
+        build one shard over the union slab, drop the cut between
+        them.  Pure re-partition, same exactness contract as
+        :meth:`split_shard`.
+
+        Returns an op-stats dict (``op="merge"``, the ``cut`` removed,
+        the merged size, ``reconcile_unions`` of the map rebuild).
+        """
+        t0 = time.perf_counter()
+        K = self.num_shards
+        if j is None:
+            j = k + 1
+        if j != k + 1 or not 0 <= k < j < K:
+            raise ValueError(
+                f"merge_shards: need adjacent shards (k, k+1) within "
+                f"0..{K - 1}, got ({k}, {j})")
+        lo, _ = self._slab_bounds(k)
+        _, hi = self._slab_bounds(j)
+        removed = float(self.cuts[k])
+        g0, p0, l0, c0 = self._copy_state(k)
+        g1, p1, l1, c1 = self._copy_state(j)
+        gids = np.concatenate([g0, g1])
+        # dedupe to one physical copy per global id (ghost copies are
+        # verbatim splices of the owner's coordinates, so any copy is
+        # authoritative for the pooled build)
+        gids, first = np.unique(gids, return_index=True)
+        pts = np.concatenate([p0, p1])[first]
+        labels = np.concatenate([l0, l1])[first]
+        core = np.concatenate([c0, c1])[first]
+        band = 2.0 * self.eps
+        x0 = pts[:, 0]
+        own_sel = np.isin(self.owner_shard[gids], (k, j))
+        ghost_sel = (~own_sel) & (x0 >= lo - band) & (x0 < hi + band)
+        oidx = np.flatnonzero(own_sel)
+        gidx = np.flatnonzero(ghost_sel)
+        sel = np.concatenate([oidx, gidx])
+        sub = GritIndex.from_fit(pts[sel], self.eps, self.min_pts,
+                                 labels=labels[sel], core=core[sel])
+        sub.ensure_merge_graph()  # charge the build to the amortized op
+        self.cuts = np.concatenate([self.cuts[:k], self.cuts[k + 1:]])
+        self._install_shards(k, j, [sub], [(gids, oidx, gidx)])
+        unions = self._rebuild_label_map()
+        self.cut_history.append(("merge", int(k), removed))
+        self._log_mutation("merge", np.asarray([k], np.int64))
+        return {"op": "merge", "shard": int(k), "cut": removed,
+                "n_merged": int(len(oidx)),
+                "num_shards": self.num_shards,
+                "reconcile_unions": unions,
+                "t_total": time.perf_counter() - t0}
+
+    # ------------------------------------------------------------------
     # snapshot / restore
     # ------------------------------------------------------------------
 
@@ -639,10 +881,18 @@ class ShardedGritIndex:
             "scalars_f": np.asarray([self.eps], np.float64),
             "scalars_i": np.asarray(
                 [self.min_pts, self.next_label, self.num_shards,
-                 int(self.localized)], np.int64),
+                 int(self.localized), self.ops_applied], np.int64),
             "label_parent": self.label_map.parent.copy(),
             "owner_shard": self.owner_shard.copy(),
             "owner_row": self.owner_row.copy(),
+            # v3: topology-op provenance (kind 0=split, 1=merge)
+            "cut_hist_kind": np.asarray(
+                [0 if op == "split" else 1
+                 for op, _, _ in self.cut_history], np.int64),
+            "cut_hist_shard": np.asarray(
+                [s for _, s, _ in self.cut_history], np.int64),
+            "cut_hist_coord": np.asarray(
+                [c for _, _, c in self.cut_history], np.float64),
         }
         for k, idx in enumerate(self.shards):
             for key, v in idx.snapshot().items():
@@ -678,6 +928,14 @@ class ShardedGritIndex:
                                          np.int64))
             ghost_gids.append(np.asarray(snap[f"shard{k}.ghost_gids"],
                                          np.int64))
+        # v1/v2 snapshots carry no topology history or replay cursor
+        hist: List[Tuple[str, int, float]] = []
+        if "cut_hist_kind" in snap:
+            hist = [("split" if int(kk) == 0 else "merge", int(s),
+                     float(c))
+                    for kk, s, c in zip(snap["cut_hist_kind"],
+                                        snap["cut_hist_shard"],
+                                        snap["cut_hist_coord"])]
         return cls(shards=shards,
                    cuts=np.asarray(snap["cuts"], np.float64),
                    eps=float(sf[0]), min_pts=int(si[0]),
@@ -688,7 +946,9 @@ class ShardedGritIndex:
                    ghost_rows=ghost_rows, ghost_gids=ghost_gids,
                    owner_shard=np.asarray(snap["owner_shard"], np.int64),
                    owner_row=np.asarray(snap["owner_row"], np.int64),
-                   localized=bool(si[3]) if len(si) > 3 else False)
+                   localized=bool(si[3]) if len(si) > 3 else False,
+                   cut_history=hist,
+                   ops_applied=int(si[4]) if len(si) > 4 else 0)
 
     def save(self, path) -> None:
         save_snapshot(path, self.snapshot())

@@ -36,12 +36,29 @@ traffic against a fitted :class:`~repro.index.GritIndex`:
   step's batch by owning slab internally (one batched per-shard call)
   and reports the routing counters (queries per slab, multi-routed
   cut-band queries) through the same per-step ``stats`` channel, so the
-  step log shows slab occupancy next to slot occupancy.
+  step log shows slab occupancy next to slot occupancy.  Per-step slab
+  load (owned routed queries + mutated rows per shard) is promoted to
+  ``repro.obs`` gauges -- ``serve.slab.load.<k>`` and the max/mean
+  ``serve.slab.imbalance`` -- on both the per-server registry and the
+  process default, so the rebalance trigger is visible in
+  ``repro.obs.view`` and trace exports;
+* ``rebalance=`` attaches a :class:`~repro.dist.rebalance.Rebalancer`:
+  the slab-load gauges feed its EWMA and *between* steps it applies at
+  most one bounded topology op (split the hottest slab / merge the
+  coldest adjacent pair) to the sharded backend, recorded in
+  ``topology_events``;
+* ``replicas=R`` clones R read-only :class:`~repro.index.ReplicaIndex`
+  off the primary (mutation-log replay plane) and fans each step's
+  predict batch across them round-robin -- mutations keep hitting the
+  primary, replicas catch up from its log before answering, so the
+  labels stay bit-identical to primary serving.
 
 ``python -m repro.serve.driver --smoke`` runs a miniature server on a
 catalogue scenario: fit, then serve a stream of ragged query batches;
 ``--sharded N`` serves from an N-slab ``ShardedGritIndex`` instead of
-the single-host index (the distributed-serving backend).
+the single-host index (the distributed-serving backend);
+``--rebalance`` / ``--replicas R`` attach the topology and replica
+planes above.
 """
 
 from __future__ import annotations
@@ -85,7 +102,8 @@ class ClusterServer:
     """Continuous-batching predict server over a fitted index."""
 
     def __init__(self, index, *, slots: int = 4, query_cap: int = 64,
-                 mode: str = "auto", device_state: bool = False):
+                 mode: str = "auto", device_state: bool = False,
+                 rebalance=None, replicas: int = 0):
         self.index = index
         self.slots = int(slots)
         self.query_cap = _pow2_at_least(query_cap, lo=8)
@@ -95,6 +113,28 @@ class ClusterServer:
         self.growth_events: List[Dict[str, Any]] = []
         self.step_log: List[Dict[str, Any]] = []
         self.rejected_ids: List[np.ndarray] = []   # delete telemetry
+        # topology plane: load-triggered split/merge between steps
+        self.rebalancer = None
+        self.topology_events: List[Dict[str, Any]] = []
+        if rebalance is not None and rebalance is not False:
+            from repro.dist.rebalance import RebalancePolicy, Rebalancer
+            if isinstance(rebalance, Rebalancer):
+                self.rebalancer = rebalance
+            elif isinstance(rebalance, RebalancePolicy):
+                self.rebalancer = Rebalancer(rebalance)
+            else:
+                self.rebalancer = Rebalancer()
+            if not hasattr(index, "split_shard"):
+                raise ValueError(
+                    "rebalance= needs a backend with topology ops; "
+                    f"{type(index).__name__} has no split_shard()")
+        # replica plane: read-only clones fed by the primary's log;
+        # each step's predict batch goes to one replica round-robin
+        self.replicas: List[Any] = []
+        self._rr = 0
+        if replicas:
+            from repro.index.replica import make_replicas
+            self.replicas = make_replicas(index, int(replicas))
         # per-server books (a process may run many servers; the shared
         # default registry keeps only cross-cutting counters) -- the
         # summary() aggregates are a view over these instruments
@@ -231,7 +271,14 @@ class ClusterServer:
             pstats: Dict[str, Any] = {}
             flat = (np.concatenate([r.points for r in predicts])
                     if predicts else np.zeros((0, self.index.d)))
-            dispatch = getattr(self.index, "predict_async", None)
+            # read fan-out: mutations hit the primary above; the step's
+            # predict batch goes to one replica round-robin (it catches
+            # up from the log first, so answers are bit-identical)
+            reader = self.index
+            if self.replicas and len(flat):
+                reader = self.replicas[self._rr % len(self.replicas)]
+                self._rr += 1
+            dispatch = getattr(reader, "predict_async", None)
             # queue wait: admission (queue pop) -> this batch's dispatch
             t_disp = time.perf_counter()
             qw_ms = [(t_disp - r.t_admit) * 1e3 for r in active]
@@ -243,8 +290,8 @@ class ClusterServer:
                 elif dispatch is not None:
                     resolve = dispatch(flat, mode=self.mode, stats=pstats)
                 else:
-                    out = self.index.predict(flat, mode=self.mode,
-                                             stats=pstats)
+                    out = reader.predict(flat, mode=self.mode,
+                                         stats=pstats)
                     resolve = lambda: out
             # admit the next step's batch while the dispatched work runs
             with obs.span("serve.step.admit_next"):
@@ -254,6 +301,32 @@ class ClusterServer:
                 flat_labels = resolve()
             kernel_s += pstats.get("t_kernel", 0.0)
             pack_s += pstats.get("t_pack", 0.0)
+            # slab-load gauges: owned routed queries + mutated rows per
+            # shard -- the rebalance trigger, exported on both the
+            # per-server registry and the process default registry so
+            # it shows in repro.obs.view and trace exports
+            num_shards = int(getattr(self.index, "num_shards", 0))
+            if num_shards:
+                slab_load = np.zeros(num_shards, np.float64)
+                owned = pstats.get("owned_per_shard")
+                if owned is not None:
+                    slab_load[:len(owned)] += owned
+                for r in active:
+                    if r.result is not None:
+                        for s in r.result.get("per_shard", ()):
+                            if s["shard"] < num_shards:
+                                slab_load[s["shard"]] += \
+                                    s["own"] + s["ghost"]
+                mean = float(slab_load.mean())
+                imb = float(slab_load.max()) / mean if mean > 0 else 1.0
+                for k in range(num_shards):
+                    v = float(slab_load[k])
+                    reg.gauge(f"serve.slab.load.{k}").set(v)
+                    obs.gauge(f"serve.slab.load.{k}").set(v)
+                reg.gauge("serve.slab.imbalance").set(imb)
+                obs.gauge("serve.slab.imbalance").set(imb)
+                if self.rebalancer is not None:
+                    self.rebalancer.observe(slab_load)
             t_step = time.perf_counter() - t0
             if pstats.get("caps_grew"):
                 self.growth_events.append(
@@ -289,6 +362,14 @@ class ClusterServer:
                  "queue_wait_ms": float(np.mean(qw_ms)),
                  "seconds": t_step, "kernel_s": kernel_s,
                  "pack_s": pack_s, "predict": pstats})
+        # topology op *between* steps: bounded by the policy's period,
+        # so reconcile cost amortizes against every subsequent step
+        if self.rebalancer is not None:
+            op_st = self.rebalancer.maybe_rebalance(self.index)
+            if op_st is not None:
+                self.topology_events.append(
+                    {"step": len(self.step_log), **op_st})
+                reg.counter("serve.topology_ops").inc()
         return active
 
     def run(self) -> List[ClusterRequest]:
@@ -335,6 +416,8 @@ class ClusterServer:
             "mean_slot_fill": reg.histogram("serve.slot_fill").mean,
             "query_cap": self.query_cap,
             "growth_events": list(self.growth_events),
+            "topology_events": list(self.topology_events),
+            "replicas": len(self.replicas),
         }
 
 
@@ -357,6 +440,15 @@ def main() -> None:
                     help="serve from an N-slab ShardedGritIndex "
                          "(slab-routed predict) instead of the "
                          "single-host index")
+    ap.add_argument("--rebalance", action="store_true",
+                    help="attach a load-triggered Rebalancer to the "
+                         "sharded backend (split hottest / merge "
+                         "coldest between steps; needs --sharded)")
+    ap.add_argument("--rebalance-period", type=int, default=8,
+                    help="min steps between topology ops")
+    ap.add_argument("--replicas", type=int, default=0, metavar="R",
+                    help="fan predict traffic across R read-only "
+                         "replicas fed by the primary's mutation log")
     ap.add_argument("--mutate", action="store_true",
                     help="mix insert and delete requests into the "
                          "stream (~70/20/10 predict/insert/delete, "
@@ -390,8 +482,13 @@ def main() -> None:
 
     rng = np.random.default_rng(args.seed)
     n_req = 6 if args.smoke else args.num_requests
+    rebalance = None
+    if args.rebalance:
+        from repro.dist.rebalance import RebalancePolicy
+        rebalance = RebalancePolicy(period=args.rebalance_period)
     srv = ClusterServer(index, slots=args.slots, mode=args.mode,
-                        device_state=args.device)
+                        device_state=args.device, rebalance=rebalance,
+                        replicas=args.replicas)
     deletable = list(range(len(pts)))
     for i in range(n_req):
         kind = (rng.choice(["predict", "insert", "delete"],
@@ -432,10 +529,17 @@ def main() -> None:
     if args.sharded:
         routed = sum(st["predict"].get("multi_routed", 0)
                      for st in srv.step_log)
-        per_slab = np.sum([st["predict"].get("owned_per_shard", [])
-                           for st in srv.step_log], axis=0)
-        print(f"  slab routing: {per_slab.tolist()} owned/slab, "
+        imb = srv.metrics.gauge("serve.slab.imbalance").value
+        print(f"  slab routing: {index.num_shards} shards, "
+              f"imbalance (max/mean) {imb:.2f}, "
               f"{routed} cut-band queries consulted both neighbors")
+    if srv.topology_events:
+        ops = [(e["op"], e["shard"]) for e in srv.topology_events]
+        print(f"  topology ops: {ops} -> {index.num_shards} shards, "
+              f"cut history {len(index.cut_history)} entries")
+    if srv.replicas:
+        print(f"  replicas: {len(srv.replicas)} read-only, lag "
+              f"{[r.lag for r in srv.replicas]} ops behind primary")
 
 
 if __name__ == "__main__":

@@ -94,3 +94,59 @@ def test_every_arch_has_lowerable_spec_table():
             for dim, ax in zip(leaf.shape, spec):
                 if ax is not None:
                     assert dim % SINGLE.shape[ax] == 0, (arch, path)
+
+
+# ----------------------------------------------------------------------
+# slab partition (repro.dist.sharding): degenerate-cut regression
+# ----------------------------------------------------------------------
+
+class TestSlabCutsDegenerate:
+    """All points in one dim-0 grid column: there is no interior
+    grid-line boundary to cut at, so ``slab_cuts`` must degrade to
+    "everything in slab 0" (+inf sentinel cuts) instead of fabricating
+    cuts that would misroute points, and ``fit_sharded`` must degrade
+    to effectively one slab with exact labels."""
+
+    def _column(self, n=60, eps=1.0, seed=0):
+        # grid side for d=2 is eps/sqrt(2) ~ 0.707; x0 spread of 0.2
+        # keeps every point in one dim-0 column
+        rng = np.random.default_rng(seed)
+        pts = np.empty((n, 2))
+        pts[:, 0] = 5.0 + 0.2 * rng.random(n)
+        pts[:, 1] = rng.normal(0.0, 3.0, n)
+        return pts
+
+    def test_cuts_are_inf_sentinels(self):
+        from repro.dist.sharding import owner_of_slab, slab_cuts
+        pts = self._column()
+        order, cut_idx, cut_coords = slab_cuts(pts, 1.0, 3)
+        assert len(order) == len(pts)
+        assert sorted(order.tolist()) == list(range(len(pts)))
+        # every cut collapses to the right edge: index n, coord +inf
+        assert (cut_idx == len(pts)).all()
+        assert np.isposinf(cut_coords).all()
+        # and the sentinel cuts route every point to slab 0
+        owner = owner_of_slab(pts[:, 0], cut_coords)
+        assert (owner == 0).all()
+
+    def test_fit_sharded_degrades_to_one_slab(self):
+        from repro.index import fit_index, fit_sharded
+        pts = self._column()
+        sidx = fit_sharded(pts, 1.0, 3, n_shards=3)
+        assert sidx.num_shards == 1
+        ref = fit_index(pts, 1.0, 3)
+        a, b = sidx.labels_arrival(), ref.labels_arrival()
+        # same partition (ids may differ across fit paths)
+        assert (a < 0).tolist() == (b < 0).tolist()
+        for lab in np.unique(b[b >= 0]):
+            members = a[b == lab]
+            assert len(np.unique(members)) == 1
+        q = pts + 0.05
+        pa, pb = sidx.predict(q), ref.predict(q)
+        assert ((pa < 0) == (pb < 0)).all()
+
+    def test_degenerate_shard_is_unsplittable(self):
+        from repro.index import fit_sharded
+        sidx = fit_sharded(self._column(), 1.0, 3, n_shards=2)
+        with pytest.raises(ValueError, match="unsplittable|no interior"):
+            sidx.split_shard(0)
